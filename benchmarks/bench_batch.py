@@ -1,0 +1,57 @@
+"""Paper Fig. 1 / Figs. 2-3: running time + distances vs delete/add rate.
+
+For each rate: BaseL wall time, DeltaGrad wall time, ||w^U - w^*|| (how far
+the correct model moved) and ||w^U - w^I|| (DeltaGrad's error) — the paper's
+headline plot, on the synthetic RCV1-stand-in.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DG_CFG, emit, fitted_problem
+from repro.core.deltagrad import baseline_retrain, deltagrad_retrain
+from repro.utils.tree import tree_norm, tree_sub
+
+RATES = (0.001, 0.005, 0.01)
+
+
+def run(mode: str = "delete"):
+    ds, obj, meta, p0, w_star, hist = fitted_problem()
+    rows = []
+    for rate in RATES:
+        r = max(1, int(rate * meta.n))
+        changed = np.random.default_rng(2).choice(meta.n, r, replace=False)
+        if mode == "add":
+            rows_new = {k: v[changed] for k, v in ds.columns.items()}
+            changed = ds.append(rows_new)
+        w_u, base_stats = baseline_retrain(obj, ds, meta, p0, changed, mode)
+        w_i, dg_stats = deltagrad_retrain(obj, hist, ds, changed, DG_CFG, mode)
+        d_us = float(tree_norm(tree_sub(w_u, w_star)))
+        d_ui = float(tree_norm(tree_sub(w_u, w_i)))
+        rows.append(emit(
+            f"fig1_{mode}_rate{rate}", dg_stats.wall_time_s,
+            {"basel_s": f"{base_stats.wall_time_s:.3f}",
+             "deltagrad_s": f"{dg_stats.wall_time_s:.3f}",
+             "speedup": f"{base_stats.wall_time_s / max(dg_stats.wall_time_s, 1e-9):.2f}",
+             "grad_eval_speedup": f"{dg_stats.theoretical_speedup:.2f}",
+             "dist_basel": f"{d_us:.3e}",
+             "dist_deltagrad": f"{d_ui:.3e}",
+             "ratio": f"{d_ui / max(d_us, 1e-12):.4f}"}))
+        if mode == "add":
+            # reset dataset for the next rate
+            ds.columns = {k: v[:meta.n] for k, v in ds.columns.items()}
+            ds.removed = ds.removed[:meta.n]
+            ds.n = meta.n
+    return rows
+
+
+def main():
+    out = []
+    out += run("delete")
+    out += run("add")
+    return out
+
+
+if __name__ == "__main__":
+    main()

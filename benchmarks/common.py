@@ -1,0 +1,58 @@
+"""Shared benchmark harness: timing + the paper-scale synthetic setup.
+
+All benches print ``name,us_per_call,derived`` CSV rows (benchmarks.run
+collects them).  The 'derived' column carries the bench-specific figure of
+merit (distance ratios, speedups, GB/s, ...) as `key=value|key=value`.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core.deltagrad import DeltaGradConfig, sgd_train_with_cache
+from repro.core.history import HistoryMeta
+from repro.data.synthetic import binary_classification
+from repro.models.simple import logreg_init, logreg_objective
+
+
+def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time in seconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: Dict) -> str:
+    dstr = "|".join(f"{k}={v}" for k, v in derived.items())
+    row = f"{name},{seconds * 1e6:.1f},{dstr}"
+    print(row)
+    return row
+
+
+# Paper-scale-reduced standard problem. RCV1-like aspect ratio (large d, so
+# the per-step gradient cost dominates dispatch overhead — the regime the
+# paper's speedups live in; RCV1 itself is n=20k, d=47k).
+BENCH = dict(n=8000, d=4000, steps=60, batch=4096, lr=0.3, l2=5e-3, seed=0)
+
+
+def fitted_problem(**overrides):
+    p = dict(BENCH)
+    p.update(overrides)
+    ds = binary_classification(n=p["n"], d=p["d"], seed=p["seed"])
+    obj = logreg_objective(l2=p["l2"])
+    meta = HistoryMeta(n=p["n"], batch_size=p["batch"], seed=7,
+                       steps=p["steps"], lr_schedule=((0, p["lr"]),))
+    p0 = logreg_init(p["d"], seed=1)
+    w_star, hist = sgd_train_with_cache(obj, p0, ds, meta)
+    return ds, obj, meta, p0, w_star, hist
+
+
+DG_CFG = DeltaGradConfig(period=5, burn_in=10, history_size=2)

@@ -1,0 +1,110 @@
+"""Render the §Dry-run/§Roofline tables from benchmarks/artifacts/*.json
+and splice them into EXPERIMENTS.md (between the marker comments).
+
+    PYTHONPATH=src python -m benchmarks.report_dryrun [--artifacts DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+ARCH_ORDER = ["minicpm3-4b", "nemotron-4-15b", "internlm2-1.8b", "qwen3-32b",
+              "zamba2-7b", "xlstm-350m", "qwen2-moe-a2.7b",
+              "moonshot-v1-16b-a3b", "whisper-large-v3", "chameleon-34b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_t(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_b(x: float) -> str:
+    for unit, scale in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= scale:
+            return f"{x/scale:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(art_dir: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_fraction(r) -> float:
+    bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+    t_useful = (r["model_flops"] / max(r["flops_global"], 1.0)) * r["t_compute"]
+    return t_useful / max(bound, 1e-30)
+
+
+def table(recs, mesh: str, variant: str = "baseline") -> str:
+    rows = ["| arch | shape | t_compute | t_memory | t_collective | bound | "
+            "useful | roofline frac | peak HBM/dev | compile |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    index = {(r["arch"], r["shape"]): r for r in recs
+             if r.get("mesh") == mesh and r.get("variant") == variant
+             and r.get("status") == "ok"}
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = index.get((arch, shape))
+            if r is None:
+                continue
+            frac = roofline_fraction(r)
+            rows.append(
+                f"| {arch} | {shape} | {fmt_t(r['t_compute'])} | "
+                f"{fmt_t(r['t_memory'])} | {fmt_t(r['t_collective'])} | "
+                f"**{r['dominant']}** | {r['usefulness']:.2f} | "
+                f"{frac:.3f} | {fmt_b(r['peak_memory_per_device'])} | "
+                f"{r.get('compile_s', 0):.0f}s |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="benchmarks/artifacts")
+    ap.add_argument("--experiments", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+    recs = load(args.artifacts)
+    ok = [r for r in recs if r.get("status") == "ok"
+          and r.get("arch") in ARCH_ORDER]
+    n_16 = len([r for r in ok if r["mesh"] == "16x16"
+                and r.get("variant") == "baseline"])
+    n_512 = len([r for r in ok if r["mesh"] == "2x16x16"
+                 and r.get("variant") == "baseline"])
+
+    out = []
+    out.append(f"### Single-pod 16x16 (256 chips) — {n_16} cells compiled\n")
+    out.append(table(recs, "16x16"))
+    out.append(f"\n### Multi-pod 2x16x16 (512 chips) — {n_512} cells "
+               "compiled (pod axis = pure DP; roofline table is single-pod "
+               "per the assignment)\n")
+    out.append(table(recs, "2x16x16"))
+    body = "\n".join(out)
+
+    with open(args.experiments) as f:
+        text = f.read()
+    open_m, close_m = "<!-- DRYRUN_TABLE -->", "<!-- /DRYRUN_TABLE -->"
+    assert open_m in text
+    head, _, rest = text.partition(open_m)
+    tail = rest.split(close_m, 1)[1] if close_m in rest else rest
+    text = head + open_m + "\n\n" + body + "\n\n" + close_m + tail
+    with open(args.experiments, "w") as f:
+        f.write(text)
+    print(body)
+    print(f"\nwrote tables into {args.experiments}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run batch online
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = ("batch", "accuracy", "online", "hyperparams", "large_rate",
+           "kernels")
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(MODULES)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for name in which:
+        assert name in MODULES, f"unknown bench {name}; choose from {MODULES}"
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["main"])
+        t = time.time()
+        try:
+            mod.main()
+        except Exception as e:  # keep the suite going, report at the end
+            failures.append((name, repr(e)))
+            print(f"bench_{name}_FAILED,0,{type(e).__name__}")
+        print(f"# bench_{name} took {time.time()-t:.1f}s", file=sys.stderr)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        for name, err in failures:
+            print(f"# FAILED {name}: {err}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

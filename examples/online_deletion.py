@@ -1,0 +1,50 @@
+"""GDPR-style online deletion stream with ε-approximate-deletion noise.
+
+Requests arrive one at a time; each is served by Algorithm 3 (history
+rewrite) and the published model gets Laplace noise per §5.1.
+
+    PYTHONPATH=src python examples/online_deletion.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.api import Unlearner, UnlearnerConfig
+from repro.core.deltagrad import DeltaGradConfig
+from repro.core.privacy import laplace_publish, num_params
+from repro.data.synthetic import binary_classification
+from repro.models.simple import logreg_accuracy, logreg_init, logreg_objective
+
+
+def main():
+    ds = binary_classification(n=4000, d=500, seed=0)
+    unl = Unlearner(
+        logreg_objective(l2=5e-3), logreg_init(500, seed=1), ds,
+        UnlearnerConfig(steps=80, batch_size=1024, lr=0.3, seed=0,
+                        deltagrad=DeltaGradConfig(period=5, burn_in=10)),
+    )
+    unl.fit()
+    print(f"initial accuracy {logreg_accuracy(unl.params, ds):.4f}")
+
+    requests = np.random.default_rng(9).choice(ds.n, 12, replace=False)
+    print(f"\nserving {len(requests)} deletion requests online...")
+    t0 = time.time()
+    stats = unl.stream_delete(requests.tolist())
+    dt = time.time() - t0
+    print(f"{len(requests)} requests in {dt:.2f}s "
+          f"({dt / len(requests) * 1e3:.0f} ms/request), "
+          f"grad-eval speedup x{stats.theoretical_speedup:.2f}")
+    print(f"accuracy after stream: {logreg_accuracy(unl.params, ds):.4f}")
+
+    # publish with epsilon-approximate-deletion noise (Laplace mechanism)
+    eps, delta0 = 1.0, 1e-4  # delta0: certified ||w_I - w_U|| bound
+    published = laplace_publish(jax.random.PRNGKey(0), unl.params, eps, delta0)
+    print(f"\npublished eps={eps} noisy model "
+          f"(p={num_params(unl.params)}, delta0={delta0}): "
+          f"accuracy {logreg_accuracy(published, ds):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""DeltaGrad on a transformer LM: train a small LM on synthetic documents,
+then remove specific documents from the model with the cached-path
+correction — the paper's Algorithm 1 applied to a non-convex model
+(Algorithm-4 guard on).
+
+This is the LM-scale integration path: the same engine, with the model's
+per-document loss as the Objective and the history sharded like the params.
+
+    PYTHONPATH=src python examples/unlearn_lm.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.deltagrad import (
+    DeltaGradConfig,
+    Objective,
+    baseline_retrain,
+    deltagrad_retrain,
+    sgd_train_with_cache,
+)
+from repro.core.history import HistoryMeta
+from repro.data.dataset import Dataset
+from repro.data.synthetic import token_stream
+from repro.models.registry import build
+from repro.utils.tree import tree_norm, tree_sub
+
+
+def main():
+    cfg = get_config("internlm2-1.8b").reduced(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+        d_head=16)
+    model = build(cfg)
+
+    corpus = token_stream(n_docs=256, seq_len=32, vocab=cfg.vocab, seed=0)
+    ds = Dataset({"tokens": corpus.columns["tokens"]})
+
+    def per_doc_loss(params, batch):
+        # per-example LM loss: vmap-free batch loss per row via masking
+        losses = []
+        toks = batch["tokens"]
+        # loss_fn returns the batch MEAN; per-example = call on single rows
+        # is slow — instead compute full-batch token CE per row:
+        import jax
+        def one(row):
+            return model.loss_fn(params, {"tokens": row[None]},
+                                 remat=False, loss_chunk=32)
+        return jax.vmap(one)(toks)
+
+    objective = Objective(per_example_loss=per_doc_loss, l2=0.0)
+    meta = HistoryMeta(n=ds.n, batch_size=64, seed=5, steps=40,
+                       lr_schedule=((0, 0.02),))
+    params0 = model.init(0)
+
+    print("== training LM with path caching ==")
+    w_star, hist = sgd_train_with_cache(objective, params0, ds, meta)
+    print(f"cached {len(hist)} steps, {hist.nbytes() / 1e6:.1f} MB")
+
+    print("\n== deleting 4 documents with DeltaGrad (Algorithm-4 guard) ==")
+    removed = np.array([7, 42, 99, 120])
+    # the paper's DNN recipe (§4.1): small T0, long burn-in, guard on
+    cfg_dg = DeltaGradConfig(period=2, burn_in=10, history_size=2,
+                             guard=True, curvature_eps=1e-8)
+    w_u, base_stats = baseline_retrain(objective, ds, meta, params0, removed)
+    w_i, stats = deltagrad_retrain(objective, hist, ds, removed, cfg_dg)
+
+    d_ui = float(tree_norm(tree_sub(w_u, w_i)))
+    d_us = float(tree_norm(tree_sub(w_u, w_star)))
+    print(f"||w_exact - w_deltagrad|| = {d_ui:.3e}")
+    print(f"||w_exact - w_original|| = {d_us:.3e}  "
+          f"(DeltaGrad is {d_us / max(d_ui, 1e-12):.1f}x closer)")
+    print(f"guard fallbacks: {stats.guard_fallbacks}, "
+          f"grad-eval speedup x{stats.theoretical_speedup:.2f}")
+
+    # behavioural check: loss on the removed docs should move toward w_u's
+    for name, w in [("original", w_star), ("deltagrad", w_i), ("exact", w_u)]:
+        lr_ = model.loss_fn(w, {"tokens": jnp.asarray(
+            ds.columns["tokens"][removed])}, remat=False, loss_chunk=32)
+        print(f"loss on removed docs [{name}]: {float(lr_):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — DeltaGrad (ICML 2020) as a production-grade JAX/TPU framework.
+
+Core: rapid retraining of SGD/GD-trained models after deletion/addition of a
+small set of samples, via a cached optimization path and an L-BFGS
+quasi-Hessian correction (Wu, Dobriban, Davidson, ICML 2020).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,10 @@
+from repro.configs.base import (  # noqa: F401
+    AttentionKind,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    ShapeConfig,
+    XLSTMConfig,
+)
+from repro.configs.registry import ARCHS, SHAPES, get_config, get_shape  # noqa: F401

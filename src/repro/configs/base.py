@@ -1,0 +1,137 @@
+"""Config dataclasses for the model zoo and the input-shape cells."""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+
+class AttentionKind:
+    GQA = "gqa"  # grouped-query (MHA when kv == heads)
+    MLA = "mla"  # multi-head latent attention
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 60
+    top_k: int = 4
+    d_expert: int = 1408  # per-expert FFN hidden
+    num_shared: int = 4  # shared experts (always-on)
+    d_shared: int = 5632  # shared-expert FFN hidden (total)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    # "onehot": cumsum-of-one-hot position ranking (simple, but the
+    # (T*k, E) tensor is unshardable at scale); "sort": argsort-based
+    # ranking, O(T*k) memory (see models/moe.py + EXPERIMENTS §Perf MoE)
+    dispatch: str = "onehot"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD block."""
+
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    proj_factor_mlstm: float = 2.0
+    proj_factor_slstm: float = 1.3333
+    conv_kernel: int = 4
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | hybrid | ssm | moe | audio | vlm | simple
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+    attention: str = AttentionKind.GQA
+    mlp: str = "swiglu"  # swiglu | relu_sq | gelu | moe | none
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    # layer layout: for homogeneous stacks leave None (n_layers x block).
+    # hybrid stacks give a repeating unit, e.g. ("mamba2",)*5 + ("attn_shared",)
+    layout_unit: Optional[Tuple[str, ...]] = None
+    # enc-dec (whisper): encoder layers use bidirectional attention
+    n_encoder_layers: int = 0
+    # sliding-window size used by attention layers at long context (hybrids)
+    attn_window: int = 0  # 0 = full causal
+    # frontend stub kind for [audio]/[vlm]: "frames" | "tokens"
+    frontend: str = "tokens"
+    notes: str = ""
+    source: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=128,
+            vocab=256,
+            d_head=16,
+            n_encoder_layers=2 if self.n_encoder_layers else 0,
+        )
+        if self.mla:
+            small["mla"] = MLAConfig(
+                q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=8,
+                qk_rope_head_dim=8, v_head_dim=8,
+            )
+        if self.moe:
+            small["moe"] = dataclasses.replace(
+                self.moe, num_experts=8, top_k=2, d_expert=32,
+                num_shared=min(self.moe.num_shared, 2), d_shared=64,
+            )
+        if self.ssm:
+            small["ssm"] = dataclasses.replace(
+                self.ssm, d_state=16, head_dim=16, chunk=16
+            )
+        if self.layout_unit:
+            unit = tuple(self.layout_unit)
+            small["n_layers"] = len(unit)  # one repeating unit
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode | long_decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind in ("decode", "long_decode")

@@ -1,0 +1,26 @@
+"""The paper's own primary benchmark model: L2-regularized logistic
+regression (RCV1 / HIGGS / MNIST / covtype experiments, §4.1).
+
+Not an LM — exercised through repro.core + repro.models.simple; registered
+here so benchmarks and examples can look it up by name.  Hyper-parameters
+follow §4.1: L2 5e-3, lr 0.1 (RCV1 defaults T0=10, j0=10, m=2).
+"""
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import register
+
+CONFIG = register(
+    ModelConfig(
+        name="paper-logreg",
+        family="simple",
+        n_layers=0,
+        d_model=0,
+        n_heads=0,
+        n_kv_heads=0,
+        d_ff=0,
+        vocab=2,
+        mlp="none",
+        source="DeltaGrad ICML 2020 §4.1",
+        notes="hyperparams: l2=5e-3, lr=0.1, T0=10, j0=10, m=2 (RCV1)",
+    )
+)

@@ -1,0 +1,25 @@
+"""The paper's 2-layer ReLU network (MNIST^n experiment, §4.1).
+
+300 hidden units, L2 1e-3, lr 0.2 -> 0.1 after 10 iterations, deterministic
+GD, DeltaGrad run with the Algorithm-4 non-convex guard (T0=2, first quarter
+of iterations as burn-in).
+"""
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import register
+
+CONFIG = register(
+    ModelConfig(
+        name="paper-mlp",
+        family="simple",
+        n_layers=2,
+        d_model=300,
+        n_heads=0,
+        n_kv_heads=0,
+        d_ff=300,
+        vocab=10,
+        mlp="none",
+        source="DeltaGrad ICML 2020 §4.1 (MNIST^n)",
+        notes="hyperparams: l2=1e-3, lr=(0:0.2, 10:0.1), T0=2, j0=T/4, guard on",
+    )
+)

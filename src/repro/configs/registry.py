@@ -1,0 +1,70 @@
+"""Architecture / shape registry — populated by the per-arch config modules."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+ARCHS: Dict[str, ModelConfig] = {}
+SHAPES: Dict[str, ShapeConfig] = {}
+
+_ARCH_MODULES = [
+    "minicpm3_4b",
+    "nemotron_4_15b",
+    "internlm2_1_8b",
+    "qwen3_32b",
+    "zamba2_7b",
+    "xlstm_350m",
+    "qwen2_moe_a2_7b",
+    "moonshot_v1_16b_a3b",
+    "whisper_large_v3",
+    "chameleon_34b",
+    "paper_logreg",
+    "paper_mlp",
+]
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    ARCHS[cfg.name] = cfg
+    return cfg
+
+
+def register_shape(cfg: ShapeConfig) -> ShapeConfig:
+    SHAPES[cfg.name] = cfg
+    return cfg
+
+
+def _load_all() -> None:
+    from repro.configs import shapes  # noqa: F401
+
+    for mod in _ARCH_MODULES:
+        try:
+            importlib.import_module(f"repro.configs.{mod}")
+        except ModuleNotFoundError:
+            pass
+
+
+def get_config(name: str) -> ModelConfig:
+    if not ARCHS:
+        _load_all()
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if not SHAPES:
+        _load_all()
+    return SHAPES[name]
+
+
+def all_archs() -> Dict[str, ModelConfig]:
+    if not ARCHS:
+        _load_all()
+    return dict(ARCHS)
+
+
+def all_shapes() -> Dict[str, ShapeConfig]:
+    if not SHAPES:
+        _load_all()
+    return dict(SHAPES)

@@ -1,0 +1,130 @@
+"""High-level Unlearner API: train once with caching, then serve an arbitrary
+stream of delete/add requests — each answered by DeltaGrad at ~T0x less
+gradient work than retraining from scratch.
+
+    unl = Unlearner(objective, params0, dataset, UnlearnerConfig(...))
+    unl.fit()
+    unl.delete([3, 17, 256])        # batch deletion  (Algorithm 1)
+    unl.add({"x": new_x, "y": new_y})
+    unl.stream_delete([5, 9, ...])  # online requests (Algorithm 3)
+    unl.params                      # current model
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.deltagrad import (
+    DeltaGradConfig,
+    Objective,
+    RetrainStats,
+    baseline_retrain,
+    deltagrad_retrain,
+    sgd_train_with_cache,
+)
+from repro.core.history import HistoryMeta, TrainingHistory
+from repro.core.online import OnlineStats, online_deltagrad
+from repro.data.dataset import Dataset
+
+
+@dataclass
+class UnlearnerConfig:
+    steps: int = 100
+    batch_size: int = 1 << 30  # default: deterministic full-batch GD
+    lr: float = 0.1
+    lr_schedule: Optional[Sequence] = None  # overrides lr if given
+    seed: int = 0
+    deltagrad: DeltaGradConfig = field(default_factory=DeltaGradConfig)
+    history_tier: str = "device"
+    history_codec: str = "f32"
+    spill_dir: Optional[str] = None
+
+
+class Unlearner:
+    def __init__(
+        self,
+        objective: Objective,
+        params0: Any,
+        dataset: Dataset,
+        config: UnlearnerConfig,
+    ):
+        self.objective = objective
+        self.params0 = params0
+        self.dataset = dataset
+        self.config = config
+        self.history: Optional[TrainingHistory] = None
+        self.params: Any = params0
+        self.log: List[Dict] = []
+
+    # -- phase 1: training with path caching ---------------------------------
+
+    def fit(self) -> Any:
+        c = self.config
+        meta = HistoryMeta(
+            n=self.dataset.n,
+            batch_size=min(c.batch_size, self.dataset.n),
+            seed=c.seed,
+            steps=c.steps,
+            lr_schedule=tuple(c.lr_schedule) if c.lr_schedule else ((0, c.lr),),
+            l2=self.objective.l2,
+        )
+        self.params, self.history = sgd_train_with_cache(
+            self.objective,
+            self.params0,
+            self.dataset,
+            meta,
+            tier=c.history_tier,
+            codec=c.history_codec,
+            spill_dir=c.spill_dir,
+        )
+        return self.params
+
+    def _require_fit(self):
+        if self.history is None:
+            raise RuntimeError("call fit() before delete/add")
+
+    # -- phase 2: batch requests (Algorithm 1) --------------------------------
+
+    def delete(self, indices) -> RetrainStats:
+        self._require_fit()
+        idx = np.asarray(list(indices), dtype=np.int64)
+        self.params, stats = deltagrad_retrain(
+            self.objective, self.history, self.dataset, idx,
+            self.config.deltagrad, mode="delete",
+        )
+        self.dataset.delete(idx)
+        self.log.append({"op": "delete", "idx": idx, "stats": stats})
+        return stats
+
+    def add(self, rows: Dict[str, np.ndarray]) -> RetrainStats:
+        self._require_fit()
+        new_idx = self.dataset.append(rows)
+        self.params, stats = deltagrad_retrain(
+            self.objective, self.history, self.dataset, new_idx,
+            self.config.deltagrad, mode="add",
+        )
+        self.log.append({"op": "add", "idx": new_idx, "stats": stats})
+        return stats
+
+    # -- phase 2': online request streams (Algorithm 3) -----------------------
+
+    def stream_delete(self, requests: Sequence[int]) -> OnlineStats:
+        self._require_fit()
+        self.params, stats = online_deltagrad(
+            self.objective, self.history, self.dataset, list(requests),
+            self.config.deltagrad, mode="delete",
+        )
+        self.log.append({"op": "stream_delete", "idx": list(requests), "stats": stats})
+        return stats
+
+    # -- reference: exact retraining (BaseL) ----------------------------------
+
+    def baseline(self, indices, mode: str = "delete"):
+        self._require_fit()
+        idx = np.asarray(list(indices), dtype=np.int64)
+        return baseline_retrain(
+            self.objective, self.dataset, self.history.meta, self.params0, idx, mode
+        )

@@ -1,0 +1,245 @@
+"""Optimization-path cache — the information DeltaGrad records during training.
+
+DeltaGrad needs, for every original training step ``t``:
+  * the parameters ``w_t``,
+  * the (mini-)batch mean gradient ``g_t = (1/|B_t|) sum_{i in B_t} grad F_i(w_t)``,
+  * enough metadata to *replay the exact minibatch schedule* (seed, batch
+    size, dataset size, learning-rate schedule).
+
+Storage tiers (per-entry, selectable):
+  * ``device`` — entries stay as JAX arrays (sharded exactly like the live
+    parameters; right choice on a TPU mesh where each host holds 1/N of
+    every entry),
+  * ``host``   — entries are pulled to host numpy (paper's choice; frees HBM),
+  * ``disk``   — chunked ``.npz`` spill with an in-memory LRU window (long
+    training runs; participates in checkpoint/restart).
+
+Optional compression codecs trade cache size for a tiny, quantifiable
+perturbation of the cached path (bf16: 2x; int8 + per-leaf scale: ~4x) —
+DeltaGrad's correction is first-order in the cache error, and the
+``bench_hyperparams`` benchmark measures the effect.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Codecs
+# --------------------------------------------------------------------------
+
+
+class Codec:
+    name = "f32"
+
+    def encode(self, tree):
+        return jax.tree.map(np.asarray, jax.device_get(tree))
+
+    def decode(self, stored):
+        return jax.tree.map(jnp.asarray, stored)
+
+
+class F32Codec(Codec):
+    name = "f32"
+
+
+class BF16Codec(Codec):
+    name = "bf16"
+
+    def encode(self, tree):
+        tree = jax.device_get(tree)
+        return jax.tree.map(lambda x: np.asarray(x, dtype=jnp.bfloat16), tree)
+
+    def decode(self, stored):
+        return jax.tree.map(lambda x: jnp.asarray(x, dtype=jnp.float32), stored)
+
+
+class Int8Codec(Codec):
+    """Symmetric per-leaf absmax int8 quantization."""
+
+    name = "int8"
+
+    def encode(self, tree):
+        tree = jax.device_get(tree)
+
+        def enc(x):
+            x = np.asarray(x, dtype=np.float32)
+            scale = np.max(np.abs(x)) / 127.0 if x.size else 1.0
+            scale = scale if scale > 0 else 1.0
+            q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+            return {"q": q, "scale": np.float32(scale)}
+
+        return jax.tree.map(enc, tree)
+
+    def decode(self, stored):
+        def dec(d):
+            return jnp.asarray(d["q"], dtype=jnp.float32) * d["scale"]
+
+        return jax.tree.map(dec, stored, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+CODECS = {"f32": F32Codec, "bf16": BF16Codec, "int8": Int8Codec}
+
+
+# --------------------------------------------------------------------------
+# History
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class HistoryMeta:
+    """Everything needed to replay the original training run."""
+
+    n: int  # dataset size during original training
+    batch_size: int  # B (== n for deterministic GD)
+    seed: int  # sampler seed
+    steps: int  # T
+    lr_schedule: Tuple[Tuple[int, float], ...]  # piecewise-constant (from_step, lr)
+    l2: float = 0.0
+    # beyond-paper: heavy-ball momentum (paper covers plain SGD; with
+    # momentum the retraining path maintains its own velocity from the
+    # corrected gradients — see core/deltagrad.py and tests)
+    momentum: float = 0.0
+    extra: Dict[str, Any] = field(default_factory=dict)
+
+    def lr_at(self, t: int) -> float:
+        lr = self.lr_schedule[0][1]
+        for start, value in self.lr_schedule:
+            if t >= start:
+                lr = value
+        return lr
+
+
+class TrainingHistory:
+    """Per-step (w_t, g_t) cache with tiered storage."""
+
+    def __init__(
+        self,
+        meta: HistoryMeta,
+        tier: str = "device",
+        codec: str = "f32",
+        spill_dir: Optional[str] = None,
+        lru_window: int = 64,
+    ):
+        assert tier in ("device", "host", "disk")
+        self.meta = meta
+        self.tier = tier
+        self.codec: Codec = CODECS[codec]()
+        self.spill_dir = spill_dir
+        self.lru_window = lru_window
+        self._params: List[Any] = []
+        self._grads: List[Any] = []
+        self._disk_paths: List[Optional[str]] = []
+        self.final_params = None
+        if tier == "disk":
+            assert spill_dir is not None, "disk tier requires spill_dir"
+            os.makedirs(spill_dir, exist_ok=True)
+
+    def __len__(self) -> int:
+        return len(self._params)
+
+    # -- write path --------------------------------------------------------
+
+    def append(self, params, grad) -> None:
+        t = len(self._params)
+        if self.tier == "device":
+            self._params.append(params)
+            self._grads.append(grad)
+        else:
+            enc_p = self.codec.encode(params)
+            enc_g = self.codec.encode(grad)
+            if self.tier == "host":
+                self._params.append(enc_p)
+                self._grads.append(enc_g)
+            else:  # disk
+                path = os.path.join(self.spill_dir, f"step_{t:07d}.npz")
+                flat_p, tdef = jax.tree.flatten(enc_p)
+                flat_g, _ = jax.tree.flatten(enc_g)
+                np.savez(path, n_p=len(flat_p), *flat_p, *flat_g)
+                self._params.append(None)
+                self._grads.append(None)
+                self._treedef = tdef
+                self._disk_paths.append(path)
+
+    def finalize(self, final_params) -> None:
+        self.final_params = final_params
+
+    # -- read path ----------------------------------------------------------
+
+    def _load_disk(self, t: int):
+        with np.load(self._disk_paths[t]) as data:
+            n_p = int(data["n_p"])
+            arrays = [data[f"arr_{i}"] for i in range(2 * n_p)]
+        p = jax.tree.unflatten(self._treedef, arrays[:n_p])
+        g = jax.tree.unflatten(self._treedef, arrays[n_p:])
+        return p, g
+
+    def entry(self, t: int):
+        """(w_t, g_t) decoded back to device arrays."""
+        if self.tier == "device":
+            return self._params[t], self._grads[t]
+        if self.tier == "host":
+            return self.codec.decode(self._params[t]), self.codec.decode(self._grads[t])
+        p, g = self._load_disk(t)
+        return self.codec.decode(p), self.codec.decode(g)
+
+    def params_at(self, t: int):
+        return self.entry(t)[0]
+
+    def grad_at(self, t: int):
+        return self.entry(t)[1]
+
+    # -- in-place rewrite (online deletion, Algorithm 3) --------------------
+
+    def overwrite(self, t: int, params, grad) -> None:
+        if self.tier == "device":
+            self._params[t] = params
+            self._grads[t] = grad
+        elif self.tier == "host":
+            self._params[t] = self.codec.encode(params)
+            self._grads[t] = self.codec.encode(grad)
+        else:
+            enc_p = self.codec.encode(params)
+            enc_g = self.codec.encode(grad)
+            flat_p, _ = jax.tree.flatten(enc_p)
+            flat_g, _ = jax.tree.flatten(enc_g)
+            np.savez(self._disk_paths[t], n_p=len(flat_p), *flat_p, *flat_g)
+
+    # -- checkpoint integration ---------------------------------------------
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "meta": self.meta,
+            "tier": self.tier,
+            "codec": self.codec.name,
+            "params": [jax.device_get(p) for p in self._params],
+            "grads": [jax.device_get(g) for g in self._grads],
+            "final_params": jax.device_get(self.final_params),
+            "disk_paths": list(self._disk_paths),
+        }
+
+    @classmethod
+    def from_state_dict(cls, state: Dict[str, Any], spill_dir: Optional[str] = None):
+        h = cls(state["meta"], tier=state["tier"], codec=state["codec"],
+                spill_dir=spill_dir or "/tmp/repro_history")
+        h._params = state["params"]
+        h._grads = state["grads"]
+        h._disk_paths = state["disk_paths"]
+        h.final_params = state["final_params"]
+        return h
+
+    def nbytes(self) -> int:
+        total = 0
+        for tree in self._params + self._grads:
+            if tree is None:
+                continue
+            for leaf in jax.tree.leaves(tree):
+                total += np.asarray(leaf).nbytes
+        return total

@@ -1,0 +1,286 @@
+"""Limited-memory BFGS quasi-Hessian, compact representation.
+
+DeltaGrad (Algorithm 1, line "L-BFGS") needs the product ``B_t v`` of a
+quasi-Hessian with ``v = w^I_t - w_t``, where ``B_t`` is the BFGS matrix
+built from the last ``m`` parameter/gradient difference pairs
+
+    dw_k = w^I_{j_k} - w_{j_k},     dg_k = grad(w^I_{j_k}) - grad(w_{j_k}).
+
+We use the compact representation of Byrd, Nocedal & Schnabel (1994),
+Theorem 2.3 (the paper's Algorithm 2): with ``S = [dw_0 .. dw_{m-1}]``,
+``Y = [dg_0 .. dg_{m-1}]`` and ``B_0 = sigma I``,
+
+    B v = sigma v - [sigma S, Y] M^{-1} [sigma S^T v; Y^T v],
+    M   = [[sigma S^T S, L], [L^T, -D]],
+
+where ``D = diag(S^T Y)`` and ``L`` is the strictly-lower part of ``S^T Y``.
+Only m x m Gram matrices and two length-m dot vectors touch the full
+parameter dimension, so the operator is O(mp) + O(m^3).
+
+Two equivalent backends are provided:
+  * stacked   — ``dW, dG: (m, p)`` matrices (kernel-friendly; the Pallas
+                ``lbfgs_multidot`` / ``lbfgs_rank_update`` kernels accelerate
+                exactly these contractions),
+  * pytree    — lists of parameter pytrees (sharding-transparent; used by the
+                distributed engine).
+
+A dense recursive oracle (paper eq. (S11)/(S12)) is included for testing.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_axpy, tree_lincomb, tree_scale, tree_vdot
+
+
+class CompactCoeffs(NamedTuple):
+    """Coefficients of the rank-2m correction: Bv = sigma*v - dW^T a - dG^T b."""
+
+    sigma: jax.Array  # scalar
+    a: jax.Array  # (m,) coefficients on the dW rows (already include sigma)
+    b: jax.Array  # (m,) coefficients on the dG rows
+
+
+def compact_coeffs(
+    sw: jax.Array, sy: jax.Array, wv: jax.Array, gv: jax.Array
+) -> CompactCoeffs:
+    """Solve the 2m x 2m compact system.
+
+    Args:
+      sw: (m, m) Gram matrix  S^T S  (sw[i, j] = <dw_i, dw_j>).
+      sy: (m, m) cross matrix S^T Y  (sy[i, j] = <dw_i, dg_j>).
+      wv: (m,)   S^T v.
+      gv: (m,)   Y^T v.
+    """
+    m = sw.shape[0]
+    diag_sy = jnp.diag(sy)
+    # B_0 = sigma I with sigma from the most recent pair (paper Alg. 2 line 21).
+    sigma = diag_sy[-1] / jnp.where(sw[-1, -1] == 0, 1.0, sw[-1, -1])
+    ell = jnp.tril(sy, k=-1)  # L_ij = <dw_i, dg_j>, i > j
+    dmat = jnp.diag(diag_sy)
+    top = jnp.concatenate([sigma * sw, ell], axis=1)
+    bot = jnp.concatenate([ell.T, -dmat], axis=1)
+    mid = jnp.concatenate([top, bot], axis=0)  # (2m, 2m)
+    rhs = jnp.concatenate([sigma * wv, gv])  # (2m,)
+    q = jnp.linalg.solve(mid, rhs)
+    return CompactCoeffs(sigma=sigma, a=sigma * q[:m], b=q[m:])
+
+
+# --------------------------------------------------------------------------
+# Stacked (m, p) backend
+# --------------------------------------------------------------------------
+
+
+def gram_terms_stacked(dW: jax.Array, dG: jax.Array, v: jax.Array):
+    """All reduction terms in one logical pass over the (m, p) history.
+
+    Returns (sw, sy, wv, gv). This is the contraction the Pallas
+    ``lbfgs_multidot`` kernel fuses into a single HBM read of dW, dG, v.
+    """
+    f32 = jnp.float32
+    dWf, dGf, vf = dW.astype(f32), dG.astype(f32), v.astype(f32)
+    sw = dWf @ dWf.T
+    sy = dWf @ dGf.T
+    wv = dWf @ vf
+    gv = dGf @ vf
+    return sw, sy, wv, gv
+
+
+def lbfgs_hvp_stacked(dW: jax.Array, dG: jax.Array, v: jax.Array) -> jax.Array:
+    """B v with history stacked as (m, p) rows (oldest first)."""
+    sw, sy, wv, gv = gram_terms_stacked(dW, dG, v)
+    c = compact_coeffs(sw, sy, wv, gv)
+    return (c.sigma * v - c.a @ dW - c.b @ dG).astype(v.dtype)
+
+
+# --------------------------------------------------------------------------
+# Pytree backend (sharding-transparent)
+# --------------------------------------------------------------------------
+
+
+def gram_terms_pytree(dws: Sequence, dgs: Sequence, v):
+    m = len(dws)
+    sw = jnp.stack(
+        [jnp.stack([tree_vdot(dws[i], dws[j]) for j in range(m)]) for i in range(m)]
+    )
+    sy = jnp.stack(
+        [jnp.stack([tree_vdot(dws[i], dgs[j]) for j in range(m)]) for i in range(m)]
+    )
+    wv = jnp.stack([tree_vdot(dws[i], v) for i in range(m)])
+    gv = jnp.stack([tree_vdot(dgs[i], v) for i in range(m)])
+    return sw, sy, wv, gv
+
+
+def lbfgs_hvp_pytree(dws: Sequence, dgs: Sequence, v):
+    """B v where history entries and v are parameter pytrees."""
+    sw, sy, wv, gv = gram_terms_pytree(dws, dgs, v)
+    c = compact_coeffs(sw, sy, wv, gv)
+    out = tree_scale(c.sigma, v)
+    out = tree_lincomb(jnp.concatenate([jnp.ones((1,)), -c.a, -c.b]),
+                       [out] + list(dws) + list(dgs))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Stacked-pytree backend: every leaf carries a leading history axis m.
+# This is the jit-fused path the DeltaGrad engine uses (one XLA program for
+# Gram terms + solve + rank-2m update).
+# --------------------------------------------------------------------------
+
+
+def _pair_gram(a, b):
+    """(m, ...) x (m, ...) -> (m, m), contracting ALL trailing axes.
+
+    Implemented with a multi-axis dot_general (NOT reshape(m, -1) @ ...):
+    a reshape collapses sharded parameter dims into one unshardable axis and
+    forces GSPMD to all-gather the whole history buffer — measured 33 GB of
+    gathers per DeltaGrad step at 1.8B params (EXPERIMENTS.md §Perf,
+    deltagrad-step iteration 1).  dot_general keeps each shard's partial
+    product local and psums only the (m, m) scalars.
+    """
+    axes = tuple(range(1, a.ndim))
+    return jax.lax.dot_general(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        ((axes, axes), ((), ())), preferred_element_type=jnp.float32)
+
+
+def _vec_dot(a, x):
+    """(m, ...) x (...) -> (m,), contracting all of x's axes shard-locally."""
+    axes_a = tuple(range(1, a.ndim))
+    axes_x = tuple(range(x.ndim))
+    return jax.lax.dot_general(
+        a.astype(jnp.float32), x.astype(jnp.float32),
+        ((axes_a, axes_x), ((), ())), preferred_element_type=jnp.float32)
+
+
+def gram_terms_stacked_pytree(dWs, dGs, v):
+    """dWs/dGs: pytrees whose leaves are stacked (m, ...); v: plain pytree."""
+    wl = jax.tree.leaves(dWs)
+    gl = jax.tree.leaves(dGs)
+    vl = jax.tree.leaves(v)
+    sw = sum(_pair_gram(w, w) for w in wl)
+    sy = sum(_pair_gram(w, g) for w, g in zip(wl, gl))
+    wv = sum(_vec_dot(w, x) for w, x in zip(wl, vl))
+    gv = sum(_vec_dot(g, x) for g, x in zip(gl, vl))
+    return sw, sy, wv, gv
+
+
+def lbfgs_hvp_stacked_pytree(dWs, dGs, v):
+    """B v with history stacked along a leading axis of every leaf."""
+    sw, sy, wv, gv = gram_terms_stacked_pytree(dWs, dGs, v)
+    c = compact_coeffs(sw, sy, wv, gv)
+
+    def upd(x, w, g):
+        shape = (-1,) + (1,) * (x.ndim)
+        a = c.a.reshape(shape)
+        b = c.b.reshape(shape)
+        return (c.sigma * x - jnp.sum(a * w, axis=0) - jnp.sum(b * g, axis=0)).astype(
+            x.dtype
+        )
+
+    return jax.tree.map(upd, v, dWs, dGs)
+
+
+# --------------------------------------------------------------------------
+# Dense recursive oracle (paper eq. (S11)-(S12)) — tests only
+# --------------------------------------------------------------------------
+
+
+def bfgs_matrix_recursive(
+    dW: jax.Array, dG: jax.Array, sigma: Optional[jax.Array] = None
+) -> jax.Array:
+    """Explicitly build B by the recursive BFGS update (S11) from B0 = sigma I.
+
+    O(m p^2) — for unit tests with small p only.
+    """
+    m, p = dW.shape
+    if sigma is None:
+        sigma = (dG[-1] @ dW[-1]) / (dW[-1] @ dW[-1])
+    B = sigma * jnp.eye(p, dtype=jnp.float32)
+    for k in range(m):
+        s = dW[k].astype(jnp.float32)
+        y = dG[k].astype(jnp.float32)
+        Bs = B @ s
+        B = B - jnp.outer(Bs, Bs) / (s @ Bs) + jnp.outer(y, y) / (y @ s)
+    return B
+
+
+# --------------------------------------------------------------------------
+# History ring buffer with curvature admission (Algorithm 4 guard hook)
+# --------------------------------------------------------------------------
+
+
+class LbfgsBuffer:
+    """Fixed-capacity ring buffer of (dw, dg) pytree pairs.
+
+    Admission implements the convexity check DeltaGrad uses for non-convex
+    models (paper Appendix C.3): a pair enters the buffer only if
+    ``<dg, dw> >= curvature_eps * <dw, dw>`` — for strongly convex objectives
+    this always holds with ``curvature_eps <= mu``.
+    """
+
+    def __init__(self, capacity: int, curvature_eps: float = 0.0):
+        assert capacity >= 1
+        self.capacity = capacity
+        self.curvature_eps = float(curvature_eps)
+        self._dws: List = []
+        self._dgs: List = []
+        self._stacked_cache = None  # invalidated on add()
+        self.rejected = 0
+        self.admitted = 0
+
+    def __len__(self) -> int:
+        return len(self._dws)
+
+    @property
+    def dws(self) -> List:
+        return list(self._dws)
+
+    @property
+    def dgs(self) -> List:
+        return list(self._dgs)
+
+    def add(self, dw, dg) -> bool:
+        """Returns True if the pair was admitted."""
+        curv = float(tree_vdot(dg, dw))
+        ss = float(tree_vdot(dw, dw))
+        if ss <= 0.0 or curv < self.curvature_eps * ss:
+            self.rejected += 1
+            return False
+        self._dws.append(dw)
+        self._dgs.append(dg)
+        if len(self._dws) > self.capacity:
+            self._dws.pop(0)
+            self._dgs.pop(0)
+        self._stacked_cache = None
+        self.admitted += 1
+        return True
+
+    def hvp(self, v):
+        """B v. Requires at least one admitted pair."""
+        if not self._dws:
+            raise ValueError("LbfgsBuffer.hvp called with no admitted pairs")
+        return lbfgs_hvp_pytree(self._dws, self._dgs, v)
+
+    def stacked(self):
+        """(dWs, dGs) with every leaf stacked along a new leading axis.
+
+        Cached between add() calls — approx steps between two explicit steps
+        reuse the same stacked buffers without re-dispatching the stacks.
+        """
+        if not self._dws:
+            raise ValueError("LbfgsBuffer.stacked called with no admitted pairs")
+        if self._stacked_cache is None:
+            dWs = jax.tree.map(lambda *xs: jnp.stack(xs), *self._dws)
+            dGs = jax.tree.map(lambda *xs: jnp.stack(xs), *self._dgs)
+            self._stacked_cache = (dWs, dGs)
+        return self._stacked_cache
+
+    def clear(self) -> None:
+        self._dws.clear()
+        self._dgs.clear()
+        self._stacked_cache = None

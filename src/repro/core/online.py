@@ -1,0 +1,205 @@
+"""DeltaGrad online deletion/addition — paper Algorithm 3 (Appendix C.2).
+
+Requests arrive one at a time (GDPR-style streams).  After each request the
+optimization-path cache is REWRITTEN in place so the next request corrects
+the *previous DeltaGrad path* rather than the original training run:
+
+  explicit steps:  w_t <- w^I_t,  g_t <- exact mean gradient of the current
+                   (post-deletion) objective at w^I_t;
+  approx steps:    w_t <- w^I_t,  g_t <- g^a_t, the approximated gradient
+                   (paper eq. (S62)) — this is what keeps per-request cost
+                   independent of how many requests came before.
+
+The minibatch schedule is always replayed against the ORIGINAL dataset
+numbering; cumulative deletions shrink each batch's effective size
+``B_t(k) = B - |batch_t ∩ R_k|`` (paper's n-k bookkeeping).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.deltagrad import (DeltaGradConfig, Objective, RetrainStats,
+                                  _next_pow2, _sgd_apply)
+from repro.core.history import TrainingHistory
+from repro.core.lbfgs import LbfgsBuffer, lbfgs_hvp_stacked_pytree
+from repro.data.dataset import Dataset
+from repro.data.sampler import batch_indices
+from repro.utils.tree import tree_all_finite, tree_norm, tree_sub
+
+
+@partial(jax.jit, static_argnames=("sign",))
+def _online_approx_update(params, w_t, g_t, dWs, dGs, g_one, lr, b_eff, has,
+                          clip, sign: int):
+    """One fused approx step; also returns g^a (eq. S62) for the rewrite."""
+    v = tree_sub(params, w_t)
+    bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v)
+    denom = jnp.maximum(b_eff - sign * has, 1.0)
+
+    def g_approx(gt, b, gc):
+        # gradient of the post-request objective at params
+        return (b_eff * (gt + b) - sign * has * gc) / denom
+
+    g_new = jax.tree.map(g_approx, g_t, bv, g_one)
+    new_params = jax.tree.map(lambda p, g: p - lr * g, params, g_new)
+    ok = jnp.logical_and(
+        tree_all_finite(new_params),
+        tree_norm(bv) <= clip * tree_norm(v),
+    )
+    return new_params, g_new, ok
+
+
+@dataclass
+class OnlineStats:
+    per_request: List[RetrainStats] = field(default_factory=list)
+    wall_time_s: float = 0.0
+
+    @property
+    def grad_examples(self) -> int:
+        return sum(s.grad_examples for s in self.per_request)
+
+    @property
+    def grad_examples_baseline(self) -> int:
+        return sum(s.grad_examples_baseline for s in self.per_request)
+
+    @property
+    def theoretical_speedup(self) -> float:
+        return self.grad_examples_baseline / max(self.grad_examples, 1)
+
+
+def online_deltagrad(
+    objective: Objective,
+    history: TrainingHistory,
+    ds: Dataset,
+    requests: Sequence[int],
+    cfg: DeltaGradConfig,
+    mode: str = "delete",
+) -> Tuple[Any, OnlineStats]:
+    """Process deletion (or addition) requests sequentially, rewriting history.
+
+    For mode == "add", `requests` are indices of rows already appended to `ds`
+    (ds.n > history.meta.n); each request inserts one of them into the replayed
+    batches with the deterministic `addition_mask` of `data.sampler` — here,
+    for single-sample requests, the sample simply joins every batch with
+    probability B/n via the same hash (handled by treating it as a deleted
+    sample of the *future* run and running the add-update).
+    """
+    assert mode in ("delete", "add")
+    meta = history.meta
+    grad_fn = objective.make_grad_fn()
+    B = min(meta.batch_size, meta.n)
+    r_pad = 1  # single-sample requests
+    add_pad = _next_pow2(len(list(requests))) if mode == "add" else 0
+    batch_pad = B + add_pad
+
+    clip = jnp.float32(cfg.guard_norm_clip)
+
+    removed_so_far: List[int] = []
+    added_so_far: List[int] = []
+    params = history.final_params
+    stats = OnlineStats()
+    t_start = time.perf_counter()
+
+    for req in requests:
+        req = int(req)
+        buffer = LbfgsBuffer(cfg.history_size, curvature_eps=cfg.curvature_eps)
+        params = history.params_at(0)
+        rstat = RetrainStats()
+
+        for t in range(meta.steps):
+            idx = batch_indices(meta.seed, t, meta.n, meta.batch_size)
+            # rows already gone from previous requests are masked out of the
+            # replayed batch; the cached g_t already excludes them.
+            live = idx[~np.isin(idx, removed_so_far)] if removed_so_far else idx
+            if mode == "delete":
+                in_batch = req in set(live.tolist())
+                base = live  # batch the cached (pre-request) path used
+            else:
+                from repro.data.sampler import addition_mask
+
+                n_new = len(added_so_far) + 1
+                joins = addition_mask(meta.seed, t, meta.n, meta.batch_size, n_new)
+                in_batch = bool(joins[-1])
+                prev_added = np.asarray(added_so_far, dtype=np.int64)[joins[:-1]]
+                base = np.concatenate([live, prev_added])
+            eff_prev = len(base)
+            has = 1.0 if in_batch else 0.0
+            lr = jnp.float32(meta.lr_at(t))
+            rstat.grad_examples_baseline += eff_prev - (1 if (mode == "delete" and in_batch) else 0)
+
+            if mode == "delete" and in_batch and eff_prev <= 1:
+                rstat.skipped_steps += 1
+                continue
+
+            explicit = cfg.is_explicit(t) or len(buffer) == 0
+            w_t, g_t = history.entry(t)
+
+            if not explicit:
+                if in_batch:
+                    cb, cw = ds.padded_batch(np.array([req]), r_pad)
+                    g_one = grad_fn(params, cb, cw)
+                    rstat.grad_examples += 1
+                else:
+                    from repro.core.deltagrad import _tree_zeros
+                    g_one = _tree_zeros(params)
+                dWs, dGs = buffer.stacked()
+                sign = 1 if mode == "delete" else -1
+                new_params, g_new, ok = _online_approx_update(
+                    params, w_t, g_t, dWs, dGs, g_one, lr,
+                    jnp.float32(eff_prev), jnp.float32(has), clip, sign,
+                )
+                if cfg.guard and not bool(ok):
+                    rstat.guard_fallbacks += 1
+                    explicit = True
+                else:
+                    history.overwrite(t, params, g_new)
+                    params = new_params
+                    rstat.approx_steps += 1
+
+            if explicit:
+                if mode == "delete":
+                    cur = base[base != req]
+                else:
+                    cur = np.concatenate([base, np.array([req], dtype=np.int64)]) \
+                        if in_batch else base
+                kb, kw = ds.padded_batch(cur, batch_pad)
+                g_cur = grad_fn(params, kb, kw)  # mean grad, post-request batch
+                rstat.grad_examples += len(cur)
+                # pair: gradient over the PRE-request batch at params
+                if in_batch:
+                    cb, cw = ds.padded_batch(np.array([req]), r_pad)
+                    g_one = grad_fn(params, cb, cw)
+                    if mode == "delete":
+                        g_prev = jax.tree.map(
+                            lambda a, b: (len(cur) * a + b) / eff_prev, g_cur, g_one
+                        )
+                    else:
+                        g_prev = jax.tree.map(
+                            lambda a, b: ((len(cur)) * a - b) / eff_prev, g_cur, g_one
+                        )
+                else:
+                    g_prev = g_cur
+                dw = tree_sub(params, w_t)
+                dg = tree_sub(g_prev, g_t)
+                buffer.add(dw, dg)
+                history.overwrite(t, params, g_cur)
+                params = _sgd_apply(params, g_cur, lr)
+                rstat.explicit_steps += 1
+
+        if mode == "delete":
+            removed_so_far.append(req)
+            ds.removed[req] = True
+        else:
+            added_so_far.append(req)
+        history.finalize(params)
+        stats.per_request.append(rstat)
+
+    stats.wall_time_s = time.perf_counter() - t_start
+    return params, stats

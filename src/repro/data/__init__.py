@@ -1,0 +1,2 @@
+from repro.data.dataset import Dataset  # noqa: F401
+from repro.data.sampler import batch_indices, addition_mask  # noqa: F401

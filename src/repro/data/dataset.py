@@ -1,0 +1,99 @@
+"""In-memory dataset with deletion/addition bookkeeping.
+
+A Dataset is a dict of equal-leading-dimension arrays ("columns", e.g.
+``{"x": (n, d), "y": (n,)}``).  Deletion never re-indexes: removed rows keep
+their original index and are masked out at batch-assembly time, which is what
+makes DeltaGrad's schedule replay well-defined.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Sequence
+
+import numpy as np
+
+
+class Dataset:
+    def __init__(self, columns: Dict[str, np.ndarray]):
+        assert columns, "empty dataset"
+        sizes = {k: len(v) for k, v in columns.items()}
+        assert len(set(sizes.values())) == 1, f"ragged columns: {sizes}"
+        self.columns = {k: np.asarray(v) for k, v in columns.items()}
+        self.n = next(iter(sizes.values()))
+        self.removed = np.zeros(self.n, dtype=bool)
+
+    # -- core access ---------------------------------------------------------
+
+    def take(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
+        return {k: v[idx] for k, v in self.columns.items()}
+
+    def __len__(self) -> int:
+        return self.n
+
+    @property
+    def n_remaining(self) -> int:
+        return int(self.n - self.removed.sum())
+
+    @property
+    def remaining_indices(self) -> np.ndarray:
+        return np.nonzero(~self.removed)[0]
+
+    @property
+    def removed_indices(self) -> np.ndarray:
+        return np.nonzero(self.removed)[0]
+
+    # -- mutation ------------------------------------------------------------
+
+    def delete(self, idx: Iterable[int]) -> np.ndarray:
+        idx = np.asarray(list(idx), dtype=np.int64)
+        already = self.removed[idx]
+        if already.any():
+            raise ValueError(f"rows already deleted: {idx[already]}")
+        self.removed[idx] = True
+        return idx
+
+    def undelete(self, idx: Iterable[int]) -> np.ndarray:
+        idx = np.asarray(list(idx), dtype=np.int64)
+        self.removed[idx] = False
+        return idx
+
+    def append(self, rows: Dict[str, np.ndarray]) -> np.ndarray:
+        """Physically append new rows; returns their indices."""
+        m = len(next(iter(rows.values())))
+        for k in self.columns:
+            self.columns[k] = np.concatenate([self.columns[k], np.asarray(rows[k])])
+        self.removed = np.concatenate([self.removed, np.zeros(m, dtype=bool)])
+        new_idx = np.arange(self.n, self.n + m, dtype=np.int64)
+        self.n += m
+        return new_idx
+
+    # -- batch assembly for the DeltaGrad engine ------------------------------
+
+    def padded_batch(self, idx: np.ndarray, pad_to: int):
+        """(columns, weights) with rows gathered by `idx`, padded to `pad_to`.
+
+        Padding repeats row 0 with weight 0 so shapes are static under jit.
+        Weights are 1.0 for live (non-removed... caller decides) rows.
+        """
+        k = len(idx)
+        assert k <= pad_to, (k, pad_to)
+        pad = np.zeros(pad_to - k, dtype=np.int64)
+        full_idx = np.concatenate([idx, pad])
+        weights = np.concatenate(
+            [np.ones(k, dtype=np.float32), np.zeros(pad_to - k, dtype=np.float32)]
+        )
+        return self.take(full_idx), weights
+
+    def split_batch(self, idx: np.ndarray, removed_set: Optional[np.ndarray] = None):
+        """Split a replayed batch into (kept_idx, removed_idx) against the
+        deletion mask (or an explicit removed index set)."""
+        if removed_set is None:
+            mask = self.removed[idx]
+        else:
+            mask = np.isin(idx, removed_set)
+        return idx[~mask], idx[mask]
+
+
+def subset(ds: Dataset, idx: Sequence[int]) -> Dataset:
+    out = Dataset({k: v[np.asarray(idx)] for k, v in ds.columns.items()})
+    return out

@@ -1,0 +1,39 @@
+"""Deterministic, replayable minibatch schedule.
+
+DeltaGrad's SGD analysis (paper §A.1.2) *assumes the retraining run sees the
+same minibatch sequence as the original run*: "We assume that the minibatch
+randomness of w^{U,S} and w^{I,S} is the same as w^S."  We therefore make the
+schedule a pure function of ``(seed, step)`` — independent of process state,
+host count, or restarts — so replay holds across checkpoint resumes and mesh
+changes.  Indices always refer to the ORIGINAL dataset numbering; deletion is
+applied by masking at use time, never by re-indexing.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def batch_indices(seed: int, step: int, n: int, batch_size: int) -> np.ndarray:
+    """Minibatch for `step`: `batch_size` draws without replacement from [0, n).
+
+    Pure function of (seed, step, n, batch_size). When batch_size >= n this
+    is deterministic full-batch GD (identity order).
+    """
+    if batch_size >= n:
+        return np.arange(n, dtype=np.int64)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    return rng.choice(n, size=batch_size, replace=False).astype(np.int64)
+
+
+def addition_mask(seed: int, step: int, n: int, batch_size: int, n_added: int) -> np.ndarray:
+    """Which of the `n_added` new samples join the minibatch at `step`.
+
+    Each added sample independently joins with probability batch_size/n —
+    matching the inclusion probability of original samples, which is what the
+    paper's addition experiments simulate.  Pure function of its arguments.
+    """
+    if batch_size >= n:
+        return np.ones(n_added, dtype=bool)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step, 0x5EED]))
+    return rng.random(n_added) < (batch_size / float(n))

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the compute hot-spots (each with ops.py jit wrapper
+# and ref.py pure-jnp oracle; validated with interpret=True on CPU):
+#   lbfgs/           fused multidot + rank-2m update (the paper's L-BFGS
+#                    correction path — single-pass HBM streaming)
+#   flash_attention/ causal GQA flash attention (train/prefill hot-spot)
+#   fused_update/    leave-r-out DeltaGrad parameter update (elementwise)

@@ -1,0 +1,115 @@
+"""Causal GQA flash attention (forward) — Pallas TPU.
+
+Online-softmax tiling (Dao et al., adapted to the TPU memory hierarchy):
+grid = (B*H, Sq/BQ, Sk/BK); the innermost grid dimension is sequential on
+TPU, so the (m, l, acc) running state lives in VMEM scratch across the
+Sk/BK iterations of one (batch-head, q-block).  Block shapes keep the MXU
+dims 128-aligned: q tile (BQ, D), kv tiles (BK, D), scores (BQ, BK).
+
+GQA: kv blocks are indexed with h // (H/Hkv), so KV tiles are re-read per
+q-head group (VMEM-resident; HBM reads stay O(Sk * D) per kv head with
+pipelining).  Fully-masked causal blocks short-circuit via pl.when (the
+block grid is data-independent, so this costs a predicate, not a branch).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, block_q: int, block_k: int,
+               n_k_blocks: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = True
+    if causal:
+        # kv block strictly after the last q row of this q block -> skip
+        run = ik * block_k <= iq * block_q + block_q - 1
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, ...].astype(jnp.float32) * scale  # (BQ, D)
+        k = k_ref[0, ...].astype(jnp.float32)  # (BK, D)
+        v = v_ref[0, ...].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            q_pos = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_scr[...]  # (BQ, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, ...] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D). Sq % block_q == 0 etc."""
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert H % Hkv == 0 and Sq % block_q == 0 and Sk % block_k == 0
+    G = H // Hkv
+    n_k_blocks = Sk // block_k
+    grid = (B * H, Sq // block_q, n_k_blocks)
+    scale = 1.0 / np.sqrt(D)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, n_k_blocks=n_k_blocks)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D),
+                         lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, iq, ik, g=G: (bh // g, ik, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, iq, ik, g=G: (bh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(B * H, Sq, D),
+      k.reshape(B * Hkv, Sk, D),
+      v.reshape(B * Hkv, Sk, D)).reshape(B, H, Sq, D)

@@ -1,0 +1,39 @@
+"""Public wrapper: layout adaptation + padding for the flash kernel.
+
+Model code uses (B, S, H, D) activations; the kernel wants (B, H, S, D).
+On CPU this runs in interpret mode (tests); on TPU it compiles natively.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, block_q: int = 128, block_k: int = 128,
+              interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D) -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    # pad sequence dims to block multiples (extra kv columns are masked by
+    # causality only if causal; for exactness we pad q and slice back, and
+    # pad kv with -inf-free zeros that the causal mask excludes when
+    # Sq == Sk; non-causal callers must pass aligned shapes).
+    Sqp = -(-Sq // bq) * bq
+    Skp = -(-Sk // bk) * bk
+    assert causal or (Sqp == Sq and Skp == Sk), \
+        "non-causal requires block-aligned shapes"
+    qt = jnp.pad(q, ((0, 0), (0, Sqp - Sq), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    kt = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vt = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    o = flash_attention(qt, kt, vt, causal=causal, block_q=bq, block_k=bk,
+                        interpret=interpret)
+    return o.transpose(0, 2, 1, 3)[:, :Sq]

@@ -1,0 +1,24 @@
+"""Dense-softmax oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D); GQA via H = Hkv * G."""
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    s = s / np.sqrt(D)
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

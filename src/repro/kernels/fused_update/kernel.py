@@ -1,0 +1,47 @@
+"""Fused DeltaGrad leave-r-out update — Pallas TPU.
+
+The approx-step update touches four parameter-sized arrays
+(w, cached gradient, Bv correction, changed-sample gradient).  Unfused, XLA
+may schedule this as several elementwise passes (plus fp32 upcasts); fused
+it is one HBM read per operand and one write — strictly memory-bound, so
+the kernel's value is the guaranteed single pass + fp32 math at bf16
+storage.  Scalars travel in SMEM via a (1, 4) operand.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 4096
+
+
+def _upd_kernel(w_ref, g_ref, bv_ref, gc_ref, s_ref, out_ref):
+    s = s_ref[...]  # (1, 4): lr, n, dB, sign
+    lr, n, dB, sign = s[0, 0], s[0, 1], s[0, 2], s[0, 3]
+    denom = jnp.maximum(n - sign * dB, 1.0)
+    num = n * (g_ref[...].astype(jnp.float32) + bv_ref[...].astype(jnp.float32))
+    num = num - sign * dB * gc_ref[...].astype(jnp.float32)
+    out_ref[...] = (w_ref[...].astype(jnp.float32)
+                    - lr * num / denom).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
+def deltagrad_update(w, g_cached, bv, g_changed, scalars, *,
+                     interpret: bool = False, tile: int = TILE):
+    """All tensors (1, p) with p % tile == 0; scalars (1, 4)."""
+    _, p = w.shape
+    grid = (p // tile,)
+    spec = pl.BlockSpec((1, tile), lambda i: (0, i))
+    return pl.pallas_call(
+        _upd_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, 4), lambda i: (0, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((1, p), w.dtype),
+        interpret=interpret,
+    )(w, g_cached, bv, g_changed, scalars)

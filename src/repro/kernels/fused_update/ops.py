@@ -1,0 +1,28 @@
+"""Jit'd wrapper for the fused DeltaGrad update (padding + scalar packing)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_update.kernel import deltagrad_update
+
+
+@partial(jax.jit, static_argnames=("interpret", "tile"))
+def update(w, g_cached, bv, g_changed, lr, n, dB, sign, *,
+           interpret: bool = False, tile: int = 512):
+    """Flat-vector fused update; arbitrary p (pads to tile)."""
+    p = w.shape[-1]
+    pp = -(-p // tile) * tile
+
+    def prep(x):
+        return jnp.pad(x.reshape(1, -1), ((0, 0), (0, pp - p)))
+
+    scalars = jnp.stack([jnp.float32(lr), jnp.float32(n), jnp.float32(dB),
+                         jnp.float32(sign)]).reshape(1, 4)
+    out = deltagrad_update(prep(w), prep(g_cached), prep(bv), prep(g_changed),
+                           scalars, interpret=interpret, tile=tile)
+    return out[0, :p]

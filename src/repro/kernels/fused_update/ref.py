@@ -1,0 +1,19 @@
+"""Oracle for the fused leave-r-out DeltaGrad parameter update."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def deltagrad_update_ref(w, g_cached, bv, g_changed, lr, n, dB, sign):
+    """w - lr/(n - sign*dB) * ( n*(g_cached + bv) - sign*dB*g_changed ).
+
+    Paper eq. (2)/(S7): sign=+1 deletion, sign=-1 addition.  All array args
+    share w's shape; lr/n/dB/sign are scalars.
+    """
+    f32 = jnp.float32
+    denom = jnp.maximum(n - sign * dB, 1.0)
+    num = n * (g_cached.astype(f32) + bv.astype(f32)) \
+        - sign * dB * g_changed.astype(f32)
+    return (w.astype(f32) - lr * num / denom).astype(w.dtype)

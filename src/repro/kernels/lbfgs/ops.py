@@ -1,0 +1,72 @@
+"""Jit'd public wrappers: padding + compact solve around the Pallas kernels.
+
+`lbfgs_hvp_fused(dW, dG, v)` == `repro.core.lbfgs.lbfgs_hvp_stacked` but with
+the two parameter-dimension passes fused (one HBM read each).  On CPU (tests)
+pass interpret=True; on TPU the kernels compile natively.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lbfgs import compact_coeffs
+from repro.kernels.lbfgs import kernel as K
+
+
+def _pad_m(x: jax.Array, m_pad: int) -> jax.Array:
+    m = x.shape[0]
+    if m == m_pad:
+        return x
+    return jnp.pad(x, ((0, m_pad - m), (0, 0)))
+
+
+def _pad_p(x: jax.Array, p_pad: int) -> jax.Array:
+    p = x.shape[-1]
+    if p == p_pad:
+        return x
+    return jnp.pad(x, ((0, 0), (0, p_pad - p)))
+
+
+@partial(jax.jit, static_argnames=("interpret", "tile_p"))
+def multidot(dW, dG, v, *, interpret: bool = False, tile_p: int = 512):
+    """Gram terms with arbitrary (m, p); pads to kernel alignment."""
+    m, p = dW.shape
+    m_pad = max(8, int(np.ceil(m / 8)) * 8)
+    p_pad = int(np.ceil(p / tile_p)) * tile_p
+    dWp = _pad_p(_pad_m(dW, m_pad), p_pad)
+    dGp = _pad_p(_pad_m(dG, m_pad), p_pad)
+    vp = _pad_p(v.reshape(1, -1), p_pad)
+    sw, sy, wv, gv = K.multidot(dWp, dGp, vp, interpret=interpret,
+                                tile_p=tile_p)
+    return sw[:m, :m], sy[:m, :m], wv[:m, 0], gv[:m, 0]
+
+
+@partial(jax.jit, static_argnames=("interpret", "tile_p"))
+def rank_update(dW, dG, v, a, b, sigma, *, interpret: bool = False,
+                tile_p: int = 512):
+    m, p = dW.shape
+    m_pad = max(8, int(np.ceil(m / 8)) * 8)
+    p_pad = int(np.ceil(p / tile_p)) * tile_p
+    dWp = _pad_p(_pad_m(dW, m_pad), p_pad)
+    dGp = _pad_p(_pad_m(dG, m_pad), p_pad)
+    vp = _pad_p(v.reshape(1, -1), p_pad)
+    coefs = jnp.zeros((3, m_pad), jnp.float32)
+    coefs = coefs.at[0, :m].set(a.astype(jnp.float32))
+    coefs = coefs.at[1, :m].set(b.astype(jnp.float32))
+    coefs = coefs.at[2, 0].set(sigma.astype(jnp.float32))
+    out = K.rank_update(dWp, dGp, vp, coefs, interpret=interpret,
+                        tile_p=tile_p)
+    return out[0, :p]
+
+
+@partial(jax.jit, static_argnames=("interpret", "tile_p"))
+def lbfgs_hvp_fused(dW, dG, v, *, interpret: bool = False, tile_p: int = 512):
+    """B v in two fused HBM passes + an O(m^3) XLA solve."""
+    sw, sy, wv, gv = multidot(dW, dG, v, interpret=interpret, tile_p=tile_p)
+    c = compact_coeffs(sw, sy, wv, gv)
+    return rank_update(dW, dG, v, c.a, c.b, c.sigma, interpret=interpret,
+                       tile_p=tile_p)

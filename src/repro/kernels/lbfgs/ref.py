@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the fused L-BFGS kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def multidot_ref(dW: jax.Array, dG: jax.Array, v: jax.Array):
+    """All Gram/dot terms of the compact L-BFGS system in one logical pass.
+
+    dW, dG: (m, p); v: (p,).
+    Returns sw (m,m) = dW dW^T, sy (m,m) = dW dG^T, wv (m,) = dW v,
+    gv (m,) = dG v.
+    """
+    f32 = jnp.float32
+    dWf, dGf, vf = dW.astype(f32), dG.astype(f32), v.astype(f32)
+    return dWf @ dWf.T, dWf @ dGf.T, dWf @ vf, dGf @ vf
+
+
+def rank_update_ref(dW: jax.Array, dG: jax.Array, v: jax.Array,
+                    a: jax.Array, b: jax.Array, sigma: jax.Array) -> jax.Array:
+    """Bv = sigma * v - a @ dW - b @ dG  (rank-2m correction)."""
+    f32 = jnp.float32
+    out = (sigma.astype(f32) * v.astype(f32)
+           - a.astype(f32) @ dW.astype(f32)
+           - b.astype(f32) @ dG.astype(f32))
+    return out.astype(v.dtype)

@@ -1,0 +1,81 @@
+"""Batched decode driver: prefill a prompt batch, then step the KV caches.
+
+    python -m repro.launch.serve --arch internlm2-1.8b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models.registry import build
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build(cfg)
+    params = model.init(args.seed)
+    max_len = args.prompt_len + args.gen
+    if cfg.family == "audio":
+        caches = model.cache_init(args.batch, max_len, enc_len=64)
+    else:
+        caches = model.cache_init(args.batch, max_len)
+
+    decode = jax.jit(lambda p, b, c: model.decode_fn(p, b, c),
+                     donate_argnums=(2,))
+
+    rng = np.random.default_rng(args.seed)
+    prompt = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len),
+                          dtype=np.int32)
+
+    # prefill by stepping (simple driver; the prefill graph is exercised by
+    # the dry-run / tests)
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, caches = decode(params, {"tokens": jnp.asarray(prompt[:, t:t + 1])},
+                                caches)
+    t_prefill = time.perf_counter() - t0
+
+    key = jax.random.PRNGKey(args.seed)
+    out_tokens = []
+    t0 = time.perf_counter()
+    for t in range(args.gen):
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits / args.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = nxt.astype(jnp.int32)[:, None]
+        out_tokens.append(np.asarray(nxt))
+        logits, caches = decode(params, {"tokens": nxt}, caches)
+    t_gen = time.perf_counter() - t0
+
+    gen = np.concatenate(out_tokens, axis=1)
+    tok_s = args.batch * args.gen / max(t_gen, 1e-9)
+    print(f"prefill {args.prompt_len} tok x {args.batch} in {t_prefill:.2f}s; "
+          f"generated {args.gen} tok x {args.batch} in {t_gen:.2f}s "
+          f"({tok_s:.1f} tok/s)")
+    print("sample row 0:", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,239 @@
+"""Whisper-style encoder-decoder backbone (conv audio frontend is a stub:
+the batch carries precomputed frame embeddings (B, S_enc, d_model)).
+
+Encoder: scan of (bidirectional attention + MLP) blocks over frames.
+Decoder: scan of (causal self-attention + cross-attention + MLP) blocks.
+Decode caches: per-layer self KV ring + precomputed cross K/V from the
+encoder memory (computed once at prefill, reused every step).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    blockwise_attention,
+    decode_attention,
+    dense_init,
+    gqa_apply,
+    gqa_cache_init,
+    gqa_cache_spec,
+    gqa_decode,
+    gqa_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+
+def _cross_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    d, H, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "wq": dense_init(ks[0], d, H * dh),
+        "wk": dense_init(ks[1], d, H * dh),
+        "wv": dense_init(ks[2], d, H * dh),
+        "wo": dense_init(ks[3], H * dh, d),
+    }
+
+
+def _cross_apply(p, x, memory, cfg: ModelConfig):
+    B, S, _ = x.shape
+    Sm = memory.shape[1]
+    H, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (memory @ p["wk"]).reshape(B, Sm, H, dh)
+    v = (memory @ p["wv"]).reshape(B, Sm, H, dh)
+    o = blockwise_attention(q, k, v, causal=False)
+    return o.reshape(B, S, H * dh) @ p["wo"]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    ke, kd, kemb, khead = jax.random.split(key, 4)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.head_dim),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "self": gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.head_dim),
+            "ln_x": rmsnorm_init(cfg.d_model),
+            "cross": _cross_init(k2, cfg),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.mlp),
+        }
+
+    enc_keys = jax.random.split(ke, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": (0.02 * jax.random.normal(kemb, (cfg.vocab, cfg.d_model))
+                  ).astype(jnp.float32),
+        "enc": jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[enc_layer(k) for k in enc_keys]),
+        "dec": jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[dec_layer(k) for k in dec_keys]),
+        "enc_norm": rmsnorm_init(cfg.d_model),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "lm_head": dense_init(khead, cfg.d_model, cfg.vocab),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, *, remat: bool = False):
+    def body(h, p):
+        a = gqa_apply(p["attn"], rmsnorm(p["ln1"], h), n_heads=cfg.n_heads,
+                      n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+                      rope_theta=cfg.rope_theta, causal=False)
+        h = h + a
+        h = h + mlp_apply(p["mlp"], rmsnorm(p["ln2"], h), cfg.mlp)
+        return h, None
+
+    from repro.models.scan_config import scan_unroll
+    body = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body, frames, params["enc"], unroll=scan_unroll())
+    return rmsnorm(params["enc_norm"], h)
+
+
+def decode_train(params, tokens_embedded, memory, cfg: ModelConfig,
+                 *, remat: bool = False):
+    def body(h, p):
+        a = gqa_apply(p["self"], rmsnorm(p["ln1"], h), n_heads=cfg.n_heads,
+                      n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+                      rope_theta=cfg.rope_theta, causal=True)
+        h = h + a
+        h = h + _cross_apply(p["cross"], rmsnorm(p["ln_x"], h), memory, cfg)
+        h = h + mlp_apply(p["mlp"], rmsnorm(p["ln2"], h), cfg.mlp)
+        return h, None
+
+    from repro.models.scan_config import scan_unroll
+    body = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body, tokens_embedded, params["dec"], unroll=scan_unroll())
+    return rmsnorm(params["final_norm"], h)
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *, dtype=jnp.bfloat16,
+            remat: bool = True, loss_chunk: int = 512):
+    from repro.models.transformer import cast_params
+    params = cast_params(params, dtype)
+    frames = batch["frames"].astype(dtype)
+    memory = encode(params, frames, cfg, remat=remat)
+    x = params["embed"][batch["tokens"]].astype(dtype)
+    h = decode_train(params, x, memory, cfg, remat=remat)
+    targets = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+    B, S, _ = h.shape
+    C = min(loss_chunk, S)
+    n_chunks = -(-S // C)
+    Sp = n_chunks * C
+    h = jnp.pad(h, ((0, 0), (0, Sp - S), (0, 0)))
+    targets = jnp.pad(targets, ((0, 0), (0, Sp - S)))
+    mask = jnp.pad(jnp.ones((B, S - 1), jnp.float32), ((0, 0), (0, Sp - S + 1)))
+
+    def chunk_loss(carry, inp):
+        hx, tx, mx = inp
+        logits = jnp.matmul(hx, params["lm_head"],
+                            preferred_element_type=jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        true = jnp.take_along_axis(logits, tx[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        return carry + jnp.sum((logz - true) * mx), None
+
+    hc = h.reshape(B, n_chunks, C, -1).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n_chunks, C).transpose(1, 0, 2)
+    mc = mask.reshape(B, n_chunks, C).transpose(1, 0, 2)
+    from repro.models.scan_config import scan_unroll
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (hc, tc, mc),
+                            unroll=scan_unroll())
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def prefill(params, batch, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    """Inference prefill: encode frames + run the decoder over the prompt,
+    returning last-position logits (forward-only)."""
+    from repro.models.transformer import cast_params
+    params = cast_params(params, dtype)
+    memory = encode(params, batch["frames"].astype(dtype), cfg, remat=False)
+    x = params["embed"][batch["tokens"]].astype(dtype)
+    h = decode_train(params, x, memory, cfg, remat=False)
+    return jnp.matmul(h[:, -1], params["lm_head"],
+                      preferred_element_type=jnp.float32)
+
+
+# -- serving -----------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq: int, enc_len: int,
+                spec: bool = False):
+    """Self-attn ring caches + cross K/V memory slots, stacked over layers."""
+    n = cfg.n_layers
+    H, dh = cfg.n_heads, cfg.head_dim
+    if spec:
+        self_c = gqa_cache_spec(batch, seq, cfg.n_kv_heads, cfg.head_dim)
+        self_c = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), self_c)
+        cross = jax.ShapeDtypeStruct((n, batch, enc_len, H, dh), jnp.bfloat16)
+        return {"self": self_c, "cross_k": cross, "cross_v": cross}
+    self_c = gqa_cache_init(batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    self_c = jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(),
+                          self_c)
+    z = jnp.zeros((n, batch, enc_len, H, dh), jnp.bfloat16)
+    return {"self": self_c, "cross_k": z, "cross_v": z}
+
+
+def fill_cross_caches(params, memory, cfg: ModelConfig):
+    """Precompute per-layer cross K/V from the encoder memory."""
+    B, Sm, _ = memory.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+
+    def body(_, p):
+        k = (memory @ p["cross"]["wk"]).reshape(B, Sm, H, dh)
+        v = (memory @ p["cross"]["wv"]).reshape(B, Sm, H, dh)
+        return None, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+    _, (ks, vs) = jax.lax.scan(body, None, params["dec"])
+    return ks, vs
+
+
+def decode_step(params, batch, caches, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    """One decoder token; cross K/V already in `caches`."""
+    from repro.models.transformer import cast_params
+    params = cast_params(params, dtype)
+    x = params["embed"][batch["tokens"]].astype(dtype)
+    H, dh = cfg.n_heads, cfg.head_dim
+
+    def body(h, scanned):
+        p, self_cache, ck, cv = scanned
+        a, new_self = gqa_decode(p["self"], rmsnorm(p["ln1"], h), self_cache,
+                                 n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                                 d_head=cfg.head_dim, rope_theta=cfg.rope_theta)
+        h = h + a
+        B = h.shape[0]
+        q = (rmsnorm(p["ln_x"], h)[:, 0] @ p["cross"]["wq"]).reshape(B, H, dh)
+        o = decode_attention(q, ck, cv, jnp.int32(ck.shape[1]))
+        h = h + (o.reshape(B, 1, H * dh) @ p["cross"]["wo"])
+        h = h + mlp_apply(p["mlp"], rmsnorm(p["ln2"], h), cfg.mlp)
+        return h, new_self
+
+    h, new_self = jax.lax.scan(
+        body, x, (params["dec"], caches["self"], caches["cross_k"],
+                  caches["cross_v"]))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = jnp.matmul(h[:, 0], params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"self": new_self, "cross_k": caches["cross_k"],
+                    "cross_v": caches["cross_v"]}

@@ -1,0 +1,333 @@
+"""Shared neural building blocks (pure functions over param dicts).
+
+Conventions:
+  * params are nested dicts of jnp arrays; `init_*` builds them, `*_apply`
+    consumes them;
+  * activations default to bf16 on accelerators (caller passes dtype);
+    reductions (softmax, norms, losses) always accumulate in fp32;
+  * attention uses a blockwise online-softmax formulation (scan over KV
+    blocks) so peak memory is O(S * block) rather than O(S^2) — the XLA
+    analogue of the Pallas flash kernel in `repro.kernels.flash_attention`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = 1.0 / np.sqrt(d_in)
+    return (scale * jax.random.normal(key, (d_in, d_out))).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D) with D even; positions: (..., S) int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, d/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Blockwise (flash-style) attention — the XLA fallback path; the Pallas
+# kernel in repro.kernels.flash_attention implements the same contraction.
+# --------------------------------------------------------------------------
+
+
+def _pad_to(x, size, axis):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_k: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Online-softmax attention, scanning over KV blocks.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D); H = Hkv * G.
+    `window > 0` restricts attention to the last `window` positions
+    (sliding-window / hybrid long-context mode).  `q_offset` is the absolute
+    position of q[0] (prefill continuation / decode).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(D)
+
+    blk = min(block_k, Sk)
+    Skp = ((Sk + blk - 1) // blk) * blk
+    n_blocks = Skp // blk
+    k = _pad_to(k, Skp, 1)
+    v = _pad_to(v, Skp, 1)
+
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    # scan carry: running max m, normalizer l, accumulator acc (fp32)
+    m0 = jnp.full((B, Sq, Hkv, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+
+    kb = k.reshape(B, n_blocks, blk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, blk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        m, l, acc, blk_idx = carry
+        kblk, vblk = inp  # (B, blk, Hkv, D)
+        # inputs stay in their storage dtype (bf16 on TPU); accumulation is
+        # fp32 via preferred_element_type — MXU-native, and it keeps the
+        # f32 upcasts (2x HBM + 2x collective bytes) out of the graph.
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        k_pos = blk_idx * blk + jnp.arange(blk)
+        valid = (k_pos < Sk)[None, None, :]
+        if causal:
+            valid = jnp.logical_and(valid, k_pos[None, None, :] <= q_pos[None, :, None])
+        if window > 0:
+            valid = jnp.logical_and(
+                valid, k_pos[None, None, :] > q_pos[None, :, None] - window
+            )
+        s = jnp.where(valid[:, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new, blk_idx + 1), None
+
+    from repro.models.scan_config import scan_unroll
+    (m, l, acc, _), _ = jax.lax.scan(
+        body, (m0, l0, acc0, jnp.int32(0)), (kb, vb), unroll=scan_unroll()
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Single-token attention against a fixed-size cache.
+
+    q: (B, H, D); caches: (B, S, Hkv, D); cache_len: () int32 — number of
+    valid positions (the new token's k/v must already be written).
+    """
+    B, H, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    valid = pos < cache_len
+    if window > 0:
+        valid = jnp.logical_and(valid, pos > cache_len - 1 - window)
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention block
+# --------------------------------------------------------------------------
+
+
+def gqa_init(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
+             qk_norm: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * d_head),
+        "wk": dense_init(ks[1], d_model, n_kv * d_head),
+        "wv": dense_init(ks[2], d_model, n_kv * d_head),
+        "wo": dense_init(ks[3], n_heads * d_head, d_model),
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(d_head)
+        p["k_norm"] = rmsnorm_init(d_head)
+    return p
+
+
+def gqa_apply(
+    params,
+    x,
+    *,
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    rope_theta: float,
+    causal: bool = True,
+    window: int = 0,
+    qk_norm: bool = False,
+    positions: Optional[jax.Array] = None,
+):
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, d_head)
+    k = (x @ params["wk"]).reshape(B, S, n_kv, d_head)
+    v = (x @ params["wv"]).reshape(B, S, n_kv, d_head)
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if positions is None:
+        positions = jnp.arange(S)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    o = blockwise_attention(q, k, v, causal=causal, window=window)
+    return o.reshape(B, S, n_heads * d_head) @ params["wo"]
+
+
+def gqa_decode(
+    params,
+    x,  # (B, 1, d_model)
+    cache: Dict[str, jax.Array],
+    *,
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    rope_theta: float,
+    window: int = 0,
+    qk_norm: bool = False,
+):
+    """One-token decode; cache = {k: (B,S,Hkv,D), v: ..., len: ()}.
+
+    When `window > 0` and the cache was allocated at `window` slots, the
+    cache is a ring buffer: writes go to ``len % window`` and validity is
+    "all slots written so far" — attention over a sliding window does not
+    need positional order of the slots (RoPE is already baked into k).
+    """
+    B = x.shape[0]
+    pos = cache["len"]
+    cache_size = cache["k"].shape[1]
+    ring = window > 0 and cache_size <= window
+    q = (x[:, 0] @ params["wq"]).reshape(B, n_heads, d_head)
+    k = (x[:, 0] @ params["wk"]).reshape(B, n_kv, d_head)
+    v = (x[:, 0] @ params["wv"]).reshape(B, n_kv, d_head)
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    posv = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q = apply_rope(q[:, None], posv, rope_theta)[:, 0]
+    k = apply_rope(k[:, None], posv, rope_theta)[:, 0]
+    slot = (pos % cache_size) if ring else pos
+    k_cache = jax.lax.dynamic_update_index_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
+    v_cache = jax.lax.dynamic_update_index_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+    o = decode_attention(q, k_cache, v_cache, pos + 1, window=0 if ring else window)
+    out = o.reshape(B, 1, n_heads * d_head) @ params["wo"]
+    new_cache = {"k": k_cache, "v": v_cache, "len": pos + 1}
+    return out, new_cache
+
+
+def gqa_cache_spec(batch: int, seq: int, n_kv: int, d_head: int, dtype=jnp.bfloat16):
+    return {
+        "k": jax.ShapeDtypeStruct((batch, seq, n_kv, d_head), dtype),
+        "v": jax.ShapeDtypeStruct((batch, seq, n_kv, d_head), dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def gqa_cache_init(batch: int, seq: int, n_kv: int, d_head: int, dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, seq, n_kv, d_head), dtype),
+        "v": jnp.zeros((batch, seq, n_kv, d_head), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff),
+            "w_up": dense_init(ks[1], d_model, d_ff),
+            "w_down": dense_init(ks[2], d_ff, d_model),
+        }
+    if kind in ("relu_sq", "gelu"):
+        return {
+            "w_up": dense_init(ks[0], d_model, d_ff),
+            "w_down": dense_init(ks[1], d_ff, d_model),
+        }
+    raise ValueError(kind)
+
+
+def mlp_apply(params, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif kind == "relu_sq":
+        h = jnp.square(jax.nn.relu(x @ params["w_up"]))
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"], approximate=True)
+    else:
+        raise ValueError(kind)
+    return h @ params["w_down"]

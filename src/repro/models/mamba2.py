@@ -1,0 +1,229 @@
+"""Mamba2 / SSD block (Dao & Gu 2024, arXiv:2405.21060) — TPU-adapted.
+
+Training/prefill uses the chunked SSD algorithm: within each chunk of Q
+positions the recurrence is evaluated as a masked attention-like contraction
+(dense MXU work), and chunk boundary states are combined with a short
+`lax.scan` over L/Q chunks.  This keeps peak memory at O(L*Q + (L/Q)*N*P)
+instead of the O(L*N*P) of a naive associative scan, and maps the inner
+contractions onto 128-aligned matmuls.
+
+Decode carries (conv_state, ssm_state) — O(1) in sequence length, which is
+why the `long_500k` cell runs for SSM/hybrid archs only.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def _dims(d_model: int, cfg: SSMConfig):
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    conv_dim = d_inner + 2 * cfg.n_groups * cfg.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba2_init(key, d_model: int, cfg: SSMConfig):
+    d_inner, n_heads, conv_dim = _dims(d_model, cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        # order: [z (gate), x, B, C, dt]
+        "w_in": dense_init(ks[0], d_model, 2 * d_inner + 2 * cfg.n_groups * cfg.d_state
+                           + n_heads),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.d_conv, conv_dim), jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),  # A = -exp(a_log)
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "out_norm": rmsnorm_init(d_inner),
+        "w_out": dense_init(ks[2], d_inner, d_model),
+    }
+
+
+def _split_in(params, x, d_model: int, cfg: SSMConfig):
+    d_inner, n_heads, _ = _dims(d_model, cfg)
+    gn = cfg.n_groups * cfg.d_state
+    zxbcdt = x @ params["w_in"]
+    z = zxbcdt[..., :d_inner]
+    xin = zxbcdt[..., d_inner:2 * d_inner]
+    b_in = zxbcdt[..., 2 * d_inner:2 * d_inner + gn]
+    c_in = zxbcdt[..., 2 * d_inner + gn:2 * d_inner + 2 * gn]
+    dt = zxbcdt[..., 2 * d_inner + 2 * gn:]
+    return z, xin, b_in, c_in, dt
+
+
+def _causal_conv(conv_w, conv_b, u):
+    """Depthwise causal conv over (B, L, C) with kernel (K, C)."""
+    K = conv_w.shape[0]
+    u_pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(u_pad[:, i:i + u.shape[1], :] * conv_w[i] for i in range(K))
+    return jax.nn.silu(out + conv_b)
+
+
+def ssd_chunked(xh, dt, a_log, b_in, c_in, cfg: SSMConfig,
+                init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh: (B, L, H, P); dt: (B, L, H) (post-softplus); b_in/c_in: (B, L, G, N).
+    Returns (y: (B, L, H, P), final_state: (B, H, P, N)).
+    """
+    Bsz, L, H, P = xh.shape
+    G, N = b_in.shape[-2], b_in.shape[-1]
+    Q = min(cfg.chunk, L)
+    assert L % Q == 0, f"seq len {L} must divide by chunk {Q}"
+    nc = L // Q
+    hg = H // G  # heads per group
+
+    a = (-jnp.exp(a_log))[None, None, :] * dt  # (B, L, H) log-decay, <= 0
+    xbar = xh * dt[..., None]  # dt-scaled input
+
+    # reshape into chunks
+    ac = a.reshape(Bsz, nc, Q, H)
+    xc = xbar.reshape(Bsz, nc, Q, H, P)
+    bc = b_in.reshape(Bsz, nc, Q, G, N)
+    cc = c_in.reshape(Bsz, nc, Q, G, N)
+
+    cum = jnp.cumsum(ac, axis=2)  # (B, nc, Q, H) within-chunk cumulative decay
+    total = cum[:, :, -1]  # (B, nc, H)
+
+    # ---- intra-chunk (dense, attention-like) -------------------------------
+    # decay matrix Lmask[i, j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: exp of masked (positive) entries overflows and the
+    # inf * 0 in the backward pass would poison gradients with NaNs.
+    lmask = jnp.exp(jnp.where(causal, diff, -jnp.inf))
+    # scores over groups: (B,nc,Q,Q,G) = C_i . B_j
+    scores = jnp.einsum("bnqgs,bnkgs->bnqkg", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))
+    # expand to heads: head h belongs to group h // hg
+    scores = jnp.repeat(scores, hg, axis=-1)  # (B,nc,Q,Q,H)
+    att = scores * lmask
+    y_diag = jnp.einsum("bnqkh,bnkhp->bnqhp", att, xc.astype(jnp.float32))
+
+    # ---- chunk states -------------------------------------------------------
+    # S_n = sum_j exp(total - cum_j) * B_j (outer) xbar_j  -> (B,nc,H,N,P)
+    wts = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,Q,H)
+    bh = jnp.repeat(bc, hg, axis=-2) if G > 1 else jnp.broadcast_to(
+        bc, (Bsz, nc, Q, G, N))
+    if G == 1:
+        b_heads = jnp.broadcast_to(bc, (Bsz, nc, Q, 1, N))
+        b_heads = jnp.repeat(b_heads, H, axis=-2)
+    else:
+        b_heads = jnp.repeat(bc, hg, axis=-2)
+    states = jnp.einsum("bcqh,bcqhs,bcqhp->bchsp",
+                        wts, b_heads.astype(jnp.float32), xc.astype(jnp.float32))
+    del bh
+
+    # ---- inter-chunk recurrence over nc chunks ------------------------------
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def body(s_prev, inp):
+        s_chunk, tot = inp  # (B,H,N,P), (B,H)
+        s_new = s_prev * jnp.exp(tot)[:, :, None, None] + s_chunk
+        return s_new, s_prev
+
+    from repro.models.scan_config import scan_unroll
+    (final_state, prev_states) = jax.lax.scan(
+        body,
+        init_state,
+        (states.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+        unroll=scan_unroll(),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P)
+
+    # ---- off-diagonal contribution ------------------------------------------
+    c_heads = (jnp.broadcast_to(cc, (Bsz, nc, Q, 1, N)).repeat(H, axis=-2)
+               if G == 1 else jnp.repeat(cc, hg, axis=-2))
+    y_off = jnp.einsum("bcqhs,bchsp->bcqhp", c_heads.astype(jnp.float32),
+                       prev_states) * jnp.exp(cum)[..., None]
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    # transpose state to (B,H,P,N) for the decode convention
+    return y.astype(xh.dtype), final_state.transpose(0, 1, 3, 2)
+
+
+def mamba2_apply(params, x, d_model: int, cfg: SSMConfig):
+    """Full-sequence forward. x: (B, L, d_model)."""
+    d_inner, n_heads, conv_dim = _dims(d_model, cfg)
+    Bsz, L, _ = x.shape
+    z, xin, b_in, c_in, dt = _split_in(params, x, d_model, cfg)
+    u = jnp.concatenate([xin, b_in, c_in], axis=-1)
+    u = _causal_conv(params["conv_w"], params["conv_b"], u)
+    xin = u[..., :d_inner]
+    b_in = u[..., d_inner:d_inner + cfg.n_groups * cfg.d_state]
+    c_in = u[..., d_inner + cfg.n_groups * cfg.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,L,H)
+    xh = xin.reshape(Bsz, L, n_heads, cfg.head_dim)
+    bg = b_in.reshape(Bsz, L, cfg.n_groups, cfg.d_state)
+    cg = c_in.reshape(Bsz, L, cfg.n_groups, cfg.d_state)
+    y, _ = ssd_chunked(xh, dt, params["a_log"], bg, cg, cfg)
+    y = y + params["d_skip"][None, None, :, None] * xh
+    y = y.reshape(Bsz, L, d_inner)
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z))
+    return y @ params["w_out"]
+
+
+# -- decode ------------------------------------------------------------------
+
+
+def mamba2_cache_init(batch: int, d_model: int, cfg: SSMConfig, dtype=jnp.float32):
+    d_inner, n_heads, conv_dim = _dims(d_model, cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba2_cache_spec(batch: int, d_model: int, cfg: SSMConfig, dtype=jnp.float32):
+    d_inner, n_heads, conv_dim = _dims(d_model, cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, conv_dim), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, n_heads, cfg.head_dim, cfg.d_state),
+                                    jnp.float32),
+    }
+
+
+def mamba2_decode(params, x, cache: Dict[str, jax.Array], d_model: int,
+                  cfg: SSMConfig):
+    """Single-token step. x: (B, 1, d_model)."""
+    d_inner, n_heads, conv_dim = _dims(d_model, cfg)
+    Bsz = x.shape[0]
+    z, xin, b_in, c_in, dt = _split_in(params, x[:, 0:1], d_model, cfg)
+    u_new = jnp.concatenate([xin, b_in, c_in], axis=-1)[:, 0]  # (B, conv_dim)
+    window = jnp.concatenate([cache["conv"], u_new[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"]) + params["conv_b"]
+    u = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :].astype(cache["conv"].dtype)
+
+    xin = u[..., :d_inner]
+    gn = cfg.n_groups * cfg.d_state
+    b_t = u[..., d_inner:d_inner + gn].reshape(Bsz, cfg.n_groups, cfg.d_state)
+    c_t = u[..., d_inner + gn:].reshape(Bsz, cfg.n_groups, cfg.d_state)
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    xh = xin.reshape(Bsz, n_heads, cfg.head_dim)
+
+    hg = n_heads // cfg.n_groups
+    b_heads = jnp.repeat(b_t, hg, axis=1)  # (B, H, N)
+    c_heads = jnp.repeat(c_t, hg, axis=1)
+    decay = jnp.exp(-jnp.exp(params["a_log"])[None, :] * dt_t)  # (B, H)
+    # state update: s = s * decay + dt * x (outer) B
+    upd = (dt_t[..., None] * xh.astype(jnp.float32))[..., None] * \
+        b_heads[:, :, None, :].astype(jnp.float32)  # (B,H,P,N)
+    new_ssm = cache["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, c_heads.astype(jnp.float32))
+    y = y + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, d_inner).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z[:, 0]))
+    out = (y @ params["w_out"])[:, None, :]
+    return out, {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3 style).
+
+Train/prefill uses the expanded form; decode uses the *absorbed* form — the
+per-head up-projections W_uk / W_uv are folded into the query / output so the
+KV cache stores only the latent ``c_kv`` (kv_lora_rank) plus the shared
+RoPE key (qk_rope_head_dim) per position.  That cache is 1-2 orders of
+magnitude smaller than a GQA cache and is the reason MLA exists.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MLAConfig
+from repro.models.layers import (
+    apply_rope,
+    blockwise_attention,
+    dense_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+
+def mla_init(key, d_model: int, n_heads: int, cfg: MLAConfig):
+    ks = jax.random.split(key, 8)
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "w_dq": dense_init(ks[0], d_model, cfg.q_lora_rank),
+        "q_norm": rmsnorm_init(cfg.q_lora_rank),
+        "w_uq": dense_init(ks[1], cfg.q_lora_rank, n_heads * qk_head),
+        "w_dkv": dense_init(ks[2], d_model, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank),
+        "w_uk": dense_init(ks[3], cfg.kv_lora_rank, n_heads * cfg.qk_nope_head_dim),
+        "w_uv": dense_init(ks[4], cfg.kv_lora_rank, n_heads * cfg.v_head_dim),
+        "wo": dense_init(ks[5], n_heads * cfg.v_head_dim, d_model),
+    }
+
+
+def _project_q(params, x, n_heads: int, cfg: MLAConfig, positions, rope_theta):
+    B, S, _ = x.shape
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    cq = rmsnorm(params["q_norm"], x @ params["w_dq"])
+    q = (cq @ params["w_uq"]).reshape(B, S, n_heads, qk_head)
+    q_nope = q[..., : cfg.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_head_dim:], positions, rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, x, cfg: MLAConfig, positions, rope_theta):
+    ckv_full = x @ params["w_dkv"]
+    c_kv = rmsnorm(params["kv_norm"], ckv_full[..., : cfg.kv_lora_rank])
+    k_rope = ckv_full[..., cfg.kv_lora_rank:]  # (B, S, rope_dim), shared head
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_apply(params, x, *, n_heads: int, cfg: MLAConfig, rope_theta: float,
+              causal: bool = True, window: int = 0):
+    """Expanded-form MLA for train/prefill."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q_nope, q_rope = _project_q(params, x, n_heads, cfg, positions, rope_theta)
+    c_kv, k_rope = _project_kv_latent(params, x, cfg, positions, rope_theta)
+    k_nope = (c_kv @ params["w_uk"]).reshape(B, S, n_heads, cfg.qk_nope_head_dim)
+    v = (c_kv @ params["w_uv"]).reshape(B, S, n_heads, cfg.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, n_heads, cfg.qk_rope_head_dim))],
+        axis=-1,
+    )
+    # pad v up to qk head dim so we can reuse the shared attention primitive
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_head - cfg.v_head_dim)))
+    o = blockwise_attention(q, k, v_pad, causal=causal, window=window)
+    o = o[..., : cfg.v_head_dim].reshape(B, S, n_heads * cfg.v_head_dim)
+    return o @ params["wo"]
+
+
+# -- decode (absorbed form, latent KV cache) --------------------------------
+
+
+def mla_cache_init(batch: int, seq: int, cfg: MLAConfig, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, seq, cfg.qk_rope_head_dim), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_cache_spec(batch: int, seq: int, cfg: MLAConfig, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, seq, cfg.qk_rope_head_dim), dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def mla_decode(params, x, cache: Dict[str, jax.Array], *, n_heads: int,
+               cfg: MLAConfig, rope_theta: float):
+    """Absorbed-form single-token decode.
+
+    score_h(t) = q_nope_h^T W_uk_h c_t + q_rope_h^T k_rope_t
+               = (W_uk_h^T q_nope_h)^T c_t + ...   (absorb W_uk into q)
+    out_h      = W_uv_h (sum_t p_t c_t)            (absorb W_uv into output)
+    """
+    B = x.shape[0]
+    pos = cache["len"]
+    posv = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope = _project_q(params, x, n_heads, cfg, posv, rope_theta)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]  # (B, H, dims)
+    c_new, kr_new = _project_kv_latent(params, x, cfg, posv, rope_theta)
+    c_cache = jax.lax.dynamic_update_index_in_dim(
+        cache["c_kv"], c_new[:, 0].astype(cache["c_kv"].dtype), pos, 1)
+    kr_cache = jax.lax.dynamic_update_index_in_dim(
+        cache["k_rope"], kr_new[:, 0].astype(cache["k_rope"].dtype), pos, 1)
+
+    w_uk = params["w_uk"].reshape(cfg.kv_lora_rank, n_heads, cfg.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))  # absorbed query
+    scale = 1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    s = (
+        jnp.einsum("bhr,bsr->bhs", q_lat, c_cache.astype(jnp.float32))
+        + jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
+                     kr_cache.astype(jnp.float32))
+    ) * scale
+    valid = jnp.arange(c_cache.shape[1]) <= pos
+    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p, c_cache.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(cfg.kv_lora_rank, n_heads, cfg.v_head_dim)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32))
+    out = o.reshape(B, 1 * n_heads * cfg.v_head_dim)[:, None, :] @ params["wo"]
+    new_cache = {"c_kv": c_cache, "k_rope": kr_cache, "len": pos + 1}
+    return out.astype(x.dtype), new_cache

@@ -1,0 +1,123 @@
+"""Shared + routed top-k Mixture-of-Experts FFN (Qwen-MoE / Moonlight family).
+
+Dispatch is capacity-based scatter/gather (Switch/GShard style, but without
+the O(T*E*C) dispatch tensor): tokens are placed into a fixed (E, C, d)
+expert-input buffer with `scatter`, processed with one batched GEMM, and
+gathered back with their router weights.  Overflowed tokens fall through the
+residual (dropless-up-to-capacity).  Expert weights are stacked along a
+leading E axis so they can be expert-parallel (sharded on `model`) when E is
+divisible by the mesh axis, or tensor-parallel on d_expert otherwise.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig):
+    ks = jax.random.split(key, 5)
+    E, dff = cfg.num_experts, cfg.d_expert
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(dff)
+    p = {
+        "router": dense_init(ks[0], d_model, E),
+        "w_gate": s_in * jax.random.normal(ks[1], (E, d_model, dff), jnp.float32),
+        "w_up": s_in * jax.random.normal(ks[2], (E, d_model, dff), jnp.float32),
+        "w_down": s_out * jax.random.normal(ks[3], (E, dff, d_model), jnp.float32),
+    }
+    if cfg.num_shared > 0:
+        p["shared"] = mlp_init(ks[4], d_model, cfg.d_shared, "swiglu")
+        p["shared_gate"] = dense_init(ks[4], d_model, 1)
+    return p
+
+
+def moe_apply(params, x, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d). Returns (out, router_aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.num_experts, cfg.top_k
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((E,), jnp.float32)
+    for j in range(k):
+        ce = ce + jnp.mean(jax.nn.one_hot(gate_idx[:, j], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce / k)
+
+    capacity = int(np.ceil(cfg.capacity_factor * k * T / E))
+    capacity = max(capacity, 1)
+
+    # joint dispatch across all k choices: ONE (E, C+1, d) buffer and ONE
+    # batched GEMM (naive per-choice dispatch costs k x the expert FLOPs).
+    e_flat = gate_idx.reshape(-1)  # (T*k,) expert of (token t, choice j)
+    if cfg.dispatch == "sort":
+        # argsort-based rank-within-expert: O(T*k) memory.  The one-hot
+        # variant materializes a (T*k, E) cumsum which GSPMD cannot shard
+        # (measured 119 GB/device temp on the MoE prefill cells).
+        order = jnp.argsort(e_flat)
+        e_sorted = e_flat[order]
+        starts = jnp.searchsorted(e_sorted, jnp.arange(E))
+        pos_sorted = jnp.arange(T * k) - starts[e_sorted]
+        pos = jnp.zeros((T * k,), jnp.int32).at[order].set(
+            pos_sorted.astype(jnp.int32))
+    else:
+        onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)  # (T*k, E)
+        pos = jnp.sum((jnp.cumsum(onehot, axis=0) - 1) * onehot, axis=-1)
+    keep = pos < capacity
+    slot = jnp.where(keep, pos, capacity)  # overflow -> scratch slot
+    tok = jnp.repeat(jnp.arange(T), k)
+    buf = jnp.zeros((E, capacity + 1, d), xt.dtype)
+    buf = buf.at[e_flat, slot].set(xt[tok])
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # (E, C+1, d)
+    tok_y = y[e_flat, slot]  # (T*k, d)
+    contrib = jnp.where(keep[:, None],
+                        gate_vals.reshape(-1)[:, None] * tok_y, 0.0)
+    out = jnp.sum(contrib.reshape(T, k, d), axis=1).astype(jnp.float32)
+
+    if cfg.num_shared > 0:
+        shared = mlp_apply(params["shared"], xt, "swiglu")
+        sg = jax.nn.sigmoid(xt @ params["shared_gate"])
+        out = out + (sg * shared).astype(jnp.float32)
+
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def moe_ref(params, x, cfg: MoEConfig):
+    """Dense oracle: every token through its top-k experts, no capacity.
+
+    O(T * E) compute — tests only.
+    """
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, params["w_gate"])) * jnp.einsum(
+        "td,edf->tef", xt, params["w_up"]
+    )
+    y_all = jnp.einsum("tef,efd->ted", h, params["w_down"])  # (T, E, d)
+    out = jnp.zeros_like(xt, dtype=jnp.float32)
+    for j in range(cfg.top_k):
+        yj = jnp.take_along_axis(y_all, gate_idx[:, j][:, None, None], axis=1)[:, 0]
+        out = out + gate_vals[:, j:j + 1] * yj
+    if cfg.num_shared > 0:
+        shared = mlp_apply(params["shared"], xt, "swiglu")
+        sg = jax.nn.sigmoid(xt @ params["shared_gate"])
+        out = out + (sg * shared).astype(jnp.float32)
+    return out.reshape(B, S, d).astype(x.dtype)

@@ -1,0 +1,109 @@
+"""Unified Model facade over the zoo: init / loss / decode / input specs.
+
+Everything the launcher, dry-run, tests and benchmarks need, keyed by
+`--arch <id>`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[[int], Any]
+    loss_fn: Callable[..., jax.Array]  # (params, batch) -> scalar
+    decode_fn: Optional[Callable] = None  # (params, batch, caches) -> (logits, caches)
+    prefill_fn: Optional[Callable] = None  # (params, batch) -> logits
+    cache_specs: Optional[Callable] = None  # (batch, seq) -> pytree of SDS
+    cache_init: Optional[Callable] = None
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        cfg = self.cfg
+        B = shape.global_batch
+        if shape.is_decode:
+            if cfg.family == "audio":
+                return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        S = shape.seq_len
+        if cfg.family == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        if cfg.frontend == "frames":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+                "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    def sample_batch(self, shape: ShapeConfig, seed: int = 0):
+        """Concrete random inputs matching input_specs (smoke tests)."""
+        rng = np.random.default_rng(seed)
+        out = {}
+        for k, s in self.input_specs(shape).items():
+            if s.dtype == jnp.int32:
+                out[k] = jnp.asarray(
+                    rng.integers(0, max(self.cfg.vocab, 2), size=s.shape,
+                                 dtype=np.int32))
+            else:
+                out[k] = jnp.asarray(rng.normal(size=s.shape), dtype=s.dtype)
+        return out
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda seed=0: encdec.init_params(cfg, seed),
+            loss_fn=lambda p, b, **kw: encdec.lm_loss(p, b, cfg, **kw),
+            decode_fn=lambda p, b, c, **kw: encdec.decode_step(p, b, c, cfg, **kw),
+            prefill_fn=lambda p, b, **kw: encdec.prefill(p, b, cfg, **kw),
+            cache_specs=lambda batch, seq, enc_len=1500: encdec.init_caches(
+                cfg, batch, seq, enc_len, spec=True),
+            cache_init=lambda batch, seq, enc_len=1500: encdec.init_caches(
+                cfg, batch, seq, enc_len, spec=False),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda seed=0: transformer.init_params(cfg, seed),
+        loss_fn=lambda p, b, **kw: transformer.lm_loss(p, b, cfg, **kw),
+        decode_fn=lambda p, b, c, **kw: transformer.decode_step(p, b, c, cfg, **kw),
+        prefill_fn=lambda p, b, **kw: transformer.prefill(p, b, cfg, **kw),
+        cache_specs=lambda batch, seq: transformer.init_caches(cfg, batch, seq,
+                                                               spec=True),
+        cache_init=lambda batch, seq: transformer.init_caches(cfg, batch, seq,
+                                                              spec=False),
+    )
+
+
+def count_params(cfg: ModelConfig) -> int:
+    """Analytic parameter count (no allocation)."""
+    model = build(cfg)
+    shapes = jax.eval_shape(lambda: model.init(0))
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """MoE: parameters touched per token (routed top-k of E + shared + dense)."""
+    total = count_params(cfg)
+    if cfg.moe is None:
+        return total
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    expert_p = 3 * cfg.d_model * cfg.moe.d_expert  # gate/up/down per expert
+    unit, n_units = transformer.layout_of(cfg)
+    n_moe_layers = sum(1 for kind in unit if kind in ("attn", "attn_shared"))
+    n_moe_layers *= n_units
+    inactive = n_moe_layers * (e - k) * expert_p
+    return total - inactive

@@ -1,0 +1,29 @@
+"""Trace-time switch: fully unroll model scans.
+
+Used ONLY by roofline validation (tests/test_roofline.py) — XLA's
+cost_analysis counts while-loop bodies once, so the analytic FLOP model is
+cross-checked against an unrolled lowering of reduced configs.  Production
+lowering always keeps scans (compile time and HLO size are depth-independent).
+
+The sLSTM time scan is exempt (trip count == sequence length).
+"""
+
+from contextlib import contextmanager
+
+_UNROLL = False
+
+
+def scan_unroll():
+    """Value to pass as lax.scan(..., unroll=...)."""
+    return True if _UNROLL else 1
+
+
+@contextmanager
+def unrolled_scans():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev

@@ -1,0 +1,342 @@
+"""Decoder-only LM assembly: heterogeneous block stacks, scan-over-layers.
+
+Layer parameters are stacked along a leading `n_units` axis and the stack is
+driven by `jax.lax.scan`, so HLO size (and compile time on the 512-device
+dry-run) is independent of depth — the MaxText approach.  A "unit" is the
+repeating block pattern: homogeneous models have a 1-block unit; zamba2 has
+(5 x mamba2 + shared-attention); xLSTM has (mLSTM, sLSTM).  Shared blocks
+(`attn_shared`) keep ONE parameter set (closure) but per-occurrence KV
+caches (stacked, scanned).
+
+Forward flavors:
+  * `lm_loss`        — train: full sequence, chunked cross-entropy
+  * `prefill`        — full sequence, returns (logits_last, caches)
+  * `decode_step`    — one token against caches
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2 as m2
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xl
+from repro.models.layers import (
+    dense_init,
+    gqa_apply,
+    gqa_cache_init,
+    gqa_cache_spec,
+    gqa_decode,
+    gqa_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+
+def layout_of(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int]:
+    """(unit, n_units)."""
+    if cfg.layout_unit:
+        unit = tuple(cfg.layout_unit)
+        assert cfg.n_layers % len(unit) == 0, (cfg.n_layers, unit)
+        return unit, cfg.n_layers // len(unit)
+    return ("attn",), cfg.n_layers
+
+
+# --------------------------------------------------------------------------
+# Per-block init / apply / decode
+# --------------------------------------------------------------------------
+
+
+def _block_init(key, kind: str, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": rmsnorm_init(cfg.d_model)}
+    if kind in ("attn", "attn_shared"):
+        if cfg.attention == "mla":
+            p["mixer"] = mla_mod.mla_init(ks[0], cfg.d_model, cfg.n_heads, cfg.mla)
+        else:
+            p["mixer"] = gqa_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim, cfg.qk_norm)
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        if cfg.mlp == "moe":
+            p["mlp"] = moe_mod.moe_init(ks[1], cfg.d_model, cfg.moe)
+        elif cfg.mlp != "none":
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp)
+    elif kind == "mamba2":
+        p["mixer"] = m2.mamba2_init(ks[0], cfg.d_model, cfg.ssm)
+    elif kind == "mlstm":
+        p["mixer"] = xl.mlstm_init(ks[0], cfg.d_model, cfg.n_heads, cfg.xlstm)
+    elif kind == "slstm":
+        p["mixer"] = xl.slstm_init(ks[0], cfg.d_model, cfg.n_heads, cfg.xlstm)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _block_apply(kind: str, p, x, cfg: ModelConfig, *, causal=True):
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in ("attn", "attn_shared"):
+        if cfg.attention == "mla":
+            h = mla_mod.mla_apply(p["mixer"], h, n_heads=cfg.n_heads, cfg=cfg.mla,
+                                  rope_theta=cfg.rope_theta, causal=causal,
+                                  window=cfg.attn_window)
+        else:
+            h = gqa_apply(p["mixer"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                          d_head=cfg.head_dim, rope_theta=cfg.rope_theta,
+                          causal=causal, window=cfg.attn_window,
+                          qk_norm=cfg.qk_norm)
+        x = x + h
+        if cfg.mlp != "none":
+            h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if cfg.mlp == "moe":
+                out, aux = moe_mod.moe_apply(p["mlp"], h2, cfg.moe)
+            else:
+                out = mlp_apply(p["mlp"], h2, cfg.mlp)
+            x = x + out
+        return x, aux
+    if kind == "mamba2":
+        return x + m2.mamba2_apply(p["mixer"], h, cfg.d_model, cfg.ssm), aux
+    if kind == "mlstm":
+        return x + xl.mlstm_chunked(p["mixer"], h, cfg.n_heads), aux
+    if kind == "slstm":
+        return x + xl.slstm_apply(p["mixer"], h, cfg.n_heads), aux
+    raise ValueError(kind)
+
+
+def _block_cache_init(kind: str, cfg: ModelConfig, batch: int, seq: int, spec: bool):
+    gq = gqa_cache_spec if spec else gqa_cache_init
+    if kind in ("attn", "attn_shared"):
+        if cfg.attention == "mla":
+            f = mla_mod.mla_cache_spec if spec else mla_mod.mla_cache_init
+            return f(batch, seq, cfg.mla)
+        win = cfg.attn_window
+        s = min(seq, win) if win else seq
+        return gq(batch, s, cfg.n_kv_heads, cfg.head_dim)
+    if kind == "mamba2":
+        f = m2.mamba2_cache_spec if spec else m2.mamba2_cache_init
+        return f(batch, cfg.d_model, cfg.ssm)
+    if kind == "mlstm":
+        f = xl.mlstm_cache_spec if spec else xl.mlstm_cache_init
+        return f(batch, cfg.d_model, cfg.n_heads, cfg.xlstm)
+    if kind == "slstm":
+        f = xl.slstm_cache_spec if spec else xl.slstm_cache_init
+        return f(batch, cfg.d_model, cfg.n_heads)
+    raise ValueError(kind)
+
+
+def _block_decode(kind: str, p, x, cache, cfg: ModelConfig):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in ("attn", "attn_shared"):
+        if cfg.attention == "mla":
+            h, cache = mla_mod.mla_decode(p["mixer"], h, cache, n_heads=cfg.n_heads,
+                                          cfg=cfg.mla, rope_theta=cfg.rope_theta)
+        else:
+            h, cache = gqa_decode(p["mixer"], h, cache, n_heads=cfg.n_heads,
+                                  n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+                                  rope_theta=cfg.rope_theta, window=cfg.attn_window,
+                                  qk_norm=cfg.qk_norm)
+        x = x + h
+        if cfg.mlp != "none":
+            h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if cfg.mlp == "moe":
+                out, _ = moe_mod.moe_apply(p["mlp"], h2, cfg.moe)
+            else:
+                out = mlp_apply(p["mlp"], h2, cfg.mlp)
+            x = x + out
+        return x, cache
+    if kind == "mamba2":
+        out, cache = m2.mamba2_decode(p["mixer"], h, cache, cfg.d_model, cfg.ssm)
+        return x + out, cache
+    if kind == "mlstm":
+        out, cache = xl.mlstm_step(p["mixer"], h, cache, cfg.n_heads)
+        return x + out, cache
+    if kind == "slstm":
+        out, cache = xl.slstm_step(p["mixer"], h, cache, cfg.n_heads)
+        return x + out, cache
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    unit, n_units = layout_of(cfg)
+    key = jax.random.PRNGKey(seed)
+    k_embed, k_head, k_shared, *k_layers = jax.random.split(key, 3 + len(unit))
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model)) * 0.02
+                  ).astype(jnp.float32),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab)
+    for pos, kind in enumerate(unit):
+        if kind == "attn_shared":
+            continue
+        keys = jax.random.split(k_layers[pos], n_units)
+        stacked = [
+            _block_init(keys[u], kind, cfg) for u in range(n_units)
+        ]
+        params[f"u{pos}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+    if "attn_shared" in unit:
+        params["shared"] = _block_init(k_shared, "attn_shared", cfg)
+    return params
+
+
+def cast_params(params, dtype):
+    """Cast float params to the compute dtype (fp32 master copies live in the
+    optimizer state; norms/softmax/loss still accumulate in fp32 internally)."""
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x, params)
+
+
+def _embed(params, batch, cfg: ModelConfig, dtype):
+    if cfg.frontend == "frames":
+        return batch["frames"].astype(dtype)  # precomputed stub embeddings
+    return params["embed"][batch["tokens"]].astype(dtype)
+
+
+def _lm_head(params, h, cfg: ModelConfig):
+    # bf16 matmul with fp32 accumulation: casting w to f32 would make the
+    # embedding/lm_head GRADIENT fp32 too — a 2x tax on the DP all-reduce of
+    # the largest single tensor in the model (§Perf iteration 7).
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return jnp.matmul(h, w, preferred_element_type=jnp.float32)
+
+
+def forward_hidden(params, x, cfg: ModelConfig, *, remat: bool = False,
+                   act_pspec=None):
+    """Run the block stack. x: (B, S, d) embedded input. Returns (h, aux).
+
+    `act_pspec` (a PartitionSpec) pins the residual stream between blocks —
+    sequence parallelism when set to P(dp, 'model', None): norms/elementwise
+    run on sequence shards and the TP all-reduces become half-volume
+    reduce-scatter / all-gather pairs (Korthikanti et al. 2022).
+    """
+    unit, n_units = layout_of(cfg)
+
+    def unit_body(carry, unit_params):
+        h, aux = carry
+        if act_pspec is not None:
+            h = jax.lax.with_sharding_constraint(h, act_pspec)
+        for pos, kind in enumerate(unit):
+            p = params["shared"] if kind == "attn_shared" else unit_params[f"u{pos}"]
+            h, a = _block_apply(kind, p, h, cfg)
+            aux = aux + a
+        if act_pspec is not None:
+            h = jax.lax.with_sharding_constraint(h, act_pspec)
+        return (h, aux), None
+
+    body = jax.checkpoint(unit_body) if remat else unit_body
+    stacked = {f"u{pos}": params[f"u{pos}"]
+               for pos, kind in enumerate(unit) if kind != "attn_shared"}
+    from repro.models.scan_config import scan_unroll
+    (h, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked,
+                               unroll=scan_unroll())
+    return rmsnorm(params["final_norm"], h, cfg.norm_eps), aux
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *, dtype=jnp.bfloat16,
+            remat: bool = True, loss_chunk: int = 512, act_pspec=None):
+    """Next-token cross-entropy, chunked over the sequence so the (S, vocab)
+    logits tensor never fully materializes."""
+    params = cast_params(params, dtype)
+    x = _embed(params, batch, cfg, dtype)
+    h, aux = forward_hidden(params, x, cfg, remat=remat, act_pspec=act_pspec)
+    if cfg.frontend == "frames":
+        targets = batch["targets"]
+    else:
+        targets = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+    B, S, _ = h.shape
+    C = min(loss_chunk, S)
+    n_chunks = S // C if S % C == 0 else -(-S // C)
+    Sp = n_chunks * C
+    h = jnp.pad(h, ((0, 0), (0, Sp - S), (0, 0)))
+    targets = jnp.pad(targets, ((0, 0), (0, Sp - S)))
+    mask = jnp.pad(jnp.ones((B, S - 1), jnp.float32), ((0, 0), (0, Sp - S + 1)))
+    hc = h.reshape(B, n_chunks, C, -1).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n_chunks, C).transpose(1, 0, 2)
+    mc = mask.reshape(B, n_chunks, C).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        hx, tx, mx = inp
+        logits = _lm_head(params, hx, cfg)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        true = jnp.take_along_axis(logits, tx[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        return carry + jnp.sum((logz - true) * mx), None
+
+    from repro.models.scan_config import scan_unroll
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (hc, tc, mc),
+                            unroll=scan_unroll())
+    loss = total / jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.moe is not None:
+        _, n_units = layout_of(cfg)
+        loss = loss + cfg.moe.router_aux_weight * aux / n_units
+    return loss
+
+
+# -- serving -----------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq: int, spec: bool = False):
+    """Stacked (n_units-leading) caches for every block in the unit."""
+    unit, n_units = layout_of(cfg)
+    caches = {}
+    for pos, kind in enumerate(unit):
+        one = _block_cache_init(kind, cfg, batch, seq, spec)
+        if spec:
+            caches[f"u{pos}"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_units,) + s.shape, s.dtype), one)
+        else:
+            caches[f"u{pos}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_units,) + a.shape).copy(), one)
+    return caches
+
+
+def decode_step(params, batch, caches, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    """One-token decode. batch: {"tokens": (B, 1)} (or {"frames"}). Returns
+    (logits (B, vocab), new_caches)."""
+    unit, n_units = layout_of(cfg)
+    params = cast_params(params, dtype)
+    x = _embed(params, batch, cfg, dtype)
+
+    def unit_body(h, scanned):
+        unit_params, unit_caches = scanned
+        new_caches = {}
+        for pos, kind in enumerate(unit):
+            p = params["shared"] if kind == "attn_shared" else unit_params[f"u{pos}"]
+            h, new_caches[f"u{pos}"] = _block_decode(kind, p, h, unit_caches[f"u{pos}"], cfg)
+        return h, new_caches
+
+    stacked = {f"u{pos}": params[f"u{pos}"]
+               for pos, kind in enumerate(unit) if kind != "attn_shared"}
+    h, new_caches = jax.lax.scan(unit_body, x, (stacked, caches))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _lm_head(params, h[:, 0], cfg)
+    return logits, new_caches
+
+
+def prefill(params, batch, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    """Inference prefill: full-sequence forward, last-position logits.
+
+    Forward-only (no backward residuals), so peak memory is one layer's
+    activations + the scan carry — the roofline for `prefill_32k` measures
+    exactly this pass."""
+    params = cast_params(params, dtype)
+    x = _embed(params, batch, cfg, dtype)
+    h, _ = forward_hidden(params, x, cfg, remat=False)
+    logits = _lm_head(params, h[:, -1], cfg)
+    return logits

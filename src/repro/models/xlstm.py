@@ -1,0 +1,299 @@
+"""xLSTM blocks (Beck et al. 2024, arXiv:2405.04517): mLSTM + sLSTM.
+
+mLSTM — matrix-memory cell, trained with the stabilized *parallel* form
+(attention-like L x L contraction with a cumulative-forget-gate decay mask);
+decoded with the O(1)-state recurrent form.  The two are algebraically
+identical (running max m_t == row max of the decay matrix), which
+`tests/test_models_smoke.py::test_xlstm_parallel_vs_recurrent` asserts.
+
+sLSTM — scalar-memory cell with block-diagonal recurrent weights; inherently
+sequential, trained with `lax.scan` (the paper makes the same point).
+
+Block layout follows the paper's residual pre-LN structure with a
+post-up-projection (mLSTM, pf=2) and post-cell gated MLP (sLSTM, pf=4/3).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import XLSTMConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def mlstm_init(key, d_model: int, n_heads: int, cfg: XLSTMConfig):
+    d_inner = int(cfg.proj_factor_mlstm * d_model)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d_model, d_inner),
+        "w_z": dense_init(ks[1], d_model, d_inner),
+        "w_q": dense_init(ks[2], d_inner, d_inner),
+        "w_k": dense_init(ks[3], d_inner, d_inner),
+        "w_v": dense_init(ks[4], d_inner, d_inner),
+        "w_gates": dense_init(ks[5], d_inner, 2 * n_heads),  # (i, f) per head
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((n_heads,)), 3.0 * jnp.ones((n_heads,))]  # forget bias
+        ),
+        "cell_norm": rmsnorm_init(d_inner),
+        "w_down": dense_init(ks[6], d_inner, d_model),
+    }
+
+
+def _mlstm_qkv_gates(params, x, n_heads: int):
+    B, L, _ = x.shape
+    up = x @ params["w_up"]
+    d_inner = up.shape[-1]
+    dh = d_inner // n_heads
+    q = (up @ params["w_q"]).reshape(B, L, n_heads, dh) / np.sqrt(dh)
+    k = (up @ params["w_k"]).reshape(B, L, n_heads, dh)
+    v = (up @ params["w_v"]).reshape(B, L, n_heads, dh)
+    gates = (up @ params["w_gates"] + params["gate_bias"]).astype(jnp.float32)
+    i_tilde = gates[..., :n_heads]  # (B, L, H)
+    f_tilde = gates[..., n_heads:]
+    z = x @ params["w_z"]
+    return q, k, v, i_tilde, f_tilde, z, d_inner, dh
+
+
+def mlstm_parallel(params, x, n_heads: int):
+    """Training/prefill forward; x: (B, L, d_model)."""
+    B, L, _ = x.shape
+    q, k, v, i_tilde, f_tilde, z, d_inner, dh = _mlstm_qkv_gates(params, x, n_heads)
+    logf = jax.nn.log_sigmoid(f_tilde)  # (B, L, H)
+    F = jnp.cumsum(logf, axis=1)
+    # D[b, h, i, j] = F_i - F_j + itilde_j   (j <= i)
+    D = (F.transpose(0, 2, 1)[:, :, :, None]
+         - F.transpose(0, 2, 1)[:, :, None, :]
+         + i_tilde.transpose(0, 2, 1)[:, :, None, :])
+    ii = jnp.arange(L)
+    causal = ii[:, None] >= ii[None, :]
+    D = jnp.where(causal[None, None], D, -jnp.inf)
+    m = jnp.max(D, axis=-1)  # (B, H, L)
+    S = jnp.einsum("blhd,bmhd->bhlm", q.astype(jnp.float32), k.astype(jnp.float32))
+    W = S * jnp.exp(D - m[..., None])
+    b = jnp.sum(W, axis=-1)  # (B, H, L)
+    denom = jnp.maximum(jnp.abs(b), jnp.exp(-m))
+    h = jnp.einsum("bhlm,bmhd->blhd", W, v.astype(jnp.float32))
+    h = h / denom.transpose(0, 2, 1)[..., None]
+    h = h.reshape(B, L, d_inner).astype(x.dtype)
+    h = rmsnorm(params["cell_norm"], h)
+    out = (h * jax.nn.silu(z)) @ params["w_down"]
+    return out
+
+
+def mlstm_chunked(params, x, n_heads: int, chunk: int = 256):
+    """Chunkwise-parallel mLSTM: O(L*Q) memory instead of O(L^2).
+
+    Same algebra as `mlstm_parallel`; chunk-boundary state (C, n, m) is
+    carried by a lax.scan, with the stabilizer folded into the state exactly
+    as in the recurrent form.  This is the TPU-memory-feasible path used for
+    train_4k / prefill_32k / long_500k.
+    """
+    B, L, _ = x.shape
+    q, k, v, i_tilde, f_tilde, z, d_inner, dh = _mlstm_qkv_gates(params, x, n_heads)
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+    logf = jax.nn.log_sigmoid(f_tilde)  # (B, L, H)
+
+    qc = q.reshape(B, nc, Q, n_heads, dh).transpose(1, 0, 3, 2, 4)  # (nc,B,H,Q,dh)
+    kc = k.reshape(B, nc, Q, n_heads, dh).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nc, Q, n_heads, dh).transpose(1, 0, 3, 2, 4)
+    ic = i_tilde.reshape(B, nc, Q, n_heads).transpose(1, 0, 3, 2)  # (nc,B,H,Q)
+    fc = logf.reshape(B, nc, Q, n_heads).transpose(1, 0, 3, 2)
+
+    ii = jnp.arange(Q)
+    causal = ii[:, None] >= ii[None, :]
+
+    C0 = jnp.zeros((B, n_heads, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, n_heads, dh), jnp.float32)
+    m0 = jnp.full((B, n_heads), -jnp.inf, jnp.float32)
+
+    def body(carry, inp):
+        C, n, m = carry
+        qb, kb, vb, ib, fb = inp  # (B,H,Q,*)
+        F = jnp.cumsum(fb, axis=-1)  # (B,H,Q) local cumulative forget
+        # intra-chunk decay D_ij = F_i - F_j + i_j
+        D = F[..., :, None] - F[..., None, :] + ib[..., None, :]
+        D = jnp.where(causal[None, None], D, -jnp.inf)
+        m_intra = jnp.max(D, axis=-1)  # (B,H,Q)
+        m_inter = F + m[..., None]  # decayed carry stabilizer
+        m_i = jnp.maximum(m_intra, m_inter)
+        S = jnp.einsum("bhqd,bhkd->bhqk", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32))
+        W = S * jnp.exp(D - m_i[..., None])
+        num = jnp.einsum("bhqk,bhkd->bhqd", W, vb.astype(jnp.float32))
+        den = jnp.sum(W, axis=-1)
+        carry_scale = jnp.where(jnp.isfinite(m[..., None]),
+                                jnp.exp(m_inter - m_i), 0.0)  # (B,H,Q)
+        num = num + carry_scale[..., None] * jnp.einsum(
+            "bhde,bhqe->bhqd", C, qb.astype(jnp.float32))
+        den = den + carry_scale * jnp.einsum("bhe,bhqe->bhq", n,
+                                             qb.astype(jnp.float32))
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # ---- chunk-boundary state update --------------------------------
+        Ftot = F[..., -1]  # (B,H)
+        g = Ftot[..., None] - F + ib  # decay from j to chunk end (B,H,Q)
+        m_next = jnp.maximum(Ftot + m, jnp.max(g, axis=-1))
+        c_old = jnp.where(jnp.isfinite(m), jnp.exp(Ftot + m - m_next), 0.0)
+        wj = jnp.exp(g - m_next[..., None])  # (B,H,Q)
+        C_new = c_old[..., None, None] * C + jnp.einsum(
+            "bhq,bhqd,bhqe->bhde", wj, vb.astype(jnp.float32),
+            kb.astype(jnp.float32))
+        n_new = c_old[..., None] * n + jnp.einsum(
+            "bhq,bhqe->bhe", wj, kb.astype(jnp.float32))
+        return (C_new, n_new, m_next), h
+
+    from repro.models.scan_config import scan_unroll
+    (_, _, _), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, fc),
+                                 unroll=scan_unroll())
+    # hs: (nc, B, H, Q, dh) -> (B, L, d_inner)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, L, d_inner).astype(x.dtype)
+    h = rmsnorm(params["cell_norm"], h)
+    return (h * jax.nn.silu(z)) @ params["w_down"]
+
+
+def mlstm_cache_init(batch: int, d_model: int, n_heads: int, cfg: XLSTMConfig):
+    d_inner = int(cfg.proj_factor_mlstm * d_model)
+    dh = d_inner // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        "m": jnp.full((batch, n_heads), -jnp.inf, jnp.float32),
+    }
+
+
+def mlstm_cache_spec(batch: int, d_model: int, n_heads: int, cfg: XLSTMConfig):
+    d_inner = int(cfg.proj_factor_mlstm * d_model)
+    dh = d_inner // n_heads
+    return {
+        "C": jax.ShapeDtypeStruct((batch, n_heads, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, n_heads, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, n_heads), jnp.float32),
+    }
+
+
+def mlstm_step(params, x, cache, n_heads: int):
+    """Single-token recurrent step; x: (B, 1, d_model)."""
+    B = x.shape[0]
+    q, k, v, i_tilde, f_tilde, z, d_inner, dh = _mlstm_qkv_gates(params, x, n_heads)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]  # (B, H, dh)
+    i_t, logf = i_tilde[:, 0], jax.nn.log_sigmoid(f_tilde[:, 0])  # (B, H)
+    m_prev, C_prev, n_prev = cache["m"], cache["C"], cache["n"]
+    m_new = jnp.maximum(logf + m_prev, i_t)
+    i_sc = jnp.exp(i_t - m_new)
+    f_sc = jnp.where(jnp.isfinite(m_prev), jnp.exp(logf + m_prev - m_new), 0.0)
+    C = f_sc[..., None, None] * C_prev + i_sc[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", v.astype(jnp.float32), k.astype(jnp.float32))
+    n = f_sc[..., None] * n_prev + i_sc[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhe->bhd", C, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", n, q.astype(jnp.float32))),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, d_inner).astype(x.dtype)
+    h = rmsnorm(params["cell_norm"], h)
+    out = (h * jax.nn.silu(z)) @ params["w_down"]
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def slstm_init(key, d_model: int, n_heads: int, cfg: XLSTMConfig):
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 4)
+    d_up = int(cfg.proj_factor_slstm * d_model)
+    return {
+        "w_in": dense_init(ks[0], d_model, 4 * d_model),  # z, i, f, o
+        "r": 0.1 * jax.random.normal(ks[1], (n_heads, dh, 4 * dh), jnp.float32),
+        "bias": jnp.concatenate(
+            [jnp.zeros((2 * d_model,)), 3.0 * jnp.ones((d_model,)),
+             jnp.zeros((d_model,))]
+        ),
+        "cell_norm": rmsnorm_init(d_model),
+        "mlp_up": dense_init(ks[2], d_model, 2 * d_up),  # GeGLU
+        "mlp_down": dense_init(ks[3], d_up, d_model),
+    }
+
+
+def slstm_cell_step(params, wx_t, state, n_heads: int):
+    """wx_t: (B, 4*d) precomputed input contribution at time t."""
+    c, n, h, m = state  # each (B, H, dh) except m: (B, H, dh)
+    B = wx_t.shape[0]
+    d = wx_t.shape[-1] // 4
+    dh = d // n_heads
+    rh = jnp.einsum("bhd,hde->bhe", h, params["r"])  # (B, H, 4*dh)
+    gates = wx_t.reshape(B, n_heads, 4 * dh) + rh + \
+        params["bias"].reshape(4, n_heads, dh).transpose(1, 0, 2).reshape(
+            n_heads, 4 * dh)
+    zt = jnp.tanh(gates[..., :dh])
+    it = gates[..., dh:2 * dh]
+    ft = gates[..., 2 * dh:3 * dh]
+    ot = jax.nn.sigmoid(gates[..., 3 * dh:])
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_sc = jnp.exp(it - m_new)
+    f_sc = jnp.where(jnp.isfinite(m), jnp.exp(logf + m - m_new), 0.0)
+    c_new = f_sc * c + i_sc * zt
+    n_new = f_sc * n + i_sc
+    h_new = ot * c_new / jnp.maximum(n_new, jnp.exp(-m_new))
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(params, x, n_heads: int):
+    """Sequential forward over L (lax.scan); x: (B, L, d_model)."""
+    B, L, d = x.shape
+    dh = d // n_heads
+    wx = (x @ params["w_in"]).astype(jnp.float32)  # (B, L, 4d) (z|i|f|o blocks)
+    # reorder to per-head contiguous [z,i,f,o]
+    wx = wx.reshape(B, L, 4, n_heads, dh).transpose(0, 1, 3, 2, 4).reshape(
+        B, L, n_heads, 4 * dh).reshape(B, L, 4 * d)
+    zeros = jnp.zeros((B, n_heads, dh), jnp.float32)
+    state0 = (zeros, zeros, zeros, jnp.full((B, n_heads, dh), -jnp.inf))
+
+    def body(state, wx_t):
+        new = slstm_cell_step(params, wx_t, state, n_heads)
+        return new, new[2]
+
+    _, hs = jax.lax.scan(body, state0, wx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, L, d).astype(x.dtype)
+    h = rmsnorm(params["cell_norm"], h)
+    up = h @ params["mlp_up"]
+    u, g = jnp.split(up, 2, axis=-1)
+    return (u * jax.nn.gelu(g, approximate=True)) @ params["mlp_down"]
+
+
+def slstm_cache_init(batch: int, d_model: int, n_heads: int):
+    dh = d_model // n_heads
+    z = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, n_heads, dh), -jnp.inf)}
+
+
+def slstm_cache_spec(batch: int, d_model: int, n_heads: int):
+    dh = d_model // n_heads
+    s = jax.ShapeDtypeStruct((batch, n_heads, dh), jnp.float32)
+    return {"c": s, "n": s, "h": s, "m": s}
+
+
+def slstm_step(params, x, cache, n_heads: int):
+    B, _, d = x.shape
+    dh = d // n_heads
+    wx = (x[:, 0] @ params["w_in"]).astype(jnp.float32)
+    wx = wx.reshape(B, 4, n_heads, dh).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = slstm_cell_step(params, wx, state, n_heads)
+    hv = h.reshape(B, 1, d).astype(x.dtype)
+    hv = rmsnorm(params["cell_norm"], hv)
+    up = hv @ params["mlp_up"]
+    u, g = jnp.split(up, 2, axis=-1)
+    out = (u * jax.nn.gelu(g, approximate=True)) @ params["mlp_down"]
+    return out, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import Optimizer, adamw, sgd  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    constant,
+    cosine_decay,
+    piecewise_constant,
+    warmup_cosine,
+)

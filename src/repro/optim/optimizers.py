@@ -1,0 +1,85 @@
+"""Minimal optax-style optimizers (optax is not vendored here).
+
+An Optimizer is (init_fn, update_fn):
+    state = init(params)
+    new_params, new_state = update(params, grads, state, lr)
+
+SGD (+momentum) is what the DeltaGrad path assumes (plain SGD); AdamW serves
+the LM substrate.  All states are pytrees mirroring params, so they shard
+with the same NamedShardings (ZeRO-style when params are 2D-sharded).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    name: str = "opt"
+
+
+def sgd(momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(params, grads, state, lr):
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        if momentum == 0.0:
+            new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new_params, {"step": state["step"] + 1}
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        new_params = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+        return new_params, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer(init, update, name="sgd")
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(params, grads, state, lr):
+        if grad_clip:
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                              for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state["step"] + 1
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, name="adamw")

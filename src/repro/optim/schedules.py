@@ -1,0 +1,35 @@
+"""Learning-rate schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def piecewise_constant(points):
+    """points: ((from_step, lr), ...) — the paper's MNIST^n schedule."""
+    def f(step):
+        lr = jnp.float32(points[0][1])
+        for start, value in points:
+            lr = jnp.where(step >= start, jnp.float32(value), lr)
+        return lr
+    return f
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr * (final_frac + (1 - final_frac) * cos))
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    decay = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+    def f(step):
+        warm = lr * (step + 1) / max(warmup, 1)
+        return jnp.where(step < warmup, jnp.float32(warm), decay(step - warmup))
+    return f

@@ -1,0 +1,6 @@
+from repro.roofline.hw import TPU_V5E  # noqa: F401
+from repro.roofline.analysis import (  # noqa: F401
+    RooflineReport,
+    collective_bytes_from_hlo,
+    roofline_from_compiled,
+)

@@ -1,0 +1,21 @@
+"""Hardware constants for the roofline model (assignment-specified)."""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops_bf16: float  # per chip, FLOP/s
+    hbm_bw: float  # per chip, B/s
+    ici_link_bw: float  # per link, B/s
+    hbm_bytes: float  # per chip
+
+
+TPU_V5E = HwSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    hbm_bytes=16 * 1024**3,
+)

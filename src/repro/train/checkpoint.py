@@ -1,0 +1,125 @@
+"""Fault-tolerant checkpointing: sharded .npz chunks + atomic manifest.
+
+Layout:
+    <dir>/step_<N>/shard_<host>.npz     one file per host (its local shards)
+    <dir>/step_<N>/MANIFEST.json        written LAST (atomic rename) — a
+                                        step directory without a manifest is
+                                        incomplete and ignored on resume.
+
+`latest_step` + `restore` give crash-safe auto-resume; `save` prunes old
+steps (keep_last).  DeltaGrad's TrainingHistory has `state_dict()` /
+`from_state_dict()` and rides along under the "extra" key, so *retraining*
+jobs are preemption-safe too.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import shutil
+import tempfile
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+
+    def visit(path, leaf):
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return flat
+
+
+def save(
+    directory: str,
+    step: int,
+    state: Any,
+    extra: Optional[Dict[str, Any]] = None,
+    host_id: int = 0,
+    n_hosts: int = 1,
+    keep_last: int = 3,
+) -> str:
+    """Write a checkpoint; returns the step directory path."""
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(step_dir, exist_ok=True)
+    flat = _flatten_with_names(state)
+    shard_path = os.path.join(step_dir, f"shard_{host_id:05d}.npz")
+    tmp = shard_path + ".tmp"
+    with open(tmp, "wb") as f:  # np.savez would append .npz to a bare path
+        np.savez(f, **flat)
+    os.replace(tmp, shard_path)
+    if extra is not None:
+        with open(os.path.join(step_dir, "extra.pkl.tmp"), "wb") as f:
+            pickle.dump(extra, f)
+        os.replace(os.path.join(step_dir, "extra.pkl.tmp"),
+                   os.path.join(step_dir, "extra.pkl"))
+    if host_id == 0:
+        manifest = {
+            "step": step,
+            "n_hosts": n_hosts,
+            "keys": sorted(flat.keys()),
+            "time": time.time(),
+        }
+        mtmp = os.path.join(step_dir, "MANIFEST.json.tmp")
+        with open(mtmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(mtmp, os.path.join(step_dir, "MANIFEST.json"))
+        _prune(directory, keep_last)
+    return step_dir
+
+
+def _prune(directory: str, keep_last: int) -> None:
+    steps = complete_steps(directory)
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
+
+
+def complete_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in sorted(os.listdir(directory)):
+        if not name.startswith("step_"):
+            continue
+        if os.path.exists(os.path.join(directory, name, "MANIFEST.json")):
+            out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = complete_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, like: Any, host_id: int = 0) -> Any:
+    """Restore into the structure of `like` (a pytree of arrays or shapes)."""
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(step_dir, "MANIFEST.json")):
+        raise FileNotFoundError(f"incomplete checkpoint: {step_dir}")
+    with np.load(os.path.join(step_dir, f"shard_{host_id:05d}.npz")) as data:
+        flat = {k: data[k] for k in data.files}
+
+    def rebuild(path, leaf):
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = flat[key]
+        return jax.numpy.asarray(arr)
+
+    return jax.tree_util.tree_map_with_path(rebuild, like)
+
+
+def restore_extra(directory: str, step: int) -> Optional[Dict[str, Any]]:
+    path = os.path.join(directory, f"step_{step:08d}", "extra.pkl")
+    if not os.path.exists(path):
+        return None
+    with open(path, "rb") as f:
+        return pickle.load(f)

@@ -1,0 +1,111 @@
+"""Step builders: train_step / serve_step factories shared by the real driver
+(launch/train.py) and the multi-pod dry-run (launch/dryrun.py).
+
+`make_train_step` supports gradient accumulation with microbatching: the
+global batch is split along axis 0 into `grad_accum` microbatches processed
+by a lax.scan; XLA overlaps each microbatch's gradient reduce-scatter with
+the next microbatch's compute (verified in the dry-run HLO by
+all-reduce-start/done separation).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer
+from repro.train.state import TrainState
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, Any], jax.Array],
+    optimizer: Optimizer,
+    lr_schedule: Callable[[jax.Array], jax.Array],
+    grad_accum: int = 1,
+    microbatch_sharding: Optional[Callable[[jax.Array], Any]] = None,
+    compute_sharding: Optional[Any] = None,
+    compute_dtype=None,
+    storage_sharding: Optional[Any] = None,
+):
+    """(state, batch) -> (state, metrics). loss_fn: (params, batch) -> scalar.
+
+    `microbatch_sharding(leaf) -> sharding` re-pins the batch sharding after
+    the (grad_accum, B/g, ...) reshape — GSPMD cannot propagate a 16-way
+    batch sharding through that reshape and silently replicates the loop
+    body's activations otherwise (observed as ~100x collective inflation in
+    the dry-run; see EXPERIMENTS.md §Perf iteration 1).
+    """
+
+    def single_grad(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(state: TrainState, batch):
+        master = state.params  # fp32, storage-sharded (ZeRO)
+        params = master
+        if compute_sharding is not None:
+            # ZeRO: state is (model, data)-sharded; compute params are
+            # model-only (or replicated in pure-DP mode).  This constraint
+            # pins ONE hoisted all-gather per step; without it GSPMD
+            # implements the data shard as a contraction split ->
+            # per-matmul activation all-reduces (~50x more collective
+            # bytes, EXPERIMENTS.md §Perf iteration 1).  `compute_dtype`
+            # casts BEFORE the constraint so the gather (and the gradient
+            # reduce-scatter, whose cotangents inherit the dtype) moves
+            # bf16 instead of fp32 — mixed-precision ZeRO; the optimizer
+            # still updates the fp32 master copy.
+            if compute_dtype is not None:
+                params = jax.tree.map(
+                    lambda x: x.astype(compute_dtype)
+                    if x.dtype == jnp.float32 else x, params)
+                if storage_sharding is not None:
+                    # pin the bf16 copy to the STORAGE sharding first so the
+                    # partitioner cannot hoist the gather above the cast
+                    # (i.e. force gather-in-bf16, not gather-fp32-then-cast)
+                    params = jax.lax.with_sharding_constraint(
+                        params, storage_sharding)
+            params = jax.lax.with_sharding_constraint(params,
+                                                      compute_sharding)
+        if grad_accum == 1:
+            loss, grads = single_grad(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            if microbatch_sharding is not None:
+                micro = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x, microbatch_sharding(x)), micro)
+
+            def body(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, grads = single_grad(params, mb)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, grads_acc, grads)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            from repro.models.scan_config import scan_unroll
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro,
+                unroll=scan_unroll())
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        lr = lr_schedule(state.step)
+        new_params, new_opt = optimizer.update(master, grads,
+                                               state.opt_state, lr)
+        metrics = {"loss": loss, "lr": lr}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_serve_step(decode_fn: Callable):
+    """(params, batch, caches) -> (logits, caches)."""
+
+    def serve_step(params, batch, caches):
+        return decode_fn(params, batch, caches)
+
+    return serve_step

@@ -1,0 +1,23 @@
+"""TrainState: the single pytree the step function transforms."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array  # () int32
+
+
+def init_state(params, optimizer) -> TrainState:
+    return TrainState(params=params, opt_state=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def state_shapes(state: TrainState):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)

@@ -1,0 +1,79 @@
+"""Straggler detection & mitigation hooks.
+
+On a 1000+ node fleet the slowest host sets the step time.  This module
+provides the host-side machinery:
+
+  * `StepTimer` — per-step wall-time EWMA + p95 tracking;
+  * `StragglerPolicy` — flags hosts whose step time exceeds
+    `tolerance x p50` for `patience` consecutive steps;
+  * mitigation actions (framework-level, since scheduling is external):
+      - `deadline_skip`: the driver skips the straggler's microbatch
+        contribution for the step (gradient re-weighted by contributing
+        microbatch count — unbiased under random assignment),
+      - `evict`: recommend elastic re-mesh without the flagged host
+        (see train/elastic.py).
+
+The dry-run / CPU tests exercise the bookkeeping; the wire protocol for
+cross-host agreement is the job scheduler's (GKE/Borg) concern.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+
+@dataclass
+class StepTimer:
+    window: int = 50
+    times: Deque[float] = field(default_factory=deque)
+    _start: Optional[float] = None
+
+    def start(self) -> None:
+        self._start = time.perf_counter()
+
+    def stop(self) -> float:
+        assert self._start is not None
+        dt = time.perf_counter() - self._start
+        self.times.append(dt)
+        while len(self.times) > self.window:
+            self.times.popleft()
+        self._start = None
+        return dt
+
+    def percentile(self, q: float) -> float:
+        if not self.times:
+            return 0.0
+        xs = sorted(self.times)
+        i = min(len(xs) - 1, int(q * len(xs)))
+        return xs[i]
+
+
+@dataclass
+class StragglerPolicy:
+    tolerance: float = 1.5  # x median
+    patience: int = 3
+    _strikes: Dict[int, int] = field(default_factory=dict)
+
+    def observe(self, host_times: Dict[int, float]) -> List[int]:
+        """host_id -> step time; returns hosts flagged for mitigation."""
+        if not host_times:
+            return []
+        xs = sorted(host_times.values())
+        median = xs[len(xs) // 2]
+        flagged = []
+        for host, t in host_times.items():
+            if median > 0 and t > self.tolerance * median:
+                self._strikes[host] = self._strikes.get(host, 0) + 1
+            else:
+                self._strikes[host] = 0
+            if self._strikes.get(host, 0) >= self.patience:
+                flagged.append(host)
+        return flagged
+
+    def reweight(self, n_contributing: int, n_total: int) -> float:
+        """Gradient scale when deadline-skipping stragglers' microbatches."""
+        assert 0 < n_contributing <= n_total
+        return n_total / n_contributing

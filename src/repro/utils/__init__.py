@@ -1,0 +1,10 @@
+from repro.utils.tree import (  # noqa: F401
+    tree_add,
+    tree_axpy,
+    tree_lincomb,
+    tree_norm,
+    tree_scale,
+    tree_sub,
+    tree_vdot,
+    tree_zeros_like,
+)

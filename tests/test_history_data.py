@@ -1,0 +1,120 @@
+"""TrainingHistory tiers/codecs + the deterministic data pipeline."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.history import CODECS, HistoryMeta, TrainingHistory
+from repro.data.dataset import Dataset
+from repro.data.sampler import addition_mask, batch_indices
+
+
+META = HistoryMeta(n=100, batch_size=10, seed=3, steps=5,
+                   lr_schedule=((0, 0.1), (3, 0.05)))
+
+
+def tree(seed):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(3,)).astype(np.float32))}
+
+
+@pytest.mark.parametrize("tier", ["device", "host"])
+@pytest.mark.parametrize("codec", ["f32", "bf16", "int8"])
+def test_history_roundtrip(tier, codec):
+    h = TrainingHistory(META, tier=tier, codec=codec)
+    for t in range(3):
+        h.append(tree(t), tree(100 + t))
+    p, g = h.entry(1)
+    tol = {"f32": 1e-7, "bf16": 1e-2, "int8": 5e-2}[codec]
+    np.testing.assert_allclose(np.asarray(p["w"]),
+                               np.asarray(tree(1)["w"]), atol=tol)
+    np.testing.assert_allclose(np.asarray(g["b"]),
+                               np.asarray(tree(101)["b"]), atol=tol)
+
+
+def test_history_disk_tier(tmp_path):
+    h = TrainingHistory(META, tier="disk", codec="f32",
+                        spill_dir=str(tmp_path))
+    for t in range(4):
+        h.append(tree(t), tree(100 + t))
+    assert len(os.listdir(tmp_path)) == 4
+    p, _ = h.entry(2)
+    np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(tree(2)["w"]))
+    h.overwrite(2, tree(55), tree(66))
+    p2, g2 = h.entry(2)
+    np.testing.assert_allclose(np.asarray(p2["w"]), np.asarray(tree(55)["w"]))
+
+
+def test_history_state_dict_roundtrip():
+    h = TrainingHistory(META, tier="host")
+    for t in range(3):
+        h.append(tree(t), tree(100 + t))
+    h.finalize(tree(999))
+    h2 = TrainingHistory.from_state_dict(h.state_dict())
+    p, g = h2.entry(0)
+    np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(tree(0)["w"]))
+    np.testing.assert_allclose(np.asarray(h2.final_params["b"]),
+                               np.asarray(tree(999)["b"]))
+
+
+def test_lr_schedule():
+    assert META.lr_at(0) == 0.1
+    assert META.lr_at(2) == 0.1
+    assert META.lr_at(3) == 0.05
+    assert META.lr_at(4) == 0.05
+
+
+# -- sampler ------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**6), step=st.integers(0, 10**4),
+       n=st.integers(10, 5000))
+def test_sampler_is_pure_and_in_range(seed, step, n):
+    b = min(n // 2 + 1, 128)
+    i1 = batch_indices(seed, step, n, b)
+    i2 = batch_indices(seed, step, n, b)
+    np.testing.assert_array_equal(i1, i2)
+    assert len(np.unique(i1)) == len(i1)  # without replacement
+    assert i1.min() >= 0 and i1.max() < n
+
+
+def test_sampler_full_batch_is_identity():
+    np.testing.assert_array_equal(batch_indices(0, 7, 10, 10**9),
+                                  np.arange(10))
+
+
+def test_addition_mask_prefix_consistency():
+    """Adding more samples never changes earlier samples' join pattern."""
+    m3 = addition_mask(5, 11, 1000, 100, 3)
+    m7 = addition_mask(5, 11, 1000, 100, 7)
+    np.testing.assert_array_equal(m3, m7[:3])
+
+
+# -- dataset ------------------------------------------------------------------
+
+
+def test_dataset_delete_append_roundtrip():
+    ds = Dataset({"x": np.arange(12).reshape(6, 2).astype(np.float32),
+                  "y": np.arange(6)})
+    ds.delete([1, 4])
+    assert ds.n_remaining == 4
+    with pytest.raises(ValueError):
+        ds.delete([1])
+    new = ds.append({"x": np.ones((2, 2), np.float32), "y": np.array([7, 8])})
+    np.testing.assert_array_equal(new, [6, 7])
+    assert ds.n == 8
+    kept, removed = ds.split_batch(np.array([0, 1, 4, 6]))
+    np.testing.assert_array_equal(kept, [0, 6])
+    np.testing.assert_array_equal(removed, [1, 4])
+
+
+def test_padded_batch_weights():
+    ds = Dataset({"x": np.arange(10).astype(np.float32)})
+    batch, w = ds.padded_batch(np.array([3, 7]), pad_to=5)
+    assert batch["x"].shape == (5,)
+    np.testing.assert_array_equal(w, [1, 1, 0, 0, 0])

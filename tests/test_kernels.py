@@ -1,0 +1,112 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lbfgs import lbfgs_hvp_stacked
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.fused_update.ops import update
+from repro.kernels.fused_update.ref import deltagrad_update_ref
+from repro.kernels.lbfgs.ops import lbfgs_hvp_fused, multidot
+from repro.kernels.lbfgs.ref import multidot_ref
+
+
+# -- lbfgs multidot / rank update ---------------------------------------------
+
+
+@pytest.mark.parametrize("m,p", [(1, 512), (2, 1000), (3, 4096), (8, 777)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_multidot_sweep(m, p, dtype):
+    rng = np.random.default_rng(m * 1000 + p)
+    dW = jnp.asarray(rng.normal(size=(m, p)), dtype)
+    dG = jnp.asarray(rng.normal(size=(m, p)), dtype)
+    v = jnp.asarray(rng.normal(size=(p,)), dtype)
+    sw, sy, wv, gv = multidot(dW, dG, v, interpret=True)
+    rsw, rsy, rwv, rgv = multidot_ref(dW, dG, v)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    for got, ref in [(sw, rsw), (sy, rsy), (wv, rwv), (gv, rgv)]:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=tol, atol=tol * p)
+
+
+@pytest.mark.parametrize("m,p", [(2, 1024), (5, 2222)])
+def test_hvp_fused_matches_core(m, p):
+    rng = np.random.default_rng(7)
+    A = rng.normal(size=(p, p)).astype(np.float32) / p
+    H = A @ A.T + np.eye(p, dtype=np.float32)
+    dW = jnp.asarray(rng.normal(size=(m, p)).astype(np.float32))
+    dG = jnp.asarray(np.asarray(dW) @ H)
+    v = jnp.asarray(rng.normal(size=(p,)).astype(np.float32))
+    out = lbfgs_hvp_fused(dW, dG, v, interpret=True)
+    ref = lbfgs_hvp_stacked(dW, dG, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+# -- flash attention ------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "B,S,H,Hkv,D,bq,bk,causal",
+    [
+        (2, 128, 4, 2, 64, 64, 64, True),
+        (1, 256, 8, 8, 32, 128, 128, True),
+        (2, 100, 4, 1, 64, 32, 32, True),  # unaligned seq (padding path)
+        (1, 128, 2, 2, 128, 128, 128, False),
+        (1, 64, 4, 4, 16, 16, 32, True),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, Hkv, D, bq, bk, causal, dtype):
+    key = jax.random.PRNGKey(B * 100 + S)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                    interpret=True)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3),
+                        causal=causal).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_model_blockwise_path():
+    """Kernel == the XLA blockwise path used inside the models."""
+    from repro.models.layers import blockwise_attention
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    B, S, H, Hkv, D = 2, 128, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    out_kernel = attention(q, k, v, causal=True, block_q=64, block_k=64,
+                           interpret=True)
+    out_xla = blockwise_attention(q, k, v, causal=True, block_k=64)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_xla),
+                               rtol=2e-5, atol=2e-5)
+
+
+# -- fused DeltaGrad update -------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [512, 1000, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sign", [1.0, -1.0])
+def test_fused_update_sweep(p, dtype, sign):
+    rng = np.random.default_rng(p)
+    w, g, bv, gc = [jnp.asarray(rng.normal(size=(p,)), dtype)
+                    for _ in range(4)]
+    out = update(w, g, bv, gc, 0.1, 512.0, 3.0, sign, interpret=True)
+    ref = deltagrad_update_ref(w, g, bv, gc, jnp.float32(0.1),
+                               jnp.float32(512.0), jnp.float32(3.0),
+                               jnp.float32(sign))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=2e-2,
+                               atol=2e-2)

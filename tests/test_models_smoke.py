@@ -1,0 +1,150 @@
+"""Per-arch reduced-config smoke tests (assignment requirement): one forward
++ one train step + one decode step on CPU; output shapes + finiteness.
+Plus cross-form equivalence tests for the recurrent blocks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig, SSMConfig, XLSTMConfig
+from repro.configs.registry import all_archs, get_config
+from repro.models.registry import build, count_params
+
+TINY = ShapeConfig(name="tiny", seq_len=32, global_batch=2, kind="train")
+
+LM_ARCHS = [name for name, cfg in all_archs().items() if cfg.family != "simple"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_arch_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(0)
+    batch = model.sample_batch(TINY)
+
+    loss = model.loss_fn(params, batch, remat=False, loss_chunk=16)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+
+    grads = jax.grad(
+        lambda p: model.loss_fn(p, batch, remat=False, loss_chunk=16))(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, arch
+
+    if cfg.family == "audio":
+        caches = model.cache_init(2, 32, enc_len=16)
+    else:
+        caches = model.cache_init(2, 32)
+    logits, caches2 = model.decode_fn(
+        params, {"tokens": jnp.zeros((2, 1), jnp.int32)}, caches)
+    assert logits.shape == (2, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    # cache structure preserved
+    assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_arch_remat_matches_noremat(arch):
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(1)
+    batch = model.sample_batch(TINY, seed=1)
+    l1 = model.loss_fn(params, batch, remat=False, loss_chunk=16)
+    l2 = model.loss_fn(params, batch, remat=True, loss_chunk=16)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_full_config_param_counts_in_expected_range():
+    """Analytic (eval_shape) parameter counts vs published sizes."""
+    expect = {
+        "minicpm3-4b": (3e9, 6e9),
+        "nemotron-4-15b": (13e9, 18e9),
+        "internlm2-1.8b": (1.5e9, 2.3e9),
+        "qwen3-32b": (28e9, 36e9),
+        # zamba2: our 13x(5 mamba + shared attn) realization of the
+        # unverified-tier config counts 5.5B (see configs/zamba2_7b.py)
+        "zamba2-7b": (5e9, 9e9),
+        "xlstm-350m": (0.25e9, 0.5e9),
+        "qwen2-moe-a2.7b": (12e9, 16e9),
+        # moonshot: the ASSIGNMENT dims (48L x 64e x 1408) give 28.9B total
+        # (4.8B active); the HF 16B model uses 27 layers — we follow the
+        # assignment (see configs/moonshot_v1_16b_a3b.py)
+        "moonshot-v1-16b-a3b": (25e9, 32e9),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+        "chameleon-34b": (30e9, 38e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = count_params(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+# -- recurrent-form equivalences --------------------------------------------
+
+
+def test_mamba2_decode_matches_full():
+    from repro.models.mamba2 import (mamba2_apply, mamba2_cache_init,
+                                     mamba2_decode, mamba2_init)
+    cfg = SSMConfig(d_state=8, head_dim=8, chunk=4, n_groups=1, expand=2)
+    d = 16
+    p = mamba2_init(jax.random.PRNGKey(2), d, cfg)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(3), (2, 8, d))
+    full = mamba2_apply(p, x, d, cfg)
+    cache = mamba2_cache_init(2, d, cfg)
+    outs = []
+    for t in range(8):
+        o, cache = mamba2_decode(p, x[:, t:t + 1], cache, d, cfg)
+        outs.append(o[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=2e-5)
+
+
+def test_xlstm_parallel_vs_recurrent_vs_chunked():
+    from repro.models.xlstm import (mlstm_cache_init, mlstm_chunked,
+                                    mlstm_init, mlstm_parallel, mlstm_step)
+    cfg = XLSTMConfig()
+    d, H = 32, 4
+    p = mlstm_init(jax.random.PRNGKey(0), d, H, cfg)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (2, 16, d))
+    full = mlstm_parallel(p, x, H)
+    chk = mlstm_chunked(p, x, H, chunk=4)
+    np.testing.assert_allclose(np.asarray(chk), np.asarray(full), atol=2e-5)
+    cache = mlstm_cache_init(2, d, H, cfg)
+    outs = []
+    for t in range(16):
+        o, cache = mlstm_step(p, x[:, t:t + 1], cache, H)
+        outs.append(o[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=2e-5)
+
+
+def test_moe_capacity_dispatch_matches_dense_oracle():
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import moe_apply, moe_init, moe_ref
+    cfg = MoEConfig(num_experts=8, top_k=2, d_expert=16, num_shared=2,
+                    d_shared=32, capacity_factor=2.0)
+    p = moe_init(jax.random.PRNGKey(0), 32, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 32))
+    out, aux = moe_apply(p, x, cfg)
+    ref = moe_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+    assert float(aux) >= 1.0  # Switch aux loss is >= 1 at balance
+
+
+def test_gqa_ring_cache_matches_full_window():
+    """Sliding-window ring cache == full cache + window mask."""
+    from repro.models.layers import gqa_cache_init, gqa_decode, gqa_init
+    d, H, Hkv, dh, win = 32, 4, 2, 8, 4
+    p = gqa_init(jax.random.PRNGKey(0), d, H, Hkv, dh)
+    xs = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (1, 12, d))
+    ring = gqa_cache_init(1, win, Hkv, dh)  # ring buffer (size == window)
+    full = gqa_cache_init(1, 12, Hkv, dh)
+    for t in range(12):
+        o_ring, ring = gqa_decode(p, xs[:, t:t + 1], ring, n_heads=H,
+                                  n_kv=Hkv, d_head=dh, rope_theta=1e4,
+                                  window=win)
+        o_full, full = gqa_decode(p, xs[:, t:t + 1], full, n_heads=H,
+                                  n_kv=Hkv, d_head=dh, rope_theta=1e4,
+                                  window=win)
+        np.testing.assert_allclose(np.asarray(o_ring), np.asarray(o_full),
+                                   atol=3e-5, err_msg=f"t={t}")

@@ -1,0 +1,61 @@
+"""Algorithm 3 — online deletion/addition with history rewrite."""
+
+import numpy as np
+
+from repro.core.deltagrad import (
+    DeltaGradConfig,
+    baseline_retrain,
+    sgd_train_with_cache,
+)
+from repro.core.history import HistoryMeta
+from repro.core.online import online_deltagrad
+from repro.data.synthetic import binary_classification
+from repro.models.simple import logreg_init, logreg_objective
+from repro.utils.tree import tree_norm, tree_sub
+
+
+def setup(n=1000, d=10, steps=60, batch=256, seed=0):
+    ds = binary_classification(n=n, d=d, seed=seed)
+    obj = logreg_objective(l2=5e-3)
+    meta = HistoryMeta(n=ds.n, batch_size=batch, seed=7, steps=steps,
+                       lr_schedule=((0, 0.5),))
+    p0 = logreg_init(d, seed=seed + 1)
+    w_star, hist = sgd_train_with_cache(obj, p0, ds, meta)
+    return ds, obj, meta, p0, w_star, hist
+
+
+def test_online_deletion_tracks_scratch_retrain():
+    ds, obj, meta, p0, w_star, hist = setup()
+    reqs = np.random.default_rng(5).choice(ds.n, size=6, replace=False)
+    cfg = DeltaGradConfig(period=5, burn_in=8, history_size=2)
+    w_i, ostats = online_deltagrad(obj, hist, ds, reqs, cfg, mode="delete")
+    ds2 = binary_classification(n=1000, d=10, seed=0)
+    w_u, _ = baseline_retrain(obj, ds2, meta, p0, reqs, mode="delete")
+    d_ui = float(tree_norm(tree_sub(w_u, w_i)))
+    d_us = float(tree_norm(tree_sub(w_u, w_star)))
+    assert d_ui < 0.3 * d_us, (d_ui, d_us)
+    assert len(ostats.per_request) == 6
+    assert ostats.theoretical_speedup > 2.0
+
+
+def test_online_rewrites_history_final_params():
+    ds, obj, meta, p0, w_star, hist = setup(steps=40)
+    reqs = [3, 17]
+    cfg = DeltaGradConfig(period=5, burn_in=6)
+    w_i, _ = online_deltagrad(obj, hist, ds, reqs, cfg, mode="delete")
+    # history.final_params must now be the post-request model
+    d = float(tree_norm(tree_sub(hist.final_params, w_i)))
+    assert d == 0.0
+    # and the dataset bookkeeping marks them removed
+    assert set(np.nonzero(ds.removed)[0].tolist()) == set(reqs)
+
+
+def test_online_single_request_close_to_batch_mode():
+    from repro.core.deltagrad import deltagrad_retrain
+    ds, obj, meta, p0, w_star, hist = setup(steps=50)
+    cfg = DeltaGradConfig(period=5, burn_in=8)
+    req = [11]
+    w_batch, _ = deltagrad_retrain(obj, hist, ds, np.array(req), cfg)
+    w_online, _ = online_deltagrad(obj, hist, ds, req, cfg, mode="delete")
+    d = float(tree_norm(tree_sub(w_batch, w_online)))
+    assert d < 1e-4, d

@@ -1,0 +1,102 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.deltagrad import (
+    DeltaGradConfig,
+    baseline_retrain,
+    deltagrad_retrain,
+    sgd_train_with_cache,
+)
+from repro.core.history import HistoryMeta
+from repro.data.dataset import Dataset
+from repro.data.synthetic import binary_classification
+from repro.models.simple import logreg_init, logreg_objective
+from repro.utils.tree import tree_norm, tree_sub
+
+
+def _fit(n=300, d=6, steps=25, batch=64, seed=0):
+    ds = binary_classification(n=n, d=d, seed=seed)
+    obj = logreg_objective(l2=5e-3)
+    meta = HistoryMeta(n=n, batch_size=batch, seed=5, steps=steps,
+                       lr_schedule=((0, 0.3),))
+    p0 = logreg_init(d, seed=seed + 1)
+    w, h = sgd_train_with_cache(obj, p0, ds, meta)
+    return ds, obj, meta, p0, w, h
+
+
+DS, OBJ, META, P0, W_STAR, HIST = _fit()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_removal_set_order_invariance(seed):
+    """DeltaGrad output depends on the removal SET, not its order."""
+    rng = np.random.default_rng(seed)
+    r = rng.choice(DS.n, size=5, replace=False)
+    cfg = DeltaGradConfig(period=5, burn_in=5)
+    w1, _ = deltagrad_retrain(OBJ, HIST, DS, r, cfg)
+    w2, _ = deltagrad_retrain(OBJ, HIST, DS, r[::-1].copy(), cfg)
+    assert float(tree_norm(tree_sub(w1, w2))) < 1e-6
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10**6), r=st.integers(1, 12))
+def test_error_bounded_by_trivial_bound(seed, r):
+    """||w^I - w^U|| stays below ||w^* - w^U|| (DeltaGrad never worse than
+    not retraining at all)."""
+    rng = np.random.default_rng(seed)
+    rem = rng.choice(DS.n, size=r, replace=False)
+    cfg = DeltaGradConfig(period=5, burn_in=5)
+    w_u, _ = baseline_retrain(OBJ, DS, META, P0, rem)
+    w_i, _ = deltagrad_retrain(OBJ, HIST, DS, rem, cfg)
+    d_ui = float(tree_norm(tree_sub(w_u, w_i)))
+    d_us = float(tree_norm(tree_sub(w_u, W_STAR)))
+    assert d_ui <= d_us + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_period1_equals_baseline(seed):
+    """T0 == 1 with burn_in covering everything == exact retraining."""
+    rng = np.random.default_rng(seed)
+    rem = rng.choice(DS.n, size=4, replace=False)
+    cfg = DeltaGradConfig(period=1, burn_in=META.steps)
+    w_u, _ = baseline_retrain(OBJ, DS, META, P0, rem)
+    w_i, stats = deltagrad_retrain(OBJ, HIST, DS, rem, cfg)
+    assert stats.approx_steps == 0
+    assert float(tree_norm(tree_sub(w_u, w_i))) < 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), m=st.integers(1, 5))
+def test_dataset_delete_undelete_roundtrip(seed, m):
+    rng = np.random.default_rng(seed)
+    ds = Dataset({"x": rng.normal(size=(50, 3)).astype(np.float32)})
+    idx = rng.choice(50, size=m, replace=False)
+    ds.delete(idx)
+    assert ds.n_remaining == 50 - m
+    ds.undelete(idx)
+    assert ds.n_remaining == 50
+    assert not ds.removed.any()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_gradient_compression_error_feedback_bounded(seed):
+    """int8 + EF: per-step dequant error never exceeds one quantization
+    step of the corrected gradient."""
+    from repro.dist.compress import compress_grads, decompress_grads, init_error
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(32,)).astype(np.float32))}
+    e = init_error(g)
+    q, e2 = compress_grads(g, e)
+    deq = decompress_grads(q)
+    corrected = np.asarray(g["w"])  # error was zero
+    scale = np.abs(corrected).max() / 127.0
+    err = np.abs(np.asarray(deq["w"]) - corrected)
+    assert err.max() <= scale / 2 + 1e-6
+    np.testing.assert_allclose(np.asarray(e2["w"]),
+                               corrected - np.asarray(deq["w"]), atol=1e-6)

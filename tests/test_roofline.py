@@ -1,0 +1,143 @@
+"""Roofline machinery: HLO collective parser (loop-aware) + analytic FLOP
+model validated against fully-unrolled cost_analysis."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_config
+from repro.models.registry import build, count_params
+from repro.models.scan_config import unrolled_scans
+from repro.roofline.analysis import (
+    collective_bytes_from_hlo,
+    collective_bytes_loop_aware,
+    _split_computations,
+)
+from repro.roofline.model import analytic_cost
+
+
+def test_hlo_shape_parser():
+    from repro.roofline.analysis import _shape_bytes
+    assert _shape_bytes("f32", "128,256") == 128 * 256 * 4
+    assert _shape_bytes("bf16", "8") == 16
+    assert _shape_bytes("pred", "") == 1
+
+
+def test_collective_parser_counts_ops():
+    hlo = """
+ENTRY %main (a: f32[16]) -> f32[16] {
+  %ar = f32[128,64]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[256,32]{1,0} all-gather(%y), replica_groups=[8,4]<=[32], dimensions={0}
+  %cp = f32[8]{0} collective-permute(%z), source_target_pairs={{0,1}}
+}
+"""
+    got = collective_bytes_from_hlo(hlo)
+    ar = 128 * 64 * 4 * 2 * 15 / 16
+    ag = 256 * 32 * 2 * 3 / 4
+    assert got["all-reduce"] == int(ar)
+    assert got["all-gather"] == int(ag)
+    assert got["collective-permute"] == 8 * 4
+
+
+def test_loop_aware_multiplies_trip_counts():
+    """A psum inside a scanned shard_map body must be counted x trip_count."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.roofline.analysis import (collective_bytes_from_hlo,
+                                             collective_bytes_loop_aware)
+        mesh = jax.make_mesh((4,), ("d",))
+        def inner(x):
+            return jax.lax.psum(x, "d")  # (16,) per shard, summed
+        f = shard_map(inner, mesh=mesh, in_specs=P("d"), out_specs=P("d"))
+        def scanned(x):
+            def body(c, _):
+                return c + f(c), None
+            out, _ = jax.lax.scan(body, x, None, length=10)
+            return out
+        with mesh:
+            txt = jax.jit(scanned).lower(
+                jax.ShapeDtypeStruct((64,), jnp.float32)).compile().as_text()
+        naive = sum(collective_bytes_from_hlo(txt).values())
+        aware = sum(collective_bytes_loop_aware(txt).values())
+        assert naive > 0, "no collective found"
+        ratio = aware / naive
+        assert 8 <= ratio <= 12, (naive, aware, ratio)
+        print("LOOPAWARE_OK", naive, aware)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=300)
+    assert out.returncode == 0, (out.stdout[-500:], out.stderr[-2000:])
+    assert "LOOPAWARE_OK" in out.stdout
+
+
+SHAPE = ShapeConfig(name="v", seq_len=256, global_batch=2, kind="train")
+
+
+@pytest.mark.parametrize("arch,rtol", [
+    ("internlm2-1.8b", 0.20),
+    ("zamba2-7b", 0.25),
+    ("qwen2-moe-a2.7b", 0.35),
+    ("minicpm3-4b", 0.25),
+])
+def test_analytic_flops_vs_unrolled_cost_analysis(arch, rtol):
+    """The §Roofline FLOP source, cross-checked against XLA on configs small
+    enough to fully unroll (cost_analysis counts loop bodies once, hence the
+    unroll; matmul share grows with width, so tolerance shrinks at scale)."""
+    base = get_config(arch)
+    cfg = base.reduced(d_model=512, n_heads=8,
+                       n_kv_heads=4 if base.n_kv_heads < base.n_heads else 8,
+                       d_ff=1024, d_head=64, vocab=1024)
+    if base.ssm:
+        cfg = dataclasses.replace(cfg, ssm=dataclasses.replace(
+            cfg.ssm, d_state=32, head_dim=32, chunk=64))
+    if base.moe:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, d_expert=256, d_shared=512))
+    if base.mla:
+        cfg = dataclasses.replace(cfg, mla=dataclasses.replace(
+            cfg.mla, q_lora_rank=128, kv_lora_rank=64, qk_nope_head_dim=32,
+            qk_rope_head_dim=32, v_head_dim=32))
+    model = build(cfg)
+    params_specs = jax.eval_shape(lambda: model.init(0))
+    specs = model.input_specs(SHAPE)
+
+    def step(p, b):
+        return jax.grad(
+            lambda pp, bb: model.loss_fn(pp, bb, remat=False,
+                                         loss_chunk=128))(p, b)
+
+    with unrolled_scans():
+        cost = jax.jit(step).lower(params_specs, specs).compile(
+        ).cost_analysis()
+    hlo = float(cost.get("flops", 0.0))
+    ac = analytic_cost(cfg, SHAPE, n_params=count_params(cfg))
+    ratio = ac.flops_global / hlo
+    assert 1 - rtol <= ratio <= 1 + rtol, (hlo, ac.flops_global, ratio)
+
+
+def test_computation_splitter_handles_nested_parens():
+    hlo = """
+%region_1.2 (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %x = f32[8,8]{1,0} add(%a, %b)
+}
+ENTRY %main.5 (p: f32[8,8]) -> f32[8,8] {
+  %y = f32[8,8]{1,0} multiply(%p, %p)
+}
+"""
+    comps = _split_computations(hlo)
+    assert "region_1.2" in comps and "main.5" in comps
+    assert "__entry__" in comps

@@ -1,0 +1,136 @@
+"""End-to-end behaviour: Unlearner API, checkpoint/restart, elastic plans,
+straggler policy, train driver smoke."""
+
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import Unlearner, UnlearnerConfig
+from repro.core.deltagrad import DeltaGradConfig
+from repro.data.synthetic import binary_classification
+from repro.models.simple import logreg_accuracy, logreg_init, logreg_objective
+from repro.utils.tree import tree_norm, tree_sub
+
+
+def make_unlearner(n=600, d=8, steps=40):
+    ds = binary_classification(n=n, d=d, seed=0)
+    return Unlearner(
+        logreg_objective(l2=5e-3), logreg_init(d, seed=1), ds,
+        UnlearnerConfig(steps=steps, batch_size=128, lr=0.3, seed=2,
+                        deltagrad=DeltaGradConfig(period=5, burn_in=8)),
+    ), ds
+
+
+class TestUnlearnerAPI:
+    def test_fit_delete_add_stream(self):
+        unl, ds = make_unlearner()
+        unl.fit()
+        acc0 = logreg_accuracy(unl.params, ds)
+        assert acc0 > 0.7
+
+        stats = unl.delete([1, 2, 3])
+        assert stats.theoretical_speedup > 1.5
+        assert ds.removed[[1, 2, 3]].all()
+
+        stats2 = unl.add({"x": ds.columns["x"][:2] + 0.1,
+                          "y": ds.columns["y"][:2]})
+        assert stats2.approx_steps > 0
+
+        ostats = unl.stream_delete([10, 11])
+        assert len(ostats.per_request) == 2
+        assert logreg_accuracy(unl.params, ds) > 0.6
+
+    def test_delete_matches_baseline_closely(self):
+        unl, ds = make_unlearner()
+        unl.fit()
+        w_u, _ = unl.baseline([5, 6, 7, 8])
+        unl.delete([5, 6, 7, 8])
+        d = float(tree_norm(tree_sub(w_u, unl.params)))
+        assert d < 5e-3, d
+
+    def test_requires_fit(self):
+        unl, _ = make_unlearner()
+        with pytest.raises(RuntimeError):
+            unl.delete([0])
+
+
+class TestCheckpoint:
+    def test_save_restore_resume(self, tmp_path):
+        from repro.train import checkpoint as ckpt
+        from repro.optim.optimizers import adamw
+        from repro.train.state import init_state
+
+        params = {"w": jnp.arange(12.0).reshape(3, 4)}
+        opt = adamw()
+        state = init_state(params, opt)
+        ckpt.save(str(tmp_path), 10, state)
+        ckpt.save(str(tmp_path), 20, state._replace(step=jnp.int32(20)))
+        assert ckpt.latest_step(str(tmp_path)) == 20
+        restored = ckpt.restore(str(tmp_path), 20, state)
+        assert int(restored.step) == 20
+        np.testing.assert_array_equal(np.asarray(restored.params["w"]),
+                                      np.asarray(params["w"]))
+
+    def test_incomplete_checkpoint_ignored(self, tmp_path):
+        from repro.train import checkpoint as ckpt
+        os.makedirs(tmp_path / "step_00000099")  # no MANIFEST
+        assert ckpt.latest_step(str(tmp_path)) is None
+
+    def test_prune_keeps_last(self, tmp_path):
+        from repro.train import checkpoint as ckpt
+        state = {"w": jnp.ones(3)}
+        for s in range(6):
+            ckpt.save(str(tmp_path), s, state, keep_last=3)
+        assert ckpt.complete_steps(str(tmp_path)) == [3, 4, 5]
+
+    def test_history_rides_in_extra(self, tmp_path):
+        from repro.train import checkpoint as ckpt
+        from repro.core.history import HistoryMeta, TrainingHistory
+        meta = HistoryMeta(n=10, batch_size=5, seed=0, steps=2,
+                           lr_schedule=((0, 0.1),))
+        h = TrainingHistory(meta, tier="host")
+        h.append({"w": jnp.ones(3)}, {"w": jnp.zeros(3)})
+        h.finalize({"w": jnp.ones(3)})
+        ckpt.save(str(tmp_path), 1, {"w": jnp.ones(2)},
+                  extra={"history": h.state_dict()})
+        extra = ckpt.restore_extra(str(tmp_path), 1)
+        h2 = TrainingHistory.from_state_dict(extra["history"])
+        assert len(h2) == 1
+
+
+class TestElasticStraggler:
+    def test_plan_remesh(self):
+        from repro.train.elastic import plan_remesh
+        d = plan_remesh(n_devices=128, model_parallel=16, global_batch=256)
+        assert d.ok and d.mesh_shape == (8, 16) and d.dropped_batch == 0
+        bad = plan_remesh(n_devices=100, model_parallel=16, global_batch=256)
+        assert not bad.ok
+
+    def test_plan_remesh_multipod(self):
+        from repro.train.elastic import plan_remesh
+        d = plan_remesh(n_devices=512, model_parallel=16, global_batch=256,
+                        multi_pod=True, pod_size=256)
+        assert d.ok and d.mesh_shape == (2, 16, 16)
+
+    def test_straggler_policy(self):
+        from repro.train.straggler import StragglerPolicy
+        pol = StragglerPolicy(tolerance=1.5, patience=2)
+        times = {0: 1.0, 1: 1.0, 2: 1.0, 3: 2.5}
+        assert pol.observe(times) == []  # first strike
+        assert pol.observe(times) == [3]  # second strike -> flagged
+        assert pol.reweight(3, 4) == pytest.approx(4 / 3)
+
+
+def test_train_driver_paper_model_runs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "paper-logreg",
+         "--steps", "30", "--n", "400", "--dim", "8", "--batch", "128"],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "speedup" in out.stdout
