@@ -7,9 +7,13 @@ headline plot, on the synthetic RCV1-stand-in.
 
 from __future__ import annotations
 
+import dataclasses
+import json
+import os
+
 import numpy as np
 
-from benchmarks.common import DG_CFG, emit, fitted_problem
+from benchmarks.common import DG_CFG, emit, fitted_problem, timeit
 from repro.core.deltagrad import baseline_retrain, deltagrad_retrain
 from repro.utils.tree import tree_norm, tree_sub
 
@@ -46,10 +50,66 @@ def run(mode: str = "delete"):
     return rows
 
 
+def run_engine(out_json: str = "BENCH_engine.json"):
+    """Scan engine vs the legacy per-step-dispatch loop (PR "unified compiled
+    replay engine").  Two regimes:
+
+      * dispatch_bound — small gradients, many steps: per-step jit dispatch
+        + history host reads dominate; this is where the scan engine's
+        one-program-per-segment design pays (the ISSUE's >= 2x bar);
+      * paper_scale    — the RCV1-like shape where gradient FLOPs dominate;
+        the engine must not be slower here.
+
+    Writes per-replay-step wall-clock for both impls to BENCH_engine.json so
+    later PRs have a perf trajectory.
+    """
+    results = {}
+    rows = []
+    regimes = {
+        "dispatch_bound": dict(n=2000, d=64, steps=200, batch=256, lr=0.3),
+        "paper_scale": {},  # benchmarks.common.BENCH defaults
+    }
+    for regime, overrides in regimes.items():
+        ds, obj, meta, p0, w_star, hist = fitted_problem(**overrides)
+        # the python timing must see the PRE-refactor layout (per-entry
+        # device history), not a stacked-storage one whose entry() reads
+        # would bill dynamic-slice dispatches to the legacy loop
+        from repro.core.deltagrad import sgd_train_with_cache
+        _, hist_py = sgd_train_with_cache(obj, p0, ds, meta, impl="python")
+        r = max(1, int(0.005 * meta.n))
+        changed = np.random.default_rng(2).choice(meta.n, r, replace=False)
+        entry = {"steps": meta.steps, "r": r, "n": meta.n}
+        for impl, h in (("scan", hist), ("python", hist_py)):
+            cfg = dataclasses.replace(DG_CFG, impl=impl)
+            w, stats = deltagrad_retrain(obj, h, ds, changed, cfg)  # warmup
+            sec = timeit(lambda: deltagrad_retrain(obj, h, ds, changed, cfg))
+            entry[impl] = {
+                "wall_s": sec,
+                "per_step_us": sec / meta.steps * 1e6,
+                "approx_steps": stats.approx_steps,
+                "explicit_steps": stats.explicit_steps,
+            }
+        entry["per_step_speedup"] = (entry["python"]["per_step_us"]
+                                     / max(entry["scan"]["per_step_us"], 1e-9))
+        results[regime] = entry
+        rows.append(emit(
+            f"engine_{regime}", entry["scan"]["wall_s"],
+            {"scan_us_per_step": f"{entry['scan']['per_step_us']:.1f}",
+             "python_us_per_step": f"{entry['python']['per_step_us']:.1f}",
+             "per_step_speedup": f"{entry['per_step_speedup']:.2f}"}))
+    if out_json:
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), out_json)
+        with open(path, "w") as f:
+            json.dump(results, f, indent=1)
+    return rows
+
+
 def main():
     out = []
     out += run("delete")
     out += run("add")
+    out += run_engine()
     return out
 
 

@@ -38,7 +38,11 @@ class UnlearnerConfig:
     lr_schedule: Optional[Sequence] = None  # overrides lr if given
     seed: int = 0
     deltagrad: DeltaGradConfig = field(default_factory=DeltaGradConfig)
-    history_tier: str = "device"
+    # None resolves to "stacked" (the engine's native tier, see core/engine),
+    # or to "host" — the codec-honoring offload tier — when history_codec is
+    # not "f32" (stacked storage is uncompressed by construction).  An
+    # EXPLICIT "stacked" + lossy codec is rejected by TrainingHistory.
+    history_tier: Optional[str] = None
     history_codec: str = "f32"
     spill_dir: Optional[str] = None
 
@@ -63,6 +67,9 @@ class Unlearner:
 
     def fit(self) -> Any:
         c = self.config
+        tier = c.history_tier
+        if tier is None:
+            tier = "host" if c.history_codec != "f32" else "stacked"
         meta = HistoryMeta(
             n=self.dataset.n,
             batch_size=min(c.batch_size, self.dataset.n),
@@ -76,7 +83,7 @@ class Unlearner:
             self.params0,
             self.dataset,
             meta,
-            tier=c.history_tier,
+            tier=tier,
             codec=c.history_codec,
             spill_dir=c.spill_dir,
         )

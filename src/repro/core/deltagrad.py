@@ -5,46 +5,43 @@ learning models", ICML 2020.  Notation follows the paper:
 
   w_t    — cached original iterates            (TrainingHistory)
   g_t    — cached (mini-)batch mean gradients  (TrainingHistory)
-  w^I_t  — DeltaGrad ("incrementally updated") iterates   (this module)
+  w^I_t  — DeltaGrad ("incrementally updated") iterates
   w^U_t  — exact retraining iterates ("BaseL", eq. (1)/(S6))
 
-Per retraining step t the engine replays the original minibatch B_t
-(`data.sampler` is a pure function of (seed, step)) and either
-
-  EXPLICIT  (t <= j0, or (t - j0) % T0 == 0, or Algorithm-4 guard fired):
-      evaluate the full-batch gradient at w^I_t exactly, record the pair
-      (dw, dg) = (w^I_t - w_t, g^I_t - g_t), step with the exact
-      leave-r-out gradient;
-
-  APPROX    (otherwise):
-      g^I_t ~= g_t + B_t (w^I_t - w_t)   with B_t the L-BFGS quasi-Hessian,
-      evaluate gradients only on the <= r removed (added) samples present in
-      B_t, and apply the leave-r-out (add-r) update — paper eq. (2)/(S7):
-
-        delete: w -= lr/(B-dB) * ( B * g^I_t - sum_{i in R cap B_t} grad F_i(w) )
-        add:    w -= lr/(B+dA) * ( B * g^I_t + sum_{i in A_t}       grad F_i(w) )
-
-All shapes are static under jit (padded batches + 0/1 weights), so the whole
-retraining run uses two compiled programs regardless of how r varies.
+This module holds the OBJECTIVE abstraction and the public entry points;
+the execution itself — vectorized schedule precomputation, scanned approx
+segments, stacked-history reads, the Pallas fused update — lives in
+`core.engine` (see its module docstring for the phase-by-phase mapping to
+the paper's Algorithms 1/3).  `DeltaGradConfig(impl="python")` selects the
+pre-refactor per-step loop, kept as the parity oracle.
 """
 
 from __future__ import annotations
 
-import math
-import time
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Re-exported so existing imports (`from repro.core.deltagrad import ...`)
+# keep working after the engine extraction.
+from repro.core.engine import (  # noqa: F401
+    DeltaGradConfig,
+    RetrainStats,
+    _approx_gradient,
+    _approx_update,
+    _momentum_apply,
+    _next_pow2,
+    _sgd_apply,
+    _tree_zeros,
+    run_baseline,
+    run_replay,
+    run_training,
+)
 from repro.core.history import HistoryMeta, TrainingHistory
-from repro.core.lbfgs import LbfgsBuffer, lbfgs_hvp_stacked_pytree
 from repro.data.dataset import Dataset
-from repro.data.sampler import addition_mask, batch_indices
-from repro.utils.tree import tree_all_finite, tree_norm, tree_sub
 
 
 # --------------------------------------------------------------------------
@@ -89,45 +86,7 @@ class Objective:
 
 
 # --------------------------------------------------------------------------
-# Config / stats
-# --------------------------------------------------------------------------
-
-
-@dataclass
-class DeltaGradConfig:
-    period: int = 5  # T0 — explicit gradient every T0 steps
-    burn_in: int = 10  # j0 — initial explicit steps
-    history_size: int = 2  # m — L-BFGS memory
-    curvature_eps: float = 0.0  # pair admission threshold (Alg. 4 guard)
-    guard: bool = False  # enable non-convex fallback checks
-    guard_norm_clip: float = 1e4  # fallback if ||Bv|| > clip * ||v||
-    removal_pad: int = 0  # 0 → auto (next pow2 of max per-batch overlap)
-
-    def is_explicit(self, t: int) -> bool:
-        if t <= self.burn_in:
-            return True
-        return (t - self.burn_in) % self.period == 0
-
-
-@dataclass
-class RetrainStats:
-    explicit_steps: int = 0
-    approx_steps: int = 0
-    guard_fallbacks: int = 0
-    skipped_steps: int = 0  # empty effective batch (paper: no update)
-    pairs_rejected: int = 0
-    grad_examples: int = 0  # per-example gradient evaluations (DeltaGrad)
-    grad_examples_baseline: int = 0  # what BaseL would have paid
-    wall_time_s: float = 0.0
-    extra: Dict[str, Any] = field(default_factory=dict)
-
-    @property
-    def theoretical_speedup(self) -> float:
-        return self.grad_examples_baseline / max(self.grad_examples, 1)
-
-
-# --------------------------------------------------------------------------
-# Original training with path caching
+# Entry points (thin frontends over core.engine)
 # --------------------------------------------------------------------------
 
 
@@ -139,26 +98,11 @@ def sgd_train_with_cache(
     tier: str = "device",
     codec: str = "f32",
     spill_dir: Optional[str] = None,
+    impl: str = "scan",
 ) -> Tuple[Any, TrainingHistory]:
     """Train w_t by plain SGD (the paper's optimizer), caching (w_t, g_t)."""
-    history = TrainingHistory(meta, tier=tier, codec=codec, spill_dir=spill_dir)
-    grad_fn = objective.make_grad_fn()
-    params = params0
-    vel = _tree_zeros(params0) if meta.momentum else None
-    ones = np.ones(min(meta.batch_size, meta.n), dtype=np.float32)
-    for t in range(meta.steps):
-        idx = batch_indices(meta.seed, t, meta.n, meta.batch_size)
-        batch = ds.take(idx)
-        g = grad_fn(params, batch, ones)
-        history.append(params, g)
-        if meta.momentum:
-            params, vel = _momentum_apply(params, vel, g,
-                                          jnp.float32(meta.lr_at(t)),
-                                          jnp.float32(meta.momentum))
-        else:
-            params = _sgd_apply(params, g, jnp.float32(meta.lr_at(t)))
-    history.finalize(params)
-    return params, history
+    return run_training(objective, params0, ds, meta, tier=tier, codec=codec,
+                        spill_dir=spill_dir, impl=impl)
 
 
 def baseline_retrain(
@@ -168,109 +112,12 @@ def baseline_retrain(
     params0,
     changed_idx: np.ndarray,
     mode: str = "delete",
+    impl: str = "scan",
 ) -> Tuple[Any, RetrainStats]:
     """BaseL: exact retraining from scratch on the modified dataset,
     replaying the original schedule (paper eq. (1) / (S6))."""
-    assert mode in ("delete", "add")
-    changed_idx = np.asarray(changed_idx, dtype=np.int64)
-    changed_set = set(changed_idx.tolist())
-    grad_fn = objective.make_grad_fn()
-    params = params0
-    vel = _tree_zeros(params0) if meta.momentum else None
-    stats = RetrainStats()
-    t0 = time.perf_counter()
-    B = min(meta.batch_size, meta.n)
-    n_add = len(changed_idx) if mode == "add" else 0
-    pad_to = B + (n_add if mode == "add" else 0)
-    for t in range(meta.steps):
-        idx = batch_indices(meta.seed, t, meta.n, meta.batch_size)
-        if mode == "delete":
-            keep = ~np.isin(idx, changed_idx)
-            eff = idx[keep]
-        else:
-            joins = addition_mask(meta.seed, t, meta.n, meta.batch_size, n_add)
-            eff = np.concatenate([idx, changed_idx[joins]])
-        if len(eff) == 0:
-            stats.skipped_steps += 1
-            continue
-        batch, weights = ds.padded_batch(eff, pad_to)
-        g = grad_fn(params, batch, weights)
-        if meta.momentum:
-            params, vel = _momentum_apply(params, vel, g,
-                                          jnp.float32(meta.lr_at(t)),
-                                          jnp.float32(meta.momentum))
-        else:
-            params = _sgd_apply(params, g, jnp.float32(meta.lr_at(t)))
-        stats.grad_examples += len(eff)
-    stats.wall_time_s = time.perf_counter() - t0
-    stats.explicit_steps = meta.steps
-    del changed_set
-    return params, stats
-
-
-# --------------------------------------------------------------------------
-# DeltaGrad retraining
-# --------------------------------------------------------------------------
-
-
-def _next_pow2(x: int) -> int:
-    return 1 << max(0, (x - 1)).bit_length()
-
-
-# Module-level jits shared across all retraining calls (no per-call closures
-# -> no recompiles; B/dB/clip are traced scalars, only `sign` is static).
-
-
-@partial(jax.jit, static_argnames=("sign",))
-def _approx_update(params, w_t, g_t, dWs, dGs, g_changed, lr, B, dB, clip,
-                   sign: int):
-    v = tree_sub(params, w_t)
-    bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v)
-    denom = jnp.maximum(B - sign * dB, 1.0)
-
-    def step(p, gt, b, gc):
-        g_apx = gt + b  # approximates full-batch mean grad at params
-        num = B * g_apx - sign * dB * gc
-        return p - lr * num / denom
-
-    new = jax.tree.map(step, params, g_t, bv, g_changed)
-    bn = tree_norm(bv)
-    vn = tree_norm(v)
-    ok = jnp.logical_and(tree_all_finite(new), bn <= clip * vn)
-    return new, ok
-
-
-@jax.jit
-def _sgd_apply(p, g, lr):
-    return jax.tree.map(lambda a, b: a - lr * b, p, g)
-
-
-@jax.jit
-def _momentum_apply(p, vel, g, lr, mom):
-    """Heavy-ball: vel <- mom*vel + g; p <- p - lr*vel. Returns (p, vel)."""
-    vel = jax.tree.map(lambda v, b: mom * v + b, vel, g)
-    return jax.tree.map(lambda a, v: a - lr * v, p, vel), vel
-
-
-@partial(jax.jit, static_argnames=("sign",))
-def _approx_gradient(params, w_t, g_t, dWs, dGs, g_changed, B, dB, clip,
-                     sign: int):
-    """The leave-r-out gradient ESTIMATE (paper eq. (2) numerator/denom),
-    without applying it — used by the momentum extension."""
-    v = tree_sub(params, w_t)
-    bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v)
-    denom = jnp.maximum(B - sign * dB, 1.0)
-    g_est = jax.tree.map(
-        lambda gt, b, gc: (B * (gt + b) - sign * dB * gc) / denom,
-        g_t, bv, g_changed)
-    ok = jnp.logical_and(tree_all_finite(g_est),
-                         tree_norm(bv) <= clip * tree_norm(v))
-    return g_est, ok
-
-
-@jax.jit
-def _tree_zeros(p):
-    return jax.tree.map(jnp.zeros_like, p)
+    return run_baseline(objective, ds, meta, params0, changed_idx, mode=mode,
+                        impl=impl)
 
 
 def deltagrad_retrain(
@@ -283,112 +130,5 @@ def deltagrad_retrain(
     params0=None,
 ) -> Tuple[Any, RetrainStats]:
     """Algorithm 1 (GD + SGD unified; GD == SGD with batch_size >= n)."""
-    assert mode in ("delete", "add")
-    meta = history.meta
-    changed_idx = np.asarray(changed_idx, dtype=np.int64)
-    r = len(changed_idx)
-    n, B = meta.n, min(meta.batch_size, meta.n)
-    grad_fn = objective.make_grad_fn()
-    buffer = LbfgsBuffer(cfg.history_size, curvature_eps=cfg.curvature_eps)
-
-    r_pad = cfg.removal_pad or _next_pow2(max(1, min(r, B)))
-    n_add = r if mode == "add" else 0
-    clip = jnp.float32(cfg.guard_norm_clip)
-    mom = jnp.float32(meta.momentum) if meta.momentum else None
-
-    params = params0 if params0 is not None else history.params_at(0)
-    vel = _tree_zeros(params) if meta.momentum else None
-    stats = RetrainStats()
-    t0 = time.perf_counter()
-
-    for t in range(meta.steps):
-        idx = batch_indices(meta.seed, t, n, meta.batch_size)
-        if mode == "delete":
-            kept_idx, changed_in = ds.split_batch(idx, removed_set=changed_idx)
-        else:
-            joins = addition_mask(meta.seed, t, n, meta.batch_size, n_add)
-            kept_idx, changed_in = idx, changed_idx[joins]
-        dB = len(changed_in)
-        k = len(kept_idx)
-        lr = jnp.float32(meta.lr_at(t))
-        stats.grad_examples_baseline += (k if mode == "delete" else k + dB)
-
-        if mode == "delete" and k == 0:
-            stats.skipped_steps += 1  # paper §3: B - dB_t == 0 → no update
-            continue
-
-        explicit = cfg.is_explicit(t)
-        w_t, g_t = history.entry(t)
-
-        if not explicit and len(buffer) == 0:
-            explicit = True  # nothing to approximate with yet
-
-        if not explicit:
-            # ---- approx step: gradients only on the changed samples --------
-            if dB > 0:
-                cb, cw = ds.padded_batch(changed_in, r_pad)
-                g_changed = grad_fn(params, cb, cw)
-                stats.grad_examples += dB
-            else:
-                g_changed = _tree_zeros(params)
-            dWs, dGs = buffer.stacked()
-            sign = 1 if mode == "delete" else -1
-            if mom is not None:
-                g_est, ok = _approx_gradient(
-                    params, w_t, g_t, dWs, dGs, g_changed,
-                    jnp.float32(B), jnp.float32(dB), clip, sign)
-                if cfg.guard and not bool(ok):
-                    stats.guard_fallbacks += 1
-                    explicit = True
-                else:
-                    params, vel = _momentum_apply(params, vel, g_est, lr, mom)
-                    stats.approx_steps += 1
-            else:
-                new_params, ok = _approx_update(
-                    params, w_t, g_t, dWs, dGs, g_changed, lr,
-                    jnp.float32(B), jnp.float32(dB), clip, sign
-                )
-                if cfg.guard and not bool(ok):
-                    stats.guard_fallbacks += 1
-                    explicit = True  # fall through to the explicit branch
-                else:
-                    params = new_params
-                    stats.approx_steps += 1
-
-        if explicit:
-            # ---- explicit step: full-batch gradient at w^I_t ---------------
-            kb, kw = ds.padded_batch(kept_idx, B if mode == "delete" else B + n_add)
-            g_kept = grad_fn(params, kb, kw)
-            if dB > 0:
-                cb, cw = ds.padded_batch(changed_in, r_pad)
-                g_changed = grad_fn(params, cb, cw)
-            else:
-                g_changed = _tree_zeros(params)
-            stats.grad_examples += k + dB
-
-            if mode == "delete":
-                # mean over the ORIGINAL batch (pair definition, §A.1.2)
-                g_full = jax.tree.map(
-                    lambda a, b: (k * a + dB * b) / float(B), g_kept, g_changed
-                )
-                g_step = g_kept  # mean over kept == leave-r-out update
-            else:
-                g_full = g_kept  # original batch == kept in add mode
-                g_step = jax.tree.map(
-                    lambda a, b: (B * a + dB * b) / float(B + dB), g_kept, g_changed
-                )
-
-            dw = tree_sub(params, w_t)
-            dg = tree_sub(g_full, g_t)
-            if not buffer.add(dw, dg):
-                stats.pairs_rejected += 1
-            if mom is not None:
-                params, vel = _momentum_apply(params, vel, g_step, lr, mom)
-            else:
-                params = _sgd_apply(params, g_step, lr)
-            stats.explicit_steps += 1
-
-    stats.wall_time_s = time.perf_counter() - t0
-    stats.extra["buffer_admitted"] = buffer.admitted
-    stats.extra["buffer_rejected"] = buffer.rejected
-    return params, stats
+    return run_replay(objective, history, ds, changed_idx, cfg, mode=mode,
+                      params0=params0)

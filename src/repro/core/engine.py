@@ -1,0 +1,953 @@
+"""Unified compiled replay engine — the DeltaGrad hot path as one program.
+
+Architecture (mapping to Wu et al., ICML 2020):
+
+  Phase 0  SCHEDULE      `data.sampler.build_schedule` precomputes the whole
+                         minibatch replay plan — (T, B) batch indices,
+                         removal/addition overlap masks, per-step learning
+                         rates — in one vectorized pass, then uploads it to
+                         the device once.  This is the paper's "replay the
+                         same minibatch sequence" assumption (§A.1.2) made a
+                         data structure.
+
+  Phase 1  RECORD        `run_training` — Algorithm 1's original SGD run,
+                         executed as a single `jax.lax.scan`; the scan's
+                         stacked outputs (w_t, g_t) ARE the optimization-path
+                         cache (TrainingHistory's ``stacked`` tier), so
+                         caching costs one device buffer instead of T host
+                         round-trips.
+
+  Phase 2  REPLAY        `run_replay` — Algorithm 1's retraining loop.
+                         Explicit steps (t <= j0, or every T0) stay host-
+                         driven because they mutate the L-BFGS pair buffer
+                         with curvature admission (Algorithm 4's check).
+                         Every maximal run of approx steps between two
+                         explicit steps executes as ONE `lax.scan` whose body
+                         reads (w_t, g_t) from the stacked history with
+                         `lax.dynamic_slice`, evaluates gradients only on the
+                         <= r changed rows present in B_t (the paper's eq.
+                         (2)/(S7) update), applies the quasi-Hessian
+                         correction B_t(w^I_t - w_t) via the compact L-BFGS
+                         operator (Algorithm 2), and resolves the Algorithm-4
+                         guard on-device with `lax.cond` — guard outcomes
+                         come back as one stacked flag vector read once at
+                         the end, never as a per-step blocking `bool()`.
+
+  Phase 2' ONLINE        `run_online` — Algorithm 3 (Appendix C.2): the same
+                         segment scan additionally emits the rewritten
+                         (w_t <- w^I_t, g_t <- g^a_t) pairs, which are
+                         written back into the stacked history with
+                         `lax.dynamic_update_slice`, keeping per-request cost
+                         independent of how many requests came before.
+
+  Phase 3  KERNEL        The non-momentum approx update is routed through
+                         the Pallas ``kernels/fused_update`` op on TPU (one
+                         HBM pass over the four parameter-sized operands);
+                         CPU and tests use the numerically identical
+                         ``ref.py`` oracle (or the kernel's interpret mode)
+                         on the same flattened operands.
+
+Execution backends: ``impl="scan"`` (this module's compiled path) and
+``impl="python"`` (the pre-refactor per-step loop, kept verbatim as the
+parity oracle and as the fallback for the disk history tier).  Numerics are
+identical to the legacy loop for guard-off runs; with the guard ON the scan
+path differs in two documented ways on guard-FALLBACK steps only: (1) the
+fallback applies the exact leave-r-out update but does not admit an L-BFGS
+pair mid-segment (the python loop does), since pair admission is host state;
+(2) `grad_examples` charges such steps their true cost kept+dB, where the
+python loop re-evaluates the changed-row gradient and charges kept+2*dB.
+
+Frontends: `core.deltagrad.{sgd_train_with_cache, baseline_retrain,
+deltagrad_retrain}` and `core.online.online_deltagrad` are thin wrappers
+over this module.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core.history import HistoryMeta, TrainingHistory
+from repro.core.lbfgs import LbfgsBuffer, lbfgs_hvp_stacked_pytree
+from repro.data.dataset import Dataset
+from repro.data.sampler import (ReplaySchedule, addition_mask,
+                                batch_indices, batch_indices_all,
+                                build_schedule)
+from repro.utils.tree import (tree_all_finite, tree_norm, tree_sub,
+                              tree_vdot)
+
+
+# --------------------------------------------------------------------------
+# Config / stats (the public dataclasses; re-exported by core.deltagrad)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class DeltaGradConfig:
+    period: int = 5  # T0 — explicit gradient every T0 steps
+    burn_in: int = 10  # j0 — initial explicit steps
+    history_size: int = 2  # m — L-BFGS memory
+    curvature_eps: float = 0.0  # pair admission threshold (Alg. 4 guard)
+    guard: bool = False  # enable non-convex fallback checks
+    guard_norm_clip: float = 1e4  # fallback if ||Bv|| > clip * ||v||
+    removal_pad: int = 0  # 0 → auto (next pow2 of max per-batch overlap)
+    impl: str = "scan"  # "scan" (compiled engine) | "python" (legacy loop)
+    fused: str = "auto"  # "auto" | "pallas" | "interpret" | "ref"
+
+    def is_explicit(self, t: int) -> bool:
+        if t <= self.burn_in:
+            return True
+        return (t - self.burn_in) % self.period == 0
+
+
+@dataclass
+class RetrainStats:
+    explicit_steps: int = 0
+    approx_steps: int = 0
+    guard_fallbacks: int = 0
+    skipped_steps: int = 0  # empty effective batch (paper: no update)
+    pairs_rejected: int = 0
+    grad_examples: int = 0  # per-example gradient evaluations (DeltaGrad)
+    grad_examples_baseline: int = 0  # what BaseL would have paid
+    wall_time_s: float = 0.0
+    extra: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def theoretical_speedup(self) -> float:
+        return self.grad_examples_baseline / max(self.grad_examples, 1)
+
+
+# --------------------------------------------------------------------------
+# Step plan
+# --------------------------------------------------------------------------
+
+SKIP, EXPLICIT, APPROX = 0, 1, 2
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1)).bit_length()
+
+
+def build_plan(cfg: DeltaGradConfig, sched: ReplaySchedule,
+               online: bool = False) -> np.ndarray:
+    """Per-step execution codes.  SKIP (empty effective batch, paper §3)
+    takes precedence over the explicit/approx cadence.  Batch mode skips any
+    emptied batch; online mode mirrors Algorithm 3's condition exactly — skip
+    only when the REQUEST row sits in a batch whose other rows are all gone
+    (kept == 0 and dB > 0); request-absent empty batches still execute, as
+    degenerate no-op/l2-only steps, matching the python oracle."""
+    T = sched.steps
+    codes = np.full(T, APPROX, dtype=np.int8)
+    for t in range(T):
+        if cfg.is_explicit(t):
+            codes[t] = EXPLICIT
+    if sched.mode == "delete":
+        empty = sched.kept <= 0
+        codes[empty & (sched.dB > 0) if online else empty] = SKIP
+    return codes
+
+
+class DeviceSchedule(NamedTuple):
+    """`ReplaySchedule` uploaded to the device once per retraining run."""
+
+    idx: jax.Array  # (T, B) i32
+    kept_w: jax.Array  # (T, B) f32
+    changed_idx: jax.Array  # (T, R) i32
+    changed_w: jax.Array  # (T, R) f32
+    dB: jax.Array  # (T,) f32
+    kept: jax.Array  # (T,) f32
+    lr: jax.Array  # (T,) f32
+
+
+def to_device(sched: ReplaySchedule, idx=None, lr=None) -> DeviceSchedule:
+    """Upload a schedule; pass already-uploaded `idx`/`lr` to reuse them
+    (they are request-invariant across an online stream)."""
+    return DeviceSchedule(
+        idx=jnp.asarray(sched.idx, dtype=jnp.int32) if idx is None else idx,
+        kept_w=jnp.asarray(sched.kept_w),
+        changed_idx=jnp.asarray(sched.changed_idx, dtype=jnp.int32),
+        changed_w=jnp.asarray(sched.changed_w),
+        dB=jnp.asarray(sched.dB),
+        kept=jnp.asarray(sched.kept),
+        lr=jnp.asarray(sched.lr) if lr is None else lr,
+    )
+
+
+def _gather(cols, rows):
+    return {k: c[rows] for k, c in cols.items()}
+
+
+# --------------------------------------------------------------------------
+# Update math (shared by scan bodies, host explicit steps and the python
+# oracle — one definition, identical numerics everywhere)
+# --------------------------------------------------------------------------
+
+
+def _sgd_math(p, g, lr):
+    return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+
+def _momentum_math(p, vel, g, lr, mom):
+    """Heavy-ball: vel <- mom*vel + g; p <- p - lr*vel."""
+    vel = jax.tree.map(lambda v, b: mom * v + b, vel, g)
+    return jax.tree.map(lambda a, v: a - lr * v, p, vel), vel
+
+
+@jax.jit
+def _sgd_apply(p, g, lr):
+    return _sgd_math(p, g, lr)
+
+
+@jax.jit
+def _momentum_apply(p, vel, g, lr, mom):
+    return _momentum_math(p, vel, g, lr, mom)
+
+
+@jax.jit
+def _tree_zeros(p):
+    return jax.tree.map(jnp.zeros_like, p)
+
+
+def _resolve_fused(fused: str) -> str:
+    assert fused in ("auto", "pallas", "interpret", "ref"), fused
+    if fused == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return fused
+
+
+def _flat_fused_update(params, g_t, bv, g_changed, lr, B, dB, sign: int,
+                       fused: str):
+    """Paper eq. (2)/(S7) on the FLATTENED parameter vector, through the
+    Pallas fused kernel (TPU), its interpret mode, or the jnp reference —
+    all three compute w - lr/(B - sign*dB) * (B*(g_t + Bv) - sign*dB*g_c)."""
+    from repro.kernels.fused_update.ops import update as fused_op
+    from repro.kernels.fused_update.ref import deltagrad_update_ref
+
+    w, unravel = ravel_pytree(params)
+    g, _ = ravel_pytree(g_t)
+    b, _ = ravel_pytree(bv)
+    c, _ = ravel_pytree(g_changed)
+    s = jnp.float32(sign)
+    if fused == "pallas":
+        out = fused_op(w, g, b, c, lr, B, dB, s)
+    elif fused == "interpret":
+        out = fused_op(w, g, b, c, lr, B, dB, s, interpret=True)
+    else:
+        out = deltagrad_update_ref(w, g, b, c, lr, B, dB, s)
+    return unravel(out)
+
+
+def _approx_math(g_t, bv, g_changed, B, dB, sign: int):
+    """The paper's eq. (2)/(S7) leave-r-out (add-r) gradient estimate
+    g^a = (B*(g_t + Bv) - sign*dB*g_c) / max(B - sign*dB, 1) — the ONE
+    definition shared by the python oracle, both scan bodies, and the online
+    rewrite (there with B = B_t(k), dB = 1{req in batch})."""
+    denom = jnp.maximum(B - sign * dB, 1.0)
+    return jax.tree.map(
+        lambda gt, b, gc: (B * (gt + b) - sign * dB * gc) / denom,
+        g_t, bv, g_changed)
+
+
+@partial(jax.jit, static_argnames=("sign",))
+def _approx_update(params, w_t, g_t, dWs, dGs, g_changed, lr, B, dB, clip,
+                   sign: int):
+    """Legacy tree-math approx step (python oracle path)."""
+    v = tree_sub(params, w_t)
+    bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v)
+    g_est = _approx_math(g_t, bv, g_changed, B, dB, sign)
+    new = jax.tree.map(lambda p, g: p - lr * g, params, g_est)
+    bn = tree_norm(bv)
+    vn = tree_norm(v)
+    ok = jnp.logical_and(tree_all_finite(new), bn <= clip * vn)
+    return new, ok
+
+
+@partial(jax.jit, static_argnames=("sign",))
+def _approx_gradient(params, w_t, g_t, dWs, dGs, g_changed, B, dB, clip,
+                     sign: int):
+    """The leave-r-out gradient ESTIMATE (eq. (2) numerator/denominator)
+    without applying it — the momentum extension needs the gradient."""
+    v = tree_sub(params, w_t)
+    bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v)
+    g_est = _approx_math(g_t, bv, g_changed, B, dB, sign)
+    ok = jnp.logical_and(tree_all_finite(g_est),
+                         tree_norm(bv) <= clip * tree_norm(v))
+    return g_est, ok
+
+
+@partial(jax.jit, static_argnames=("sign",))
+def _combine_explicit(g_kept, g_changed, k, dB, B, sign: int):
+    """(g_full, g_step): the pair-definition gradient over the ORIGINAL
+    batch and the leave-r-out / add-r update gradient (paper §A.1.2)."""
+    if sign > 0:  # delete
+        g_full = jax.tree.map(lambda a, b: (k * a + dB * b) / B,
+                              g_kept, g_changed)
+        g_step = g_kept
+    else:  # add
+        g_full = g_kept
+        g_step = jax.tree.map(lambda a, b: (B * a + dB * b) / (B + dB),
+                              g_kept, g_changed)
+    return g_full, g_step
+
+
+# --------------------------------------------------------------------------
+# Phase 1: RECORD — original training as one scan
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("grad_fn", "momentum"))
+def _train_scan(params0, vel0, cols, idx, lr, w_ones, mom, *, grad_fn,
+                momentum: bool):
+    def body(carry, xs):
+        params, vel = carry
+        rows, lr_t = xs
+        g = grad_fn(params, _gather(cols, rows), w_ones)
+        if momentum:
+            new_p, new_vel = _momentum_math(params, vel, g, lr_t, mom)
+        else:
+            new_p, new_vel = _sgd_math(params, g, lr_t), vel
+        return (new_p, new_vel), (params, g)
+
+    (pT, _), (Ws, Gs) = jax.lax.scan(body, (params0, vel0), (idx, lr))
+    return pT, Ws, Gs
+
+
+def run_training(
+    objective,
+    params0,
+    ds: Dataset,
+    meta: HistoryMeta,
+    tier: str = "device",
+    codec: str = "f32",
+    spill_dir: Optional[str] = None,
+    impl: str = "scan",
+) -> Tuple[Any, TrainingHistory]:
+    """Train w_t by plain SGD (the paper's optimizer), caching (w_t, g_t)."""
+    grad_fn = objective.make_grad_fn()
+    momentum = bool(meta.momentum)
+    vel = _tree_zeros(params0) if momentum else None
+    B = min(meta.batch_size, meta.n)
+    history = TrainingHistory(meta, tier=tier, codec=codec, spill_dir=spill_dir)
+
+    # host/disk tiers exist to keep the full path OUT of device memory, so
+    # they record per-entry; the scan recorder would materialize all T
+    # entries on device first.
+    if impl == "python" or tier in ("host", "disk"):
+        ones = np.ones(B, dtype=np.float32)
+        params = params0
+        for t in range(meta.steps):
+            idx = batch_indices(meta.seed, t, meta.n, meta.batch_size)
+            g = grad_fn(params, ds.take(idx), ones)
+            history.append(params, g)
+            if momentum:
+                params, vel = _momentum_apply(params, vel, g,
+                                              jnp.float32(meta.lr_at(t)),
+                                              jnp.float32(meta.momentum))
+            else:
+                params = _sgd_apply(params, g, jnp.float32(meta.lr_at(t)))
+        history.finalize(params)
+        return params, history
+
+    idx_all = batch_indices_all(meta.seed, meta.steps, meta.n, meta.batch_size)
+    lrs = np.asarray([meta.lr_at(t) for t in range(meta.steps)], np.float32)
+    cols = ds.device_columns()
+    params, Ws, Gs = _train_scan(
+        params0, vel, cols, jnp.asarray(idx_all, jnp.int32),
+        jnp.asarray(lrs), jnp.ones((B,), jnp.float32),
+        jnp.float32(meta.momentum), grad_fn=grad_fn, momentum=momentum)
+    history.set_stacked(Ws, Gs, final_params=params)
+    return params, history
+
+
+# --------------------------------------------------------------------------
+# BaseL: exact retraining from scratch, also one scan
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("grad_fn", "momentum", "mode"))
+def _baseline_scan(params0, vel0, cols, sd: DeviceSchedule, mom, *, grad_fn,
+                   momentum: bool, mode: str):
+    def body(carry, t):
+        params, vel = carry
+        if mode == "delete":
+            batch = _gather(cols, sd.idx[t])
+            w = sd.kept_w[t]
+        else:
+            batch = {k: jnp.concatenate([c[sd.idx[t]], c[sd.changed_idx[t]]])
+                     for k, c in cols.items()}
+            w = jnp.concatenate([sd.kept_w[t], sd.changed_w[t]])
+        g = grad_fn(params, batch, w)
+        if momentum:
+            new_p, new_vel = _momentum_math(params, vel, g, sd.lr[t], mom)
+        else:
+            new_p, new_vel = _sgd_math(params, g, sd.lr[t]), vel
+        upd = sd.kept[t] > 0 if mode == "delete" else jnp.bool_(True)
+        new_p = jax.tree.map(lambda n, o: jnp.where(upd, n, o), new_p, params)
+        if momentum:
+            new_vel = jax.tree.map(lambda n, o: jnp.where(upd, n, o),
+                                   new_vel, vel)
+        return (new_p, new_vel), None
+
+    T = sd.idx.shape[0]
+    (pT, _), _ = jax.lax.scan(body, (params0, vel0), jnp.arange(T))
+    return pT
+
+
+def run_baseline(
+    objective,
+    ds: Dataset,
+    meta: HistoryMeta,
+    params0,
+    changed_idx: np.ndarray,
+    mode: str = "delete",
+    impl: str = "scan",
+) -> Tuple[Any, RetrainStats]:
+    """BaseL: exact retraining on the modified dataset, replaying the
+    original schedule (paper eq. (1) / (S6))."""
+    assert mode in ("delete", "add")
+    changed_idx = np.asarray(changed_idx, dtype=np.int64)
+    grad_fn = objective.make_grad_fn()
+    momentum = bool(meta.momentum)
+    stats = RetrainStats()
+    t0 = time.perf_counter()
+    r_pad = _next_pow2(max(1, len(changed_idx)))
+    sched = build_schedule(meta.seed, meta.steps, meta.n, meta.batch_size,
+                           changed_idx, mode, r_pad, meta.lr_at)
+
+    eff = sched.kept.astype(np.int64) \
+        + (sched.dB.astype(np.int64) if mode == "add" else 0)
+    nonskip = eff > 0
+    stats.grad_examples = int(eff[nonskip].sum())
+    stats.skipped_steps = int((~nonskip).sum())
+    stats.explicit_steps = meta.steps
+
+    if impl == "python":
+        params = params0
+        vel = _tree_zeros(params0) if momentum else None
+        B = min(meta.batch_size, meta.n)
+        n_add = len(changed_idx) if mode == "add" else 0
+        pad_to = B + n_add
+        for t in range(meta.steps):
+            idx = batch_indices(meta.seed, t, meta.n, meta.batch_size)
+            if mode == "delete":
+                eff_t = idx[~np.isin(idx, changed_idx)]
+            else:
+                joins = addition_mask(meta.seed, t, meta.n, meta.batch_size,
+                                      n_add)
+                eff_t = np.concatenate([idx, changed_idx[joins]])
+            if len(eff_t) == 0:
+                continue
+            batch, weights = ds.padded_batch(eff_t, pad_to)
+            g = grad_fn(params, batch, weights)
+            if momentum:
+                params, vel = _momentum_apply(params, vel, g,
+                                              jnp.float32(meta.lr_at(t)),
+                                              jnp.float32(meta.momentum))
+            else:
+                params = _sgd_apply(params, g, jnp.float32(meta.lr_at(t)))
+        stats.wall_time_s = time.perf_counter() - t0
+        return params, stats
+
+    vel = _tree_zeros(params0) if momentum else None
+    params = _baseline_scan(params0, vel, ds.device_columns(),
+                            to_device(sched), jnp.float32(meta.momentum),
+                            grad_fn=grad_fn, momentum=momentum, mode=mode)
+    jax.block_until_ready(params)
+    stats.wall_time_s = time.perf_counter() - t0
+    return params, stats
+
+
+# --------------------------------------------------------------------------
+# Phase 2: REPLAY — Algorithm 1 with scanned approx segments
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum", "guard",
+                                   "fused", "span"))
+def _replay_segment(params, vel, t0, W, G, cols, sd: DeviceSchedule, dWs, dGs,
+                    B, clip, mom, *, grad_fn, sign: int, momentum: bool,
+                    guard: bool, fused: str, span: int):
+    """One approx segment [t0, t0+span) as a single scan.
+
+    Per step: dynamic-slice (w_t, g_t) out of the stacked history, gradient
+    on the <= R changed rows only, compact L-BFGS correction, fused update.
+    The Algorithm-4 guard is a `lax.cond`: the fallback branch applies the
+    exact leave-r-out update from the precomputed kept-row weights (it does
+    NOT admit an L-BFGS pair — host state; see module docstring)."""
+
+    def body(carry, t):
+        params, vel = carry
+        w_t = jax.tree.map(lambda x: x[t], W)
+        g_t = jax.tree.map(lambda x: x[t], G)
+        lr, dB, kept = sd.lr[t], sd.dB[t], sd.kept[t]
+        has = (dB > 0).astype(jnp.float32)
+        g_changed = jax.tree.map(
+            lambda x: has * x,
+            grad_fn(params, _gather(cols, sd.changed_idx[t]),
+                    sd.changed_w[t]))
+        v = tree_sub(params, w_t)
+        bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v)
+        guard_ok = tree_norm(bv) <= clip * tree_norm(v)
+        if momentum:
+            g_est = _approx_math(g_t, bv, g_changed, B, dB, sign)
+            ok = jnp.logical_and(tree_all_finite(g_est), guard_ok)
+            new_p, new_vel = _momentum_math(params, vel, g_est, lr, mom)
+        else:
+            new_p = _flat_fused_update(params, g_t, bv, g_changed, lr, B, dB,
+                                       sign, fused)
+            ok = jnp.logical_and(tree_all_finite(new_p), guard_ok)
+            new_vel = vel
+
+        if guard:
+            def fallback(_):
+                g_kept = grad_fn(params, _gather(cols, sd.idx[t]),
+                                 sd.kept_w[t])
+                if sign > 0:
+                    g_step = g_kept
+                else:
+                    g_step = jax.tree.map(
+                        lambda a, b: (B * a + dB * b) / (B + dB),
+                        g_kept, g_changed)
+                if momentum:
+                    return _momentum_math(params, vel, g_step, lr, mom)
+                return _sgd_math(params, g_step, lr), vel
+
+            new_p, new_vel = jax.lax.cond(
+                ok, lambda _: (new_p, new_vel), fallback, None)
+
+        upd = kept > 0 if sign > 0 else jnp.bool_(True)
+        new_p = jax.tree.map(lambda n, o: jnp.where(upd, n, o), new_p, params)
+        new_vel = jax.tree.map(lambda n, o: jnp.where(upd, n, o), new_vel, vel)
+        return (new_p, new_vel), ok
+
+    (params, vel), oks = jax.lax.scan(body, (params, vel),
+                                      t0 + jnp.arange(span))
+    return params, vel, oks
+
+
+def run_replay(
+    objective,
+    history: TrainingHistory,
+    ds: Dataset,
+    changed_idx: np.ndarray,
+    cfg: DeltaGradConfig,
+    mode: str = "delete",
+    params0=None,
+) -> Tuple[Any, RetrainStats]:
+    """Algorithm 1 (GD + SGD unified; GD == SGD with batch_size >= n)."""
+    assert mode in ("delete", "add")
+    impl = cfg.impl
+    if impl == "scan" and history.tier in ("host", "disk"):
+        # the offload tiers promise the cache does NOT live on device;
+        # stacking it there for the scan would defeat them (ROADMAP: stream
+        # segments host->device instead)
+        impl = "python"
+    if impl == "python":
+        return _run_replay_python(objective, history, ds, changed_idx, cfg,
+                                  mode, params0)
+
+    meta = history.meta
+    changed_idx = np.asarray(changed_idx, dtype=np.int64)
+    r = len(changed_idx)
+    B = min(meta.batch_size, meta.n)
+    grad_fn = objective.make_grad_fn()
+    momentum = bool(meta.momentum)
+    sign = 1 if mode == "delete" else -1
+    fused = _resolve_fused(cfg.fused)
+    r_pad = cfg.removal_pad or _next_pow2(max(1, min(r, B)))
+
+    t_start = time.perf_counter()
+    sched = build_schedule(meta.seed, meta.steps, meta.n, meta.batch_size,
+                           changed_idx, mode, r_pad, meta.lr_at)
+    plan = build_plan(cfg, sched)
+    sd = to_device(sched)
+    cols = ds.device_columns()
+    W, G = history.stacked_view()
+    buffer = LbfgsBuffer(cfg.history_size, curvature_eps=cfg.curvature_eps)
+
+    params = params0 if params0 is not None else history.params_at(0)
+    vel = _tree_zeros(params) if momentum else None
+    Bf = jnp.float32(B)
+    clip = jnp.float32(cfg.guard_norm_clip)
+    mom = jnp.float32(meta.momentum)
+    stats = RetrainStats()
+    T = meta.steps
+    seg_oks: List[Tuple[int, int, Any]] = []  # (t0, t1, device flags)
+
+    t = 0
+    while t < T:
+        code = plan[t]
+        if code == EXPLICIT or (code == APPROX and len(buffer) == 0):
+            params, vel = _host_explicit_step(
+                grad_fn, buffer, params, vel, t, W, G, cols, sd,
+                float(sched.kept[t]), float(sched.dB[t]), Bf, mom, sign,
+                momentum, stats)
+            t += 1
+        elif code == SKIP and len(buffer) == 0:
+            t += 1
+        else:
+            t2 = t
+            while t2 < T and plan[t2] != EXPLICIT:
+                t2 += 1
+            dWs, dGs = buffer.stacked()
+            params, vel, oks = _replay_segment(
+                params, vel, jnp.int32(t), W, G, cols, sd, dWs, dGs, Bf,
+                clip, mom, grad_fn=grad_fn, sign=sign, momentum=momentum,
+                guard=cfg.guard, fused=fused, span=t2 - t)
+            seg_oks.append((t, t2, oks))
+            t = t2
+
+    # counters resolved once at the end — no per-step host syncs
+    for t0_, t1_, oks in seg_oks:
+        oks = np.asarray(oks)
+        nonskip = plan[t0_:t1_] != SKIP
+        kept_i = sched.kept[t0_:t1_].astype(np.int64)
+        dB_i = sched.dB[t0_:t1_].astype(np.int64)
+        if cfg.guard:
+            fell = nonskip & ~oks
+            stats.approx_steps += int((nonskip & oks).sum())
+            stats.guard_fallbacks += int(fell.sum())
+            # fallback steps applied the exact update — count them as
+            # explicit, matching the python oracle's accounting
+            stats.explicit_steps += int(fell.sum())
+            stats.grad_examples += int(kept_i[fell].sum())
+        else:
+            stats.approx_steps += int(nonskip.sum())
+        stats.grad_examples += int(dB_i[nonskip].sum())
+    stats.skipped_steps = int((plan == SKIP).sum())
+    base = sched.kept.astype(np.int64) if mode == "delete" \
+        else sched.kept.astype(np.int64) + sched.dB.astype(np.int64)
+    stats.grad_examples_baseline = int(base.sum())
+    jax.block_until_ready(params)
+    stats.wall_time_s = time.perf_counter() - t_start
+    stats.extra["buffer_admitted"] = buffer.admitted
+    stats.extra["buffer_rejected"] = buffer.rejected
+    stats.extra["impl"] = "scan"
+    stats.extra["fused"] = fused
+    return params, stats
+
+
+@partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum"))
+def _explicit_step(params, vel, t, W, G, cols, sd: DeviceSchedule, B, mom, *,
+                   grad_fn, sign: int, momentum: bool):
+    """The whole explicit step as ONE program: history slice, kept + changed
+    gradients, pair construction (with the Algorithm-4 admission inner
+    products), and the parameter update.  The host only syncs the two
+    admission scalars — one round-trip per explicit step."""
+    w_t = jax.tree.map(lambda x: x[t], W)
+    g_t = jax.tree.map(lambda x: x[t], G)
+    k, dB, lr = sd.kept[t], sd.dB[t], sd.lr[t]
+    g_kept = grad_fn(params, _gather(cols, sd.idx[t]), sd.kept_w[t])
+    has = (dB > 0).astype(jnp.float32)
+    g_changed = jax.tree.map(
+        lambda x: has * x,
+        grad_fn(params, _gather(cols, sd.changed_idx[t]), sd.changed_w[t]))
+    g_full, g_step = _combine_explicit(g_kept, g_changed, k, dB, B, sign)
+    dw = tree_sub(params, w_t)
+    dg = tree_sub(g_full, g_t)
+    admit = jnp.stack([tree_vdot(dg, dw), tree_vdot(dw, dw)])
+    if momentum:
+        new_p, new_vel = _momentum_math(params, vel, g_step, lr, mom)
+    else:
+        new_p, new_vel = _sgd_math(params, g_step, lr), vel
+    return new_p, new_vel, dw, dg, admit
+
+
+def _host_explicit_step(grad_fn, buffer, params, vel, t, W, G, cols, sd,
+                        k, dB, Bf, mom, sign, momentum, stats):
+    """One explicit step (host-driven: it mutates the L-BFGS buffer)."""
+    params, vel, dw, dg, admit = _explicit_step(
+        params, vel, t, W, G, cols, sd, Bf, mom, grad_fn=grad_fn, sign=sign,
+        momentum=momentum)
+    curv, ss = np.asarray(admit)
+    if not buffer.add_pair(dw, dg, float(curv), float(ss)):
+        stats.pairs_rejected += 1
+    stats.grad_examples += int(k + dB)
+    stats.explicit_steps += 1
+    return params, vel
+
+
+def _run_replay_python(objective, history, ds, changed_idx, cfg, mode,
+                       params0):
+    """The pre-refactor per-step loop, verbatim — parity oracle + disk tier."""
+    meta = history.meta
+    changed_idx = np.asarray(changed_idx, dtype=np.int64)
+    r = len(changed_idx)
+    n, B = meta.n, min(meta.batch_size, meta.n)
+    grad_fn = objective.make_grad_fn()
+    buffer = LbfgsBuffer(cfg.history_size, curvature_eps=cfg.curvature_eps)
+
+    r_pad = cfg.removal_pad or _next_pow2(max(1, min(r, B)))
+    n_add = r if mode == "add" else 0
+    clip = jnp.float32(cfg.guard_norm_clip)
+    mom = jnp.float32(meta.momentum) if meta.momentum else None
+
+    params = params0 if params0 is not None else history.params_at(0)
+    vel = _tree_zeros(params) if meta.momentum else None
+    stats = RetrainStats()
+    t0 = time.perf_counter()
+
+    for t in range(meta.steps):
+        idx = batch_indices(meta.seed, t, n, meta.batch_size)
+        if mode == "delete":
+            kept_idx, changed_in = ds.split_batch(idx, removed_set=changed_idx)
+        else:
+            joins = addition_mask(meta.seed, t, n, meta.batch_size, n_add)
+            kept_idx, changed_in = idx, changed_idx[joins]
+        dB = len(changed_in)
+        k = len(kept_idx)
+        lr = jnp.float32(meta.lr_at(t))
+        stats.grad_examples_baseline += (k if mode == "delete" else k + dB)
+
+        if mode == "delete" and k == 0:
+            stats.skipped_steps += 1  # paper §3: B - dB_t == 0 → no update
+            continue
+
+        explicit = cfg.is_explicit(t)
+        w_t, g_t = history.entry(t)
+
+        if not explicit and len(buffer) == 0:
+            explicit = True  # nothing to approximate with yet
+
+        if not explicit:
+            # ---- approx step: gradients only on the changed samples --------
+            if dB > 0:
+                cb, cw = ds.padded_batch(changed_in, r_pad)
+                g_changed = grad_fn(params, cb, cw)
+                stats.grad_examples += dB
+            else:
+                g_changed = _tree_zeros(params)
+            dWs, dGs = buffer.stacked()
+            sign = 1 if mode == "delete" else -1
+            if mom is not None:
+                g_est, ok = _approx_gradient(
+                    params, w_t, g_t, dWs, dGs, g_changed,
+                    jnp.float32(B), jnp.float32(dB), clip, sign)
+                if cfg.guard and not bool(ok):
+                    stats.guard_fallbacks += 1
+                    explicit = True
+                else:
+                    params, vel = _momentum_apply(params, vel, g_est, lr, mom)
+                    stats.approx_steps += 1
+            else:
+                new_params, ok = _approx_update(
+                    params, w_t, g_t, dWs, dGs, g_changed, lr,
+                    jnp.float32(B), jnp.float32(dB), clip, sign
+                )
+                if cfg.guard and not bool(ok):
+                    stats.guard_fallbacks += 1
+                    explicit = True  # fall through to the explicit branch
+                else:
+                    params = new_params
+                    stats.approx_steps += 1
+
+        if explicit:
+            # ---- explicit step: full-batch gradient at w^I_t ---------------
+            kb, kw = ds.padded_batch(kept_idx,
+                                     B if mode == "delete" else B + n_add)
+            g_kept = grad_fn(params, kb, kw)
+            if dB > 0:
+                cb, cw = ds.padded_batch(changed_in, r_pad)
+                g_changed = grad_fn(params, cb, cw)
+            else:
+                g_changed = _tree_zeros(params)
+            stats.grad_examples += k + dB
+
+            if mode == "delete":
+                # mean over the ORIGINAL batch (pair definition, §A.1.2)
+                g_full = jax.tree.map(
+                    lambda a, b: (k * a + dB * b) / float(B), g_kept, g_changed
+                )
+                g_step = g_kept  # mean over kept == leave-r-out update
+            else:
+                g_full = g_kept  # original batch == kept in add mode
+                g_step = jax.tree.map(
+                    lambda a, b: (B * a + dB * b) / float(B + dB),
+                    g_kept, g_changed
+                )
+
+            dw = tree_sub(params, w_t)
+            dg = tree_sub(g_full, g_t)
+            if not buffer.add(dw, dg):
+                stats.pairs_rejected += 1
+            if mom is not None:
+                params, vel = _momentum_apply(params, vel, g_step, lr, mom)
+            else:
+                params = _sgd_apply(params, g_step, lr)
+            stats.explicit_steps += 1
+
+    stats.wall_time_s = time.perf_counter() - t0
+    stats.extra["buffer_admitted"] = buffer.admitted
+    stats.extra["buffer_rejected"] = buffer.rejected
+    stats.extra["impl"] = "python"
+    return params, stats
+
+
+# --------------------------------------------------------------------------
+# Phase 2': ONLINE — Algorithm 3 with history rewrite in the scan
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("grad_fn", "guard", "span"))
+def _online_segment(params, t0, W, G, cols, sd: DeviceSchedule, dWs, dGs,
+                    clip, *, grad_fn, guard: bool, span: int):
+    """Online-deletion approx segment: like `_replay_segment` but with the
+    per-step effective batch size B_t(k) = kept + dB (paper's n-k
+    bookkeeping) and emitting the rewrite pairs (w_t <- w^I_t, g_t <- g^a_t,
+    eq. (S62)) as stacked scan outputs."""
+
+    def body(params, t):
+        w_t = jax.tree.map(lambda x: x[t], W)
+        g_t = jax.tree.map(lambda x: x[t], G)
+        lr, dB, kept = sd.lr[t], sd.dB[t], sd.kept[t]
+        eff_prev = kept + dB
+        has = (dB > 0).astype(jnp.float32)
+        g_one = jax.tree.map(
+            lambda x: has * x,
+            grad_fn(params, _gather(cols, sd.changed_idx[t]),
+                    sd.changed_w[t]))
+        v = tree_sub(params, w_t)
+        bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v)
+        g_new = _approx_math(g_t, bv, g_one, eff_prev, has, 1)
+        new_p = _sgd_math(params, g_new, lr)
+        ok = jnp.logical_and(tree_all_finite(new_p),
+                             tree_norm(bv) <= clip * tree_norm(v))
+
+        if guard:
+            def fallback(_):
+                g_cur = grad_fn(params, _gather(cols, sd.idx[t]),
+                                sd.kept_w[t])
+                return _sgd_math(params, g_cur, lr), g_cur
+
+            new_p, g_new = jax.lax.cond(
+                ok, lambda _: (new_p, g_new), fallback, None)
+
+        skip = jnp.logical_and(kept <= 0, dB > 0)  # Algorithm 3's condition
+        new_p = jax.tree.map(lambda n, o: jnp.where(skip, o, n), new_p, params)
+        w_wr = jax.tree.map(lambda n, o: jnp.where(skip, o, n), params, w_t)
+        g_wr = jax.tree.map(lambda n, o: jnp.where(skip, o, n), g_new, g_t)
+        return new_p, (w_wr, g_wr, ok)
+
+    params, (w_writes, g_writes, oks) = jax.lax.scan(
+        body, params, t0 + jnp.arange(span))
+    return params, w_writes, g_writes, oks
+
+
+@jax.jit
+def _write_segment(W, G, w_writes, g_writes, t0):
+    upd = partial(jax.lax.dynamic_update_slice_in_dim, axis=0)
+    return (jax.tree.map(lambda x, u: upd(x, u.astype(x.dtype), t0), W,
+                         w_writes),
+            jax.tree.map(lambda x, u: upd(x, u.astype(x.dtype), t0), G,
+                         g_writes))
+
+
+@jax.jit
+def _write_entry(W, G, t, w, g):
+    return (jax.tree.map(lambda x, v: x.at[t].set(v), W, w),
+            jax.tree.map(lambda x, v: x.at[t].set(v), G, g))
+
+
+@partial(jax.jit, static_argnames=("grad_fn",))
+def _online_explicit_step(params, t, W, G, cols, sd: DeviceSchedule, *,
+                          grad_fn):
+    """Online explicit step fused into one program: post-request gradient,
+    PRE-request pair gradient, cache rewrite at t, and the SGD step.  Only
+    the two L-BFGS admission scalars return to the host."""
+    w_t = jax.tree.map(lambda x: x[t], W)
+    g_t = jax.tree.map(lambda x: x[t], G)
+    kept, dB, lr = sd.kept[t], sd.dB[t], sd.lr[t]
+    g_cur = grad_fn(params, _gather(cols, sd.idx[t]), sd.kept_w[t])
+    has = (dB > 0).astype(jnp.float32)
+    g_one = jax.tree.map(
+        lambda x: has * x,
+        grad_fn(params, _gather(cols, sd.changed_idx[t]), sd.changed_w[t]))
+    # pair: gradient over the PRE-request batch at params (exact g_cur when
+    # the request row is absent from batch t)
+    g_prev = jax.tree.map(
+        lambda a, b: jnp.where(has > 0, (kept * a + b) / (kept + dB), a),
+        g_cur, g_one)
+    dw = tree_sub(params, w_t)
+    dg = tree_sub(g_prev, g_t)
+    admit = jnp.stack([tree_vdot(dg, dw), tree_vdot(dw, dw)])
+    W, G = _write_entry(W, G, t, params, g_cur)
+    return _sgd_math(params, g_cur, lr), W, G, dw, dg, admit
+
+
+def run_online_request(
+    grad_fn,
+    history: TrainingHistory,
+    W, G,
+    cols,
+    req: int,
+    cfg: DeltaGradConfig,
+    live_mask: np.ndarray,
+    idx_all: np.ndarray,
+    static_dev: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[Any, Any, Any, RetrainStats]:
+    """One deletion request against the current (stacked) cached path.
+    Returns (params, W', G', stats); the caller flushes W'/G' into history.
+    `static_dev` is the request-invariant (idx, lr) pair already on device —
+    pass it so a stream uploads the (T, B) schedule once, not per request."""
+    meta = history.meta
+    sched = build_schedule(meta.seed, meta.steps, meta.n, meta.batch_size,
+                           np.asarray([req], np.int64), "delete", 1,
+                           meta.lr_at, idx_all=idx_all, live_mask=live_mask)
+    plan = build_plan(cfg, sched, online=True)
+    sd = to_device(sched, *(static_dev or (None, None)))
+    buffer = LbfgsBuffer(cfg.history_size, curvature_eps=cfg.curvature_eps)
+    params = jax.tree.map(lambda x: x[0], W)  # w_0 is never rewritten
+    clip = jnp.float32(cfg.guard_norm_clip)
+    stats = RetrainStats()
+    T = meta.steps
+    seg_oks: List[Tuple[int, int, Any]] = []
+
+    t = 0
+    while t < T:
+        code = plan[t]
+        if code == EXPLICIT or (code == APPROX and len(buffer) == 0):
+            params, W, G, dw, dg, admit = _online_explicit_step(
+                params, t, W, G, cols, sd, grad_fn=grad_fn)
+            curv, ss = np.asarray(admit)
+            buffer.add_pair(dw, dg, float(curv), float(ss))
+            stats.grad_examples += int(sched.kept[t])
+            stats.explicit_steps += 1
+            t += 1
+        elif code == SKIP and len(buffer) == 0:
+            t += 1
+        else:
+            t2 = t
+            while t2 < T and plan[t2] != EXPLICIT:
+                t2 += 1
+            dWs, dGs = buffer.stacked()
+            params, w_wr, g_wr, oks = _online_segment(
+                params, jnp.int32(t), W, G, cols, sd, dWs, dGs, clip,
+                grad_fn=grad_fn, guard=cfg.guard, span=t2 - t)
+            W, G = _write_segment(W, G, w_wr, g_wr, jnp.int32(t))
+            seg_oks.append((t, t2, oks))
+            t = t2
+
+    for t0_, t1_, oks in seg_oks:
+        oks = np.asarray(oks)
+        nonskip = plan[t0_:t1_] != SKIP
+        if cfg.guard:
+            fell = nonskip & ~oks
+            stats.approx_steps += int((nonskip & oks).sum())
+            stats.guard_fallbacks += int(fell.sum())
+            stats.explicit_steps += int(fell.sum())  # exact update applied
+            stats.grad_examples += int(
+                sched.kept[t0_:t1_].astype(np.int64)[fell].sum())
+        else:
+            stats.approx_steps += int(nonskip.sum())
+        stats.grad_examples += int(
+            sched.dB[t0_:t1_].astype(np.int64)[nonskip].sum())
+    stats.skipped_steps = int((plan == SKIP).sum())
+    stats.grad_examples_baseline = int(sched.kept.astype(np.int64).sum())
+    return params, W, G, stats

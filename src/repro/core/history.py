@@ -7,12 +7,21 @@ DeltaGrad needs, for every original training step ``t``:
     size, dataset size, learning-rate schedule).
 
 Storage tiers (per-entry, selectable):
-  * ``device`` — entries stay as JAX arrays (sharded exactly like the live
+  * ``stacked`` — ONE device pytree per quantity with a leading time axis
+    (``w[t] == Ws_leaf[t]``).  This is the replay engine's native format:
+    approx segments run under ``jax.lax.scan`` and read entries with
+    ``lax.dynamic_slice`` without any host round-trip (see core/engine.py),
+  * ``device`` — per-entry JAX arrays (sharded exactly like the live
     parameters; right choice on a TPU mesh where each host holds 1/N of
     every entry),
   * ``host``   — entries are pulled to host numpy (paper's choice; frees HBM),
   * ``disk``   — chunked ``.npz`` spill with an in-memory LRU window (long
     training runs; participates in checkpoint/restart).
+
+Any tier can produce the stacked view on demand via ``stacked_view()``
+(cached; invalidated by ``append``/``overwrite``) and be bulk-rewritten from
+it via ``replace_from_stacked`` — the online engine edits the stacked arrays
+functionally during a request and flushes after each request.
 
 Optional compression codecs trade cache size for a tiny, quantifiable
 perturbation of the cached path (bf16: 2x; int8 + per-leaf scale: ~4x) —
@@ -128,7 +137,13 @@ class TrainingHistory:
         spill_dir: Optional[str] = None,
         lru_window: int = 64,
     ):
-        assert tier in ("device", "host", "disk")
+        assert tier in ("stacked", "device", "host", "disk")
+        # compression codecs apply where entries are re-encoded (host/disk);
+        # stacked storage keeps what the engine produced, uncompressed
+        # (the pre-existing device tier also ignores codecs, kept permissive
+        # for backwards compatibility)
+        assert codec == "f32" or tier != "stacked", (
+            f"codec={codec!r} has no effect on tier='stacked'")
         self.meta = meta
         self.tier = tier
         self.codec: Codec = CODECS[codec]()
@@ -137,24 +152,36 @@ class TrainingHistory:
         self._params: List[Any] = []
         self._grads: List[Any] = []
         self._disk_paths: List[Optional[str]] = []
+        self._stacked: Optional[Tuple[Any, Any]] = None  # (Ws, Gs), T leading
+        self._stacked_len: int = 0
+        # overwrite()s against stacked storage buffered here (t -> (w, g));
+        # folded into ONE batched scatter on the next stacked read, so a
+        # per-step rewrite loop costs O(T*P) total, not O(T^2*P)
+        self._pending_over: Dict[int, Tuple[Any, Any]] = {}
         self.final_params = None
         if tier == "disk":
             assert spill_dir is not None, "disk tier requires spill_dir"
             os.makedirs(spill_dir, exist_ok=True)
 
     def __len__(self) -> int:
-        return len(self._params)
+        return self._stacked_len + len(self._params)
 
     # -- write path --------------------------------------------------------
 
     def append(self, params, grad) -> None:
         t = len(self._params)
-        if self.tier == "device":
+        if self._stacked_is_storage:
+            # buffered; merged into the stacked arrays on the next read
             self._params.append(params)
             self._grads.append(grad)
+        elif self.tier == "device":
+            self._params.append(params)
+            self._grads.append(grad)
+            self._stacked = None
         else:
             enc_p = self.codec.encode(params)
             enc_g = self.codec.encode(grad)
+            self._stacked = None
             if self.tier == "host":
                 self._params.append(enc_p)
                 self._grads.append(enc_g)
@@ -170,6 +197,121 @@ class TrainingHistory:
 
     def finalize(self, final_params) -> None:
         self.final_params = final_params
+        # drain buffered writes (one batched scatter) so the pending dict
+        # never outlives the run/request that produced it
+        self._merge_pending()
+
+    # -- stacked tier / view -------------------------------------------------
+
+    def set_stacked(self, Ws, Gs, final_params=None) -> None:
+        """Adopt (Ws, Gs) — pytrees with a leading time axis — as the cache.
+
+        This is the zero-copy hand-off from the engine's recording scan: the
+        arrays the scan collected ARE the history.  For the ``stacked`` and
+        ``device`` tiers the stacked arrays become the storage (one device
+        buffer — no per-entry slice copies); host/disk re-encode per entry."""
+        T = jax.tree.leaves(Ws)[0].shape[0]
+        if self.tier in ("stacked", "device"):
+            self._stacked = (Ws, Gs)
+            self._stacked_len = T
+            self._params, self._grads = [], []
+            self._pending_over = {}
+        else:
+            for i in range(T):
+                self.append(jax.tree.map(lambda x: x[i], Ws),
+                            jax.tree.map(lambda x: x[i], Gs))
+        if final_params is not None:
+            self.finalize(final_params)
+
+    @property
+    def _stacked_is_storage(self) -> bool:
+        """True when `_stacked` IS the backing store (the stacked tier, or a
+        device-tier history adopted via set_stacked/replace_from_stacked) —
+        as opposed to the derived cache other tiers hold transiently."""
+        return self.tier == "stacked" or self._stacked_len > 0
+
+    def _merge_pending(self) -> None:
+        """Stacked storage: fold buffered append()s and overwrite()s into the
+        stacked arrays (one concatenate + one batched scatter)."""
+        if not self._stacked_is_storage:
+            return
+        if self._params:
+            new_w = jax.tree.map(lambda *xs: jnp.stack(xs), *self._params)
+            new_g = jax.tree.map(lambda *xs: jnp.stack(xs), *self._grads)
+            if self._stacked is None:
+                self._stacked = (new_w, new_g)
+            else:
+                Ws, Gs = self._stacked
+                self._stacked = (
+                    jax.tree.map(lambda a, b: jnp.concatenate([a, b]), Ws, new_w),
+                    jax.tree.map(lambda a, b: jnp.concatenate([a, b]), Gs, new_g),
+                )
+            self._stacked_len += len(self._params)
+            self._params, self._grads = [], []
+        if self._pending_over:
+            ts = jnp.asarray(list(self._pending_over.keys()))
+            vals = list(self._pending_over.values())
+            up_w = jax.tree.map(lambda *xs: jnp.stack(xs), *[v[0] for v in vals])
+            up_g = jax.tree.map(lambda *xs: jnp.stack(xs), *[v[1] for v in vals])
+            Ws, Gs = self._stacked
+            self._stacked = (
+                jax.tree.map(lambda x, u: x.at[ts].set(u), Ws, up_w),
+                jax.tree.map(lambda x, u: x.at[ts].set(u), Gs, up_g),
+            )
+            self._pending_over = {}
+
+    def stacked_view(self):
+        """(Ws, Gs) with every leaf stacked along a leading time axis.
+
+        Free for the stacked tier; built once and cached for the others
+        (invalidated by append/overwrite)."""
+        if self._stacked_is_storage:
+            self._merge_pending()
+            if self._stacked is None:
+                raise ValueError("stacked_view() on an empty history")
+            return self._stacked
+        if self._stacked is None:
+            T = len(self)
+            entries = [self.entry(t) for t in range(T)]
+            Ws = jax.tree.map(lambda *xs: jnp.stack(xs), *[e[0] for e in entries])
+            Gs = jax.tree.map(lambda *xs: jnp.stack(xs), *[e[1] for e in entries])
+            if self.tier == "device" and not self._multi_device():
+                # adopt as storage: keeping the per-entry arrays alongside
+                # would double device memory for the whole path.  Skipped on
+                # a mesh — the device tier's contract is entries sharded like
+                # the live params, and jnp.stack'd copies would not be.
+                self.set_stacked(Ws, Gs)
+            else:
+                self._stacked = (Ws, Gs)
+        return self._stacked
+
+    def _multi_device(self) -> bool:
+        for tree in self._params[:1]:
+            for leaf in jax.tree.leaves(tree):
+                sharding = getattr(leaf, "sharding", None)
+                if sharding is not None and len(getattr(
+                        sharding, "device_set", ())) > 1:
+                    return True
+        return False
+
+    def replace_from_stacked(self, Ws, Gs) -> None:
+        """Bulk-rewrite the whole cache from edited stacked arrays (the online
+        engine's end-of-request flush)."""
+        if self.tier == "stacked" or (self.tier == "device"
+                                      and not self._multi_device()):
+            self._params, self._grads = [], []
+            self._stacked = (Ws, Gs)
+            self._stacked_len = jax.tree.leaves(Ws)[0].shape[0]
+            self._pending_over = {}
+            return
+        T = len(self)
+        self._stacked = None
+        for t in range(T):
+            self.overwrite(t, jax.tree.map(lambda x: x[t], Ws),
+                           jax.tree.map(lambda x: x[t], Gs))
+        # do NOT cache (Ws, Gs) here: under a lossy codec the raw arrays
+        # would diverge from what entry() decodes back; let stacked_view()
+        # rebuild from the encoded entries so both read paths agree
 
     # -- read path ----------------------------------------------------------
 
@@ -183,6 +325,16 @@ class TrainingHistory:
 
     def entry(self, t: int):
         """(w_t, g_t) decoded back to device arrays."""
+        if self._stacked_is_storage:
+            if t in self._pending_over:  # not yet scattered — serve directly
+                return self._pending_over[t]
+            if self._params:
+                self._merge_pending()
+            if self._stacked is None or not 0 <= t < self._stacked_len:
+                raise IndexError(f"history entry {t} of {len(self)}")
+            Ws, Gs = self._stacked
+            return (jax.tree.map(lambda x: x[t], Ws),
+                    jax.tree.map(lambda x: x[t], Gs))
         if self.tier == "device":
             return self._params[t], self._grads[t]
         if self.tier == "host":
@@ -199,6 +351,14 @@ class TrainingHistory:
     # -- in-place rewrite (online deletion, Algorithm 3) --------------------
 
     def overwrite(self, t: int, params, grad) -> None:
+        if self._stacked_is_storage:
+            if self._params:
+                self._merge_pending()  # appends first, to fix the length
+            if self._stacked is None or not 0 <= t < self._stacked_len:
+                raise IndexError(f"history entry {t} of {len(self)}")
+            self._pending_over[t] = (params, grad)
+            return
+        self._stacked = None
         if self.tier == "device":
             self._params[t] = params
             self._grads[t] = grad
@@ -215,7 +375,7 @@ class TrainingHistory:
     # -- checkpoint integration ---------------------------------------------
 
     def state_dict(self) -> Dict[str, Any]:
-        return {
+        state = {
             "meta": self.meta,
             "tier": self.tier,
             "codec": self.codec.name,
@@ -224,6 +384,11 @@ class TrainingHistory:
             "final_params": jax.device_get(self.final_params),
             "disk_paths": list(self._disk_paths),
         }
+        if self._stacked_is_storage and self._stacked is not None:
+            self._merge_pending()
+            state["params"], state["grads"] = [], []
+            state["stacked"] = jax.device_get(self._stacked)
+        return state
 
     @classmethod
     def from_state_dict(cls, state: Dict[str, Any], spill_dir: Optional[str] = None):
@@ -233,11 +398,18 @@ class TrainingHistory:
         h._grads = state["grads"]
         h._disk_paths = state["disk_paths"]
         h.final_params = state["final_params"]
+        if state.get("stacked") is not None:
+            Ws, Gs = state["stacked"]
+            h.set_stacked(jax.tree.map(jnp.asarray, Ws),
+                          jax.tree.map(jnp.asarray, Gs))
         return h
 
     def nbytes(self) -> int:
         total = 0
-        for tree in self._params + self._grads:
+        trees = list(self._params) + list(self._grads)
+        if self._stacked is not None and self._stacked_is_storage:
+            trees += list(self._stacked)
+        for tree in trees:
             if tree is None:
                 continue
             for leaf in jax.tree.leaves(tree):

@@ -248,6 +248,11 @@ class LbfgsBuffer:
         """Returns True if the pair was admitted."""
         curv = float(tree_vdot(dg, dw))
         ss = float(tree_vdot(dw, dw))
+        return self.add_pair(dw, dg, curv, ss)
+
+    def add_pair(self, dw, dg, curv: float, ss: float) -> bool:
+        """`add` with the admission inner products precomputed — the engine's
+        fused explicit step evaluates them on-device and syncs once."""
         if ss <= 0.0 or curv < self.curvature_eps * ss:
             self.rejected += 1
             return False

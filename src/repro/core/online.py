@@ -13,6 +13,13 @@ the *previous DeltaGrad path* rather than the original training run:
 The minibatch schedule is always replayed against the ORIGINAL dataset
 numbering; cumulative deletions shrink each batch's effective size
 ``B_t(k) = B - |batch_t ∩ R_k|`` (paper's n-k bookkeeping).
+
+Deletion streams run on the compiled engine (`core.engine.run_online_request`):
+per request, approx segments execute under `lax.scan` against the stacked
+history and the rewrite pairs are written back with
+`lax.dynamic_update_slice`; the storage flush is an O(1) pointer swap after
+each request.  Addition streams, offload tiers (host/disk) and
+`impl="python"` use the pre-refactor loop below.
 """
 
 from __future__ import annotations
@@ -27,11 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.deltagrad import (DeltaGradConfig, Objective, RetrainStats,
-                                  _next_pow2, _sgd_apply)
+                                  _next_pow2, _sgd_apply, _tree_zeros)
+from repro.core.engine import _approx_math, run_online_request
 from repro.core.history import TrainingHistory
 from repro.core.lbfgs import LbfgsBuffer, lbfgs_hvp_stacked_pytree
 from repro.data.dataset import Dataset
-from repro.data.sampler import batch_indices
+from repro.data.sampler import batch_indices, batch_indices_all
 from repro.utils.tree import tree_all_finite, tree_norm, tree_sub
 
 
@@ -41,13 +49,8 @@ def _online_approx_update(params, w_t, g_t, dWs, dGs, g_one, lr, b_eff, has,
     """One fused approx step; also returns g^a (eq. S62) for the rewrite."""
     v = tree_sub(params, w_t)
     bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v)
-    denom = jnp.maximum(b_eff - sign * has, 1.0)
-
-    def g_approx(gt, b, gc):
-        # gradient of the post-request objective at params
-        return (b_eff * (gt + b) - sign * has * gc) / denom
-
-    g_new = jax.tree.map(g_approx, g_t, bv, g_one)
+    # gradient of the post-request objective at params
+    g_new = _approx_math(g_t, bv, g_one, b_eff, has, sign)
     new_params = jax.tree.map(lambda p, g: p - lr * g, params, g_new)
     ok = jnp.logical_and(
         tree_all_finite(new_params),
@@ -92,6 +95,52 @@ def online_deltagrad(
     sample of the *future* run and running the add-update).
     """
     assert mode in ("delete", "add")
+    # Algorithm 3 rewrites the cache assuming plain-SGD replay; a heavy-ball
+    # path would need per-request velocity reconstruction (ROADMAP item) —
+    # silently applying SGD to a momentum-cached path diverges unboundedly
+    assert not history.meta.momentum, (
+        "online_deltagrad does not support momentum-trained histories yet")
+    if mode == "add" or cfg.impl == "python" \
+            or history.tier in ("host", "disk"):
+        return _online_python(objective, history, ds, requests, cfg, mode)
+
+    meta = history.meta
+    grad_fn = objective.make_grad_fn()
+    cols = ds.device_columns()
+    idx_all = batch_indices_all(meta.seed, meta.steps, meta.n,
+                                meta.batch_size)
+    # the (T, B) index matrix and lr vector never change across requests —
+    # upload them once
+    static_dev = (jnp.asarray(idx_all, jnp.int32),
+                  jnp.asarray([meta.lr_at(t) for t in range(meta.steps)],
+                              jnp.float32))
+    live = np.ones(meta.n, dtype=bool)
+    W, G = history.stacked_view()
+    params = history.final_params
+    stats = OnlineStats()
+    t_start = time.perf_counter()
+
+    for req in requests:
+        req = int(req)
+        params, W, G, rstat = run_online_request(
+            grad_fn, history, W, G, cols, req, cfg, live, idx_all,
+            static_dev=static_dev)
+        # flush per request (O(1) pointer swap for stacked/device storage)
+        # so dataset bookkeeping and the rewritten cache never diverge even
+        # if a later request dies mid-stream
+        history.replace_from_stacked(W, G)
+        history.finalize(params)
+        live[req] = False
+        ds.removed[req] = True
+        stats.per_request.append(rstat)
+
+    jax.block_until_ready(params)
+    stats.wall_time_s = time.perf_counter() - t_start
+    return params, stats
+
+
+def _online_python(objective, history, ds, requests, cfg, mode):
+    """Pre-refactor per-step loop: additions, disk tier, parity oracle."""
     meta = history.meta
     grad_fn = objective.make_grad_fn()
     B = min(meta.batch_size, meta.n)
@@ -147,7 +196,6 @@ def online_deltagrad(
                     g_one = grad_fn(params, cb, cw)
                     rstat.grad_examples += 1
                 else:
-                    from repro.core.deltagrad import _tree_zeros
                     g_one = _tree_zeros(params)
                 dWs, dGs = buffer.stacked()
                 sign = 1 if mode == "delete" else -1

@@ -27,6 +27,18 @@ class Dataset:
     def take(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
         return {k: v[idx] for k, v in self.columns.items()}
 
+    def device_columns(self):
+        """Columns uploaded to device once (cached; refreshed after append).
+
+        The replay engine gathers minibatches with on-device `jnp.take`
+        inside `lax.scan`, so the host never materializes per-step batches."""
+        import jax.numpy as jnp
+
+        if getattr(self, "_device_cols", None) is None or self._device_n != self.n:
+            self._device_cols = {k: jnp.asarray(v) for k, v in self.columns.items()}
+            self._device_n = self.n
+        return self._device_cols
+
     def __len__(self) -> int:
         return self.n
 

@@ -11,6 +11,9 @@ applied by masking at use time, never by re-indexing.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+from typing import Optional
+
 import numpy as np
 
 
@@ -37,3 +40,137 @@ def addition_mask(seed: int, step: int, n: int, batch_size: int, n_added: int) -
         return np.ones(n_added, dtype=bool)
     rng = np.random.default_rng(np.random.SeedSequence([seed, step, 0x5EED]))
     return rng.random(n_added) < (batch_size / float(n))
+
+
+# --------------------------------------------------------------------------
+# Vectorized schedule precomputation (the replay engine's input)
+# --------------------------------------------------------------------------
+
+
+def batch_indices_all(seed: int, steps: int, n: int, batch_size: int) -> np.ndarray:
+    """The full (steps, B) minibatch schedule, row t == batch_indices(seed, t).
+
+    One upfront pass replaces per-step host sampling on the replay hot path;
+    each row still uses the per-step SeedSequence stream so the result is
+    bit-identical to the incremental sampler.
+    """
+    B = min(batch_size, n)
+    out = np.empty((steps, B), dtype=np.int64)
+    for t in range(steps):
+        out[t] = batch_indices(seed, t, n, batch_size)
+    return out
+
+
+def addition_mask_all(seed: int, steps: int, n: int, batch_size: int,
+                      n_added: int) -> np.ndarray:
+    """(steps, n_added) bool; row t == addition_mask(seed, t, ...)."""
+    out = np.empty((steps, n_added), dtype=bool)
+    for t in range(steps):
+        out[t] = addition_mask(seed, t, n, batch_size, n_added)
+    return out
+
+
+@dataclass
+class ReplaySchedule:
+    """Device-ready replay plan for one retraining run (all arrays numpy;
+    the engine uploads them once and never touches the host per step).
+
+    Shapes: T = steps, B = effective batch size, R = changed-sample pad.
+
+      idx          (T, B)  int64  replayed original minibatch indices
+      kept_w       (T, B)  f32    1.0 where the row survives the edit
+                                  (delete: not in the removed set; add: all 1)
+      changed_idx  (T, R)  int64  changed rows present in batch t, padded
+      changed_w    (T, R)  f32    validity mask for changed_idx
+      dB           (T,)    f32    |changed ∩ batch_t|   (add: #joining rows)
+      kept         (T,)    f32    |surviving rows of batch_t|
+      lr           (T,)    f32    learning rate at t
+    """
+
+    idx: np.ndarray
+    kept_w: np.ndarray
+    changed_idx: np.ndarray
+    changed_w: np.ndarray
+    dB: np.ndarray
+    kept: np.ndarray
+    lr: np.ndarray
+    mode: str
+    r_pad: int
+
+    @property
+    def steps(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def batch(self) -> int:
+        return self.idx.shape[1]
+
+
+def build_schedule(
+    seed: int,
+    steps: int,
+    n: int,
+    batch_size: int,
+    changed_idx: np.ndarray,
+    mode: str,
+    r_pad: int,
+    lr_at,
+    idx_all: Optional[np.ndarray] = None,
+    live_mask: Optional[np.ndarray] = None,
+) -> ReplaySchedule:
+    """Precompute every per-step quantity DeltaGrad replay needs.
+
+    `changed_idx` are removed rows (delete) or appended rows (add); overlap
+    masks come from one vectorized `np.isin` over the (T, B) index matrix
+    instead of per-step set logic.  `live_mask` (length >= n bool, True =
+    still present) masks rows deleted by EARLIER online requests out of the
+    replayed batches (Algorithm 3's n-k bookkeeping); `idx_all` lets callers
+    reuse an already-sampled schedule across requests.
+    """
+    assert mode in ("delete", "add")
+    changed_idx = np.asarray(changed_idx, dtype=np.int64)
+    idx = batch_indices_all(seed, steps, n, batch_size) if idx_all is None \
+        else idx_all
+    T, B = idx.shape
+
+    if live_mask is not None:
+        live = live_mask[idx]  # (T, B) rows surviving previous requests
+    else:
+        live = np.ones((T, B), dtype=bool)
+
+    if mode == "delete":
+        overlap = np.isin(idx, changed_idx) & live  # (T, B)
+        kept_mask = live & ~overlap
+        # changed rows, padded to R, preserving within-batch order
+        changed_rows = np.zeros((T, r_pad), dtype=np.int64)
+        changed_w = np.zeros((T, r_pad), dtype=np.float32)
+        for t in np.nonzero(overlap.any(axis=1))[0]:
+            rows = idx[t][overlap[t]][:r_pad]
+            changed_rows[t, : len(rows)] = rows
+            changed_w[t, : len(rows)] = 1.0
+        dB = overlap.sum(axis=1).astype(np.float32)
+    else:
+        joins = addition_mask_all(seed, steps, n, batch_size, len(changed_idx))
+        kept_mask = live
+        changed_rows = np.zeros((T, r_pad), dtype=np.int64)
+        changed_w = np.zeros((T, r_pad), dtype=np.float32)
+        for t in np.nonzero(joins.any(axis=1))[0]:
+            rows = changed_idx[joins[t]][:r_pad]
+            changed_rows[t, : len(rows)] = rows
+            changed_w[t, : len(rows)] = 1.0
+        dB = joins.sum(axis=1).astype(np.float32)
+
+    assert dB.max(initial=0.0) <= r_pad, (
+        f"removal_pad={r_pad} smaller than max per-batch overlap {dB.max()}")
+    lr = np.asarray([lr_at(t) for t in range(T)], dtype=np.float32)
+    return ReplaySchedule(
+        idx=idx,
+        kept_w=kept_mask.astype(np.float32),
+        changed_idx=changed_rows,
+        changed_w=changed_w,
+        dB=dB,
+        kept=kept_mask.sum(axis=1).astype(np.float32),
+        lr=lr,
+        mode=mode,
+        r_pad=r_pad,
+    )

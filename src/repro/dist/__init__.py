@@ -1,0 +1,1 @@
+"""Multi-device placement: the parameter/input sharding resolver."""

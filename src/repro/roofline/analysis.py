@@ -38,6 +38,16 @@ _GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """`compiled.cost_analysis()` normalized across jax versions: newer
+    backends return a per-device LIST of property dicts (possibly empty),
+    older ones a single dict.  Always returns a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _shape_bytes(dtype: str, dims: str) -> int:
     if dtype not in _DTYPE_BYTES:
         return 0
@@ -290,9 +300,7 @@ def roofline_from_compiled(
     analytic_flops: Optional[float] = None,
     analytic_bytes: Optional[float] = None,
 ) -> RooflineReport:
-    cost = compiled.cost_analysis()
-    if isinstance(cost, list):  # some backends return [dict]
-        cost = cost[0]
+    cost = cost_analysis_dict(compiled)
     flops_dev = float(cost.get("flops", 0.0))
     bytes_dev = float(cost.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()

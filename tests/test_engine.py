@@ -1,0 +1,227 @@
+"""Scan-engine parity vs the legacy per-step loop (core/engine.py).
+
+The compiled replay engine must be a pure performance refactor: for every
+mode x optimizer combination, final parameters from the `lax.scan` path must
+match the pre-refactor python loop (kept as `impl="python"`) to <= 1e-5, and
+the RetrainStats counters must agree exactly.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.deltagrad import (
+    DeltaGradConfig,
+    baseline_retrain,
+    deltagrad_retrain,
+    sgd_train_with_cache,
+)
+from repro.core.history import HistoryMeta, TrainingHistory
+from repro.core.online import online_deltagrad
+from repro.data.synthetic import binary_classification
+from repro.models.simple import logreg_init, logreg_objective
+from repro.utils.tree import tree_norm, tree_sub
+
+TOL = 1e-5
+
+
+def _problem(n=1200, d=12, steps=60, batch=256, momentum=0.0, seed=0):
+    ds = binary_classification(n=n, d=d, seed=seed)
+    obj = logreg_objective(l2=5e-3)
+    meta = HistoryMeta(n=ds.n, batch_size=batch, seed=7, steps=steps,
+                       lr_schedule=((0, 0.3),), momentum=momentum)
+    p0 = logreg_init(d, seed=seed + 1)
+    return ds, obj, meta, p0
+
+
+def _dist(a, b):
+    return float(tree_norm(tree_sub(a, b)))
+
+
+CFG = DeltaGradConfig(period=5, burn_in=8, history_size=2)
+CFG_PY = dataclasses.replace(CFG, impl="python")
+
+
+class TestTrainingParity:
+    @pytest.mark.parametrize("momentum", [0.0, 0.9])
+    def test_record_scan_matches_loop(self, momentum):
+        ds, obj, meta, p0 = _problem(momentum=momentum)
+        w_s, h_s = sgd_train_with_cache(obj, p0, ds, meta, impl="scan")
+        w_p, h_p = sgd_train_with_cache(obj, p0, ds, meta, impl="python")
+        assert _dist(w_s, w_p) < TOL
+        for t in (0, meta.steps // 2, meta.steps - 1):
+            es, ep = h_s.entry(t), h_p.entry(t)
+            assert _dist(es[0], ep[0]) < TOL
+            assert _dist(es[1], ep[1]) < TOL
+
+
+class TestBaselineParity:
+    @pytest.mark.parametrize("mode", ["delete", "add"])
+    @pytest.mark.parametrize("batch", [256, 1 << 30])
+    def test_baseline_scan_matches_loop(self, mode, batch):
+        ds, obj, meta, p0 = _problem(batch=batch)
+        changed = np.random.default_rng(3).choice(meta.n, 12, replace=False)
+        if mode == "add":
+            changed = ds.append({k: v[changed] for k, v in ds.columns.items()})
+        w_s, _ = baseline_retrain(obj, ds, meta, p0, changed, mode, impl="scan")
+        w_p, _ = baseline_retrain(obj, ds, meta, p0, changed, mode,
+                                  impl="python")
+        assert _dist(w_s, w_p) < TOL
+
+
+class TestReplayParity:
+    @pytest.mark.parametrize("mode", ["delete", "add"])
+    @pytest.mark.parametrize("batch", [256, 1 << 30])  # SGD and GD
+    @pytest.mark.parametrize("momentum", [0.0, 0.9])
+    def test_replay_scan_matches_loop(self, mode, batch, momentum):
+        ds, obj, meta, p0 = _problem(batch=batch, momentum=momentum)
+        w_star, hist = sgd_train_with_cache(obj, p0, ds, meta)
+        changed = np.random.default_rng(4).choice(meta.n, 10, replace=False)
+        if mode == "add":
+            changed = ds.append({k: v[changed] for k, v in ds.columns.items()})
+        w_s, st_s = deltagrad_retrain(obj, hist, ds, changed, CFG, mode=mode)
+        w_p, st_p = deltagrad_retrain(obj, hist, ds, changed, CFG_PY,
+                                      mode=mode)
+        assert _dist(w_s, w_p) < TOL, (mode, batch, momentum)
+        assert st_s.extra["impl"] == "scan" and st_p.extra["impl"] == "python"
+        for f in ("explicit_steps", "approx_steps", "guard_fallbacks",
+                  "skipped_steps", "grad_examples", "grad_examples_baseline"):
+            assert getattr(st_s, f) == getattr(st_p, f), f
+
+    def test_skip_steps_counted_identically(self):
+        ds, obj, meta, p0 = _problem(n=40, d=5, steps=10, batch=8)
+        _, hist = sgd_train_with_cache(obj, p0, ds, meta)
+        from repro.data.sampler import batch_indices
+        batch0 = batch_indices(meta.seed, 0, 40, 8)
+        cfg = dataclasses.replace(CFG, period=3, burn_in=2)
+        w_s, st_s = deltagrad_retrain(obj, hist, ds, batch0, cfg)
+        w_p, st_p = deltagrad_retrain(
+            obj, hist, ds, batch0, dataclasses.replace(cfg, impl="python"))
+        assert st_s.skipped_steps == st_p.skipped_steps >= 1
+        assert _dist(w_s, w_p) < TOL
+
+    def test_guard_fallback_counters_on_device(self):
+        """guard_norm_clip=0 forces every approx step to the cond fallback;
+        the scan path must count them without any per-step host sync."""
+        ds, obj, meta, p0 = _problem()
+        _, hist = sgd_train_with_cache(obj, p0, ds, meta)
+        changed = np.arange(10)
+        cfg = dataclasses.replace(CFG, guard=True, guard_norm_clip=0.0)
+        w, st = deltagrad_retrain(obj, hist, ds, changed, cfg)
+        assert st.approx_steps == 0
+        assert st.guard_fallbacks > 0
+        assert np.isfinite(_dist(w, p0))
+
+
+class TestOnlineParity:
+    def test_online_delete_scan_matches_loop(self):
+        reqs = [3, 17, 101]
+        ds1, obj, meta, p0 = _problem()
+        _, h1 = sgd_train_with_cache(obj, p0, ds1, meta)
+        w_s, st_s = online_deltagrad(obj, h1, ds1, reqs, CFG, mode="delete")
+        ds2, _, _, _ = _problem()
+        _, h2 = sgd_train_with_cache(obj, p0, ds2, meta)
+        w_p, st_p = online_deltagrad(obj, h2, ds2, reqs, CFG_PY,
+                                     mode="delete")
+        assert _dist(w_s, w_p) < TOL
+        assert len(st_s.per_request) == len(st_p.per_request) == len(reqs)
+        for a, b in zip(st_s.per_request, st_p.per_request):
+            assert a.explicit_steps == b.explicit_steps
+            assert a.approx_steps == b.approx_steps
+            assert a.grad_examples == b.grad_examples
+        # the rewritten caches must agree too (they seed the NEXT request)
+        for t in (0, meta.steps - 1):
+            assert _dist(h1.entry(t)[0], h2.entry(t)[0]) < TOL
+            assert _dist(h1.entry(t)[1], h2.entry(t)[1]) < TOL
+
+    def test_online_fully_deleted_batch_matches_loop(self):
+        """Degenerate Algorithm-3 case: earlier requests empty a whole batch,
+        then a later request replays it with kept == 0 and the request row
+        absent — the scan path must execute (not skip) those steps exactly
+        like the python oracle."""
+        from repro.data.sampler import batch_indices
+
+        def make():
+            ds = binary_classification(n=40, d=5, seed=9)
+            obj = logreg_objective(l2=5e-3)
+            meta = HistoryMeta(n=40, batch_size=4, seed=1, steps=12,
+                               lr_schedule=((0, 0.1),))
+            p0 = logreg_init(5, seed=2)
+            _, h = sgd_train_with_cache(obj, p0, ds, meta)
+            return ds, obj, meta, h
+
+        ds1, obj, meta, h1 = make()
+        batch3 = batch_indices(meta.seed, 3, meta.n, meta.batch_size)
+        outside = next(i for i in range(meta.n) if i not in set(batch3))
+        reqs = [int(i) for i in batch3] + [outside]
+        cfg = dataclasses.replace(CFG, burn_in=2, period=4)
+        w_s, st_s = online_deltagrad(obj, h1, ds1, reqs, cfg, mode="delete")
+        ds2, _, _, h2 = make()
+        w_p, st_p = online_deltagrad(
+            obj, h2, ds2, reqs, dataclasses.replace(cfg, impl="python"),
+            mode="delete")
+        assert _dist(w_s, w_p) < TOL
+        for a, b in zip(st_s.per_request, st_p.per_request):
+            assert a.skipped_steps == b.skipped_steps
+            assert a.approx_steps == b.approx_steps
+        for t in (3, meta.steps - 1):
+            assert _dist(h1.entry(t)[1], h2.entry(t)[1]) < TOL
+
+
+class TestStackedTier:
+    def test_stacked_history_roundtrip_and_overwrite(self):
+        ds, obj, meta, p0 = _problem(steps=20)
+        _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="stacked")
+        _, h2 = sgd_train_with_cache(obj, p0, ds, meta, tier="device")
+        assert len(h) == meta.steps
+        for t in (0, 7, 19):
+            assert _dist(h.entry(t)[0], h2.entry(t)[0]) < 1e-7
+        w5, g5 = h.entry(5)
+        marked = {k: v + 1.0 for k, v in w5.items()}
+        h.overwrite(5, marked, g5)
+        assert _dist(h.entry(5)[0], marked) < 1e-7
+        assert _dist(h.entry(4)[0], h2.entry(4)[0]) < 1e-7
+        state = h.state_dict()
+        h3 = TrainingHistory.from_state_dict(state)
+        assert _dist(h3.entry(5)[0], marked) < 1e-7
+
+    def test_replay_works_from_every_memory_tier(self):
+        changed = np.arange(8)
+        ds, obj, meta, p0 = _problem(steps=30)
+        ref_w = None
+        for tier, want_impl in (("stacked", "scan"), ("device", "scan"),
+                                ("host", "python")):
+            _, h = sgd_train_with_cache(obj, p0, ds, meta, tier=tier)
+            w, st = deltagrad_retrain(obj, h, ds, changed, CFG)
+            # offload tiers must not be stacked onto the device by the engine
+            assert st.extra["impl"] == want_impl, tier
+            ref_w = w if ref_w is None else ref_w
+            assert _dist(w, ref_w) < TOL, tier
+
+    def test_device_tier_records_without_duplicating(self):
+        """set_stacked must not keep per-entry slice copies next to the
+        stacked arrays (2x HBM)."""
+        ds, obj, meta, p0 = _problem(steps=10)
+        _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="device")
+        leaves = sum(x.nbytes for x in
+                     __import__("jax").tree.leaves(h.stacked_view()))
+        assert h.nbytes() <= leaves * 1.01
+
+
+class TestFusedKernelRouting:
+    def test_interpret_mode_matches_ref(self):
+        """The Pallas fused_update wiring, exercised end-to-end through the
+        engine in interpret mode (CPU stand-in for the TPU kernel path)."""
+        ds, obj, meta, p0 = _problem(steps=30)
+        _, hist = sgd_train_with_cache(obj, p0, ds, meta)
+        changed = np.arange(6)
+        w_ref, st_ref = deltagrad_retrain(
+            obj, hist, ds, changed,
+            dataclasses.replace(CFG, fused="ref"))
+        w_int, st_int = deltagrad_retrain(
+            obj, hist, ds, changed,
+            dataclasses.replace(CFG, fused="interpret"))
+        assert st_ref.extra["fused"] == "ref"
+        assert st_int.extra["fused"] == "interpret"
+        assert _dist(w_ref, w_int) < TOL

@@ -5,7 +5,10 @@ import os
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.history import CODECS, HistoryMeta, TrainingHistory
 from repro.data.dataset import Dataset

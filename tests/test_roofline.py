@@ -15,6 +15,7 @@ from repro.models.scan_config import unrolled_scans
 from repro.roofline.analysis import (
     collective_bytes_from_hlo,
     collective_bytes_loop_aware,
+    cost_analysis_dict,
     _split_computations,
 )
 from repro.roofline.model import analytic_cost
@@ -121,8 +122,8 @@ def test_analytic_flops_vs_unrolled_cost_analysis(arch, rtol):
                                          loss_chunk=128))(p, b)
 
     with unrolled_scans():
-        cost = jax.jit(step).lower(params_specs, specs).compile(
-        ).cost_analysis()
+        cost = cost_analysis_dict(
+            jax.jit(step).lower(params_specs, specs).compile())
     hlo = float(cost.get("flops", 0.0))
     ac = analytic_cost(cfg, SHAPE, n_params=count_params(cfg))
     ratio = ac.flops_global / hlo

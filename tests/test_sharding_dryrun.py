@@ -112,7 +112,8 @@ SUBPROCESS_PROG = textwrap.dedent("""
                           in_shardings=(p_shard, in_shard)).lower(
             params_specs, specs)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    from repro.roofline.analysis import cost_analysis_dict
+    cost = cost_analysis_dict(compiled)
     assert float(cost.get("flops", 0)) > 0
     # actually execute on the 8 fake devices — numerics + shardings together
     params = jax.device_put(model.init(0), p_shard)
