@@ -38,6 +38,18 @@ def main():
           f"grad-eval speedup x{stats.theoretical_speedup:.2f}")
     print(f"accuracy after stream: {logreg_accuracy(unl.params, ds):.4f}")
 
+    # additions stream on the same engine (Algorithm 3 add-mode): fresh
+    # rows join the replayed batches through the deterministic join masks
+    rng = np.random.default_rng(10)
+    src = rng.choice(4000, 6)  # one draw so features and labels stay paired
+    rows = {k: v[src] for k, v in ds.columns.items()}
+    t0 = time.time()
+    stats = unl.stream_add(rows)
+    dt = time.time() - t0
+    print(f"\n6 addition requests in {dt:.2f}s "
+          f"({dt / 6 * 1e3:.0f} ms/request); "
+          f"accuracy {logreg_accuracy(unl.params, ds):.4f}")
+
     # publish with epsilon-approximate-deletion noise (Laplace mechanism)
     eps, delta0 = 1.0, 1e-4  # delta0: certified ||w_I - w_U|| bound
     published = laplace_publish(jax.random.PRNGKey(0), unl.params, eps, delta0)

@@ -7,6 +7,8 @@ gradient work than retraining from scratch.
     unl.delete([3, 17, 256])        # batch deletion  (Algorithm 1)
     unl.add({"x": new_x, "y": new_y})
     unl.stream_delete([5, 9, ...])  # online requests (Algorithm 3)
+    unl.stream_add({"x": ..., "y": ...})       # online additions
+    unl.stream([("delete", 5), ("add", 1001)])  # mixed request stream
     unl.params                      # current model
 """
 
@@ -26,7 +28,7 @@ from repro.core.deltagrad import (
     sgd_train_with_cache,
 )
 from repro.core.history import HistoryMeta, TrainingHistory
-from repro.core.online import OnlineStats, online_deltagrad
+from repro.core.online import OnlineEngine, OnlineStats
 from repro.data.dataset import Dataset
 
 
@@ -62,6 +64,11 @@ class Unlearner:
         self.history: Optional[TrainingHistory] = None
         self.params: Any = params0
         self.log: List[Dict] = []
+        # ONE online engine per rewritten history: it owns the stream state
+        # (liveness, added-row join columns) that must survive across
+        # stream_delete/stream_add/stream calls; reset whenever the cache is
+        # rebuilt (fit) or bulk-replayed without a rewrite (delete/add)
+        self._online: Optional[OnlineEngine] = None
 
     # -- phase 1: training with path caching ---------------------------------
 
@@ -87,6 +94,7 @@ class Unlearner:
             codec=c.history_codec,
             spill_dir=c.spill_dir,
         )
+        self._online = None
         return self.params
 
     def _require_fit(self):
@@ -103,6 +111,7 @@ class Unlearner:
             self.config.deltagrad, mode="delete",
         )
         self.dataset.delete(idx)
+        self._online = None  # batch replay does not rewrite the cache
         self.log.append({"op": "delete", "idx": idx, "stats": stats})
         return stats
 
@@ -113,18 +122,70 @@ class Unlearner:
             self.objective, self.history, self.dataset, new_idx,
             self.config.deltagrad, mode="add",
         )
+        self._online = None  # batch replay does not rewrite the cache
         self.log.append({"op": "add", "idx": new_idx, "stats": stats})
         return stats
 
     # -- phase 2': online request streams (Algorithm 3) -----------------------
 
+    def _online_engine(self) -> OnlineEngine:
+        if self._online is None:
+            self._online = OnlineEngine(
+                self.objective, self.history, self.dataset,
+                self.config.deltagrad)
+        return self._online
+
+    def _serve_stream(self, requests, mode: Optional[str]) -> OnlineStats:
+        import time
+
+        import jax
+
+        engine = self._online_engine()
+        for r in requests:
+            if mode is None and not isinstance(r, (tuple, list)):
+                raise TypeError(
+                    f"stream() takes (op, row) pairs, got {r!r}; use "
+                    "stream_delete()/stream_add() for single-op streams")
+        ops = [(r if isinstance(r, (tuple, list)) else (mode, r))
+               for r in requests]
+        # size the add-column block once for the whole stream so the padded
+        # schedule width (and every compiled shape) stays put
+        n_adds = sum(1 for op, _ in ops if op == "add")
+        engine.add_capacity = max(engine.add_capacity,
+                                  len(engine.added) + n_adds)
+        stats = OnlineStats(compile_time_s=engine.compile_time_s)
+        t0 = time.perf_counter()
+        for op, row in ops:
+            stats.per_request.append(engine.request(op, int(row)))
+        # steady-state scan requests enqueue device work without syncing;
+        # block so wall_time_s measures compute, not dispatch
+        jax.block_until_ready(engine.params)
+        stats.wall_time_s = time.perf_counter() - t0
+        self.params = engine.params
+        return stats
+
     def stream_delete(self, requests: Sequence[int]) -> OnlineStats:
         self._require_fit()
-        self.params, stats = online_deltagrad(
-            self.objective, self.history, self.dataset, list(requests),
-            self.config.deltagrad, mode="delete",
-        )
+        stats = self._serve_stream(list(requests), "delete")
         self.log.append({"op": "stream_delete", "idx": list(requests), "stats": stats})
+        return stats
+
+    def stream_add(self, rows: Dict[str, np.ndarray]) -> OnlineStats:
+        """Append `rows` and insert them one request at a time (Algorithm 3
+        add-mode: each joins the replayed batches via the deterministic
+        addition mask, rewriting history after every request)."""
+        self._require_fit()
+        new_idx = self.dataset.append(rows)
+        stats = self._serve_stream(new_idx.tolist(), "add")
+        self.log.append({"op": "stream_add", "idx": new_idx, "stats": stats})
+        return stats
+
+    def stream(self, requests: Sequence) -> OnlineStats:
+        """Mixed online stream: `requests` are ("delete"|"add", row) pairs;
+        add rows must already be appended (e.g. via `dataset.append`)."""
+        self._require_fit()
+        stats = self._serve_stream(list(requests), None)
+        self.log.append({"op": "stream", "idx": list(requests), "stats": stats})
         return stats
 
     # -- reference: exact retraining (BaseL) ----------------------------------

@@ -33,12 +33,25 @@ Architecture (mapping to Wu et al., ICML 2020):
                          come back as one stacked flag vector read once at
                          the end, never as a per-step blocking `bool()`.
 
-  Phase 2' ONLINE        `run_online` — Algorithm 3 (Appendix C.2): the same
-                         segment scan additionally emits the rewritten
-                         (w_t <- w^I_t, g_t <- g^a_t) pairs, which are
-                         written back into the stacked history with
-                         `lax.dynamic_update_slice`, keeping per-request cost
+  Phase 2' ONLINE        `run_online_request` — Algorithm 3 (Appendix C.2)
+                         for BOTH request flavors (single-sample deletion and
+                         addition) and both optimizers (plain SGD and
+                         heavy-ball, whose velocity is reconstructed per
+                         request inside the scan carry from vel_0 = 0): the
+                         same segment scan additionally emits the rewritten
+                         (w_t <- w^I_t, g_t <- g^a_t) pairs.  Rewrites —
+                         including the explicit steps' — defer to ONE jitted
+                         assembly + `lax.dynamic_update_slice` per contiguous
+                         region per request, and once the L-BFGS buffer fills
+                         the pair ring lives on device (where-gated
+                         shift-append), so a steady request runs with zero
+                         mid-request host syncs and per-request cost stays
                          independent of how many requests came before.
+                         Addition requests extend the replayed batch with one
+                         precomputed join-mask column per added row
+                         (`data.sampler.build_online_schedule`); join
+                         decisions are device arrays, never per-step host
+                         calls.
 
   Phase 3  KERNEL        The non-momentum approx update is routed through
                          the Pallas ``kernels/fused_update`` op on TPU (one
@@ -48,14 +61,18 @@ Architecture (mapping to Wu et al., ICML 2020):
                          on the same flattened operands.
 
 Execution backends: ``impl="scan"`` (this module's compiled path) and
-``impl="python"`` (the pre-refactor per-step loop, kept verbatim as the
-parity oracle and as the fallback for the disk history tier).  Numerics are
-identical to the legacy loop for guard-off runs; with the guard ON the scan
-path differs in two documented ways on guard-FALLBACK steps only: (1) the
-fallback applies the exact leave-r-out update but does not admit an L-BFGS
-pair mid-segment (the python loop does), since pair admission is host state;
-(2) `grad_examples` charges such steps their true cost kept+dB, where the
-python loop re-evaluates the changed-row gradient and charges kept+2*dB.
+``impl="python"`` (the pre-refactor per-step loop, kept as the parity oracle
+and as the fallback for the offload history tiers).  Numerics and counters
+are identical between the two backends, guard ON or OFF.  The two
+divergences documented after the engine refactor are resolved: (1) a scanned
+segment that reports a guard fallback is re-run split at the first fallback
+step, which then executes as a host explicit step and ADMITS its L-BFGS pair
+exactly like the python loop (the cost is one host sync per scanned segment
+when the guard is enabled — guard-off runs still sync nothing until the end);
+(2) fallback steps charge their true `grad_examples` cost kept+dB in both
+backends — the python loop now reuses the changed-row gradient it computed
+in the rejected approx attempt instead of re-evaluating (and re-charging)
+it in the explicit branch.
 
 Frontends: `core.deltagrad.{sgd_train_with_cache, baseline_retrain,
 deltagrad_retrain}` and `core.online.online_deltagrad` are thin wrappers
@@ -469,18 +486,20 @@ def run_baseline(
 # --------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum", "guard",
+@partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum",
                                    "fused", "span"))
 def _replay_segment(params, vel, t0, W, G, cols, sd: DeviceSchedule, dWs, dGs,
                     B, clip, mom, *, grad_fn, sign: int, momentum: bool,
-                    guard: bool, fused: str, span: int):
+                    fused: str, span: int):
     """One approx segment [t0, t0+span) as a single scan.
 
     Per step: dynamic-slice (w_t, g_t) out of the stacked history, gradient
     on the <= R changed rows only, compact L-BFGS correction, fused update.
-    The Algorithm-4 guard is a `lax.cond`: the fallback branch applies the
-    exact leave-r-out update from the precomputed kept-row weights (it does
-    NOT admit an L-BFGS pair — host state; see module docstring)."""
+    The Algorithm-4 guard verdict is DETECTION-only here: the stacked `oks`
+    output flags failing steps, and the caller re-runs the segment split at
+    the first failure so that step executes as a host explicit step (which
+    admits its L-BFGS pair — see `run_replay`).  Steps after a failed guard
+    may therefore carry garbage; the caller discards them."""
 
     def body(carry, t):
         params, vel = carry
@@ -504,23 +523,6 @@ def _replay_segment(params, vel, t0, W, G, cols, sd: DeviceSchedule, dWs, dGs,
                                        sign, fused)
             ok = jnp.logical_and(tree_all_finite(new_p), guard_ok)
             new_vel = vel
-
-        if guard:
-            def fallback(_):
-                g_kept = grad_fn(params, _gather(cols, sd.idx[t]),
-                                 sd.kept_w[t])
-                if sign > 0:
-                    g_step = g_kept
-                else:
-                    g_step = jax.tree.map(
-                        lambda a, b: (B * a + dB * b) / (B + dB),
-                        g_kept, g_changed)
-                if momentum:
-                    return _momentum_math(params, vel, g_step, lr, mom)
-                return _sgd_math(params, g_step, lr), vel
-
-            new_p, new_vel = jax.lax.cond(
-                ok, lambda _: (new_p, new_vel), fallback, None)
 
         upd = kept > 0 if sign > 0 else jnp.bool_(True)
         new_p = jax.tree.map(lambda n, o: jnp.where(upd, n, o), new_p, params)
@@ -581,6 +583,12 @@ def run_replay(
     T = meta.steps
     seg_oks: List[Tuple[int, int, Any]] = []  # (t0, t1, device flags)
 
+    def scan_segment(p, v, a, b):
+        return _replay_segment(
+            p, v, jnp.int32(a), W, G, cols, sd, dWs, dGs, Bf, clip, mom,
+            grad_fn=grad_fn, sign=sign, momentum=momentum, fused=fused,
+            span=b - a)
+
     t = 0
     while t < T:
         code = plan[t]
@@ -596,28 +604,49 @@ def run_replay(
             t2 = t
             while t2 < T and plan[t2] != EXPLICIT:
                 t2 += 1
-            dWs, dGs = buffer.stacked()
-            params, vel, oks = _replay_segment(
-                params, vel, jnp.int32(t), W, G, cols, sd, dWs, dGs, Bf,
-                clip, mom, grad_fn=grad_fn, sign=sign, momentum=momentum,
-                guard=cfg.guard, fused=fused, span=t2 - t)
-            seg_oks.append((t, t2, oks))
-            t = t2
+            while t < t2:
+                dWs, dGs = buffer.stacked()
+                p_in, v_in = params, vel
+                params, vel, oks = scan_segment(p_in, v_in, t, t2)
+                if cfg.guard:
+                    # segment-splitting retry: one host sync per scanned
+                    # segment (guard ON only); if any step tripped the
+                    # Algorithm-4 guard, keep the all-ok prefix, run the
+                    # tripped step as a host explicit step (admitting its
+                    # L-BFGS pair like the python loop), and rescan the rest
+                    # with the enlarged buffer.  Split spans stay below the
+                    # explicit period, so at most period-2 extra scan
+                    # compilations exist per stream — the prefix re-run is
+                    # the real cost when fallbacks are dense (ROADMAP: a
+                    # lax.while_loop formulation would keep this on device).
+                    fell = np.flatnonzero(
+                        (plan[t:t2] != SKIP) & ~np.asarray(oks))
+                    if fell.size:
+                        tf = t + int(fell[0])
+                        if tf > t:
+                            params, vel, oks_p = scan_segment(p_in, v_in,
+                                                              t, tf)
+                            seg_oks.append((t, tf, oks_p))
+                        else:
+                            params, vel = p_in, v_in
+                        stats.guard_fallbacks += 1
+                        params, vel = _host_explicit_step(
+                            grad_fn, buffer, params, vel, tf, W, G, cols, sd,
+                            float(sched.kept[tf]), float(sched.dB[tf]), Bf,
+                            mom, sign, momentum, stats)
+                        t = tf + 1
+                        continue
+                seg_oks.append((t, t2, oks))
+                t = t2
 
-    # counters resolved once at the end — no per-step host syncs
+    # counters resolved once at the end — no per-step host syncs (with the
+    # guard enabled, recorded segments are all-ok by construction: fallback
+    # steps were peeled off and accounted as host explicit steps above)
     for t0_, t1_, oks in seg_oks:
-        oks = np.asarray(oks)
         nonskip = plan[t0_:t1_] != SKIP
-        kept_i = sched.kept[t0_:t1_].astype(np.int64)
         dB_i = sched.dB[t0_:t1_].astype(np.int64)
         if cfg.guard:
-            fell = nonskip & ~oks
-            stats.approx_steps += int((nonskip & oks).sum())
-            stats.guard_fallbacks += int(fell.sum())
-            # fallback steps applied the exact update — count them as
-            # explicit, matching the python oracle's accounting
-            stats.explicit_steps += int(fell.sum())
-            stats.grad_examples += int(kept_i[fell].sum())
+            stats.approx_steps += int((nonskip & np.asarray(oks)).sum())
         else:
             stats.approx_steps += int(nonskip.sum())
         stats.grad_examples += int(dB_i[nonskip].sum())
@@ -712,6 +741,7 @@ def _run_replay_python(objective, history, ds, changed_idx, cfg, mode,
 
         explicit = cfg.is_explicit(t)
         w_t, g_t = history.entry(t)
+        g_changed = None  # set by the approx attempt; reused on fallback
 
         if not explicit and len(buffer) == 0:
             explicit = True  # nothing to approximate with yet
@@ -753,12 +783,18 @@ def _run_replay_python(objective, history, ds, changed_idx, cfg, mode,
             kb, kw = ds.padded_batch(kept_idx,
                                      B if mode == "delete" else B + n_add)
             g_kept = grad_fn(params, kb, kw)
-            if dB > 0:
-                cb, cw = ds.padded_batch(changed_in, r_pad)
-                g_changed = grad_fn(params, cb, cw)
-            else:
-                g_changed = _tree_zeros(params)
-            stats.grad_examples += k + dB
+            if g_changed is None:
+                # regular explicit step — the changed-row gradient was not
+                # evaluated yet; a guard fallback already computed (and
+                # charged) it at these same params, so reuse it there and
+                # charge this step its true cost k + dB either way.
+                if dB > 0:
+                    cb, cw = ds.padded_batch(changed_in, r_pad)
+                    g_changed = grad_fn(params, cb, cw)
+                else:
+                    g_changed = _tree_zeros(params)
+                stats.grad_examples += dB
+            stats.grad_examples += k
 
             if mode == "delete":
                 # mean over the ORIGINAL batch (pair definition, §A.1.2)
@@ -791,53 +827,101 @@ def _run_replay_python(objective, history, ds, changed_idx, cfg, mode,
 
 
 # --------------------------------------------------------------------------
-# Phase 2': ONLINE — Algorithm 3 with history rewrite in the scan
+# Phase 2': ONLINE — Algorithm 3 (delete AND add, SGD AND heavy-ball) with
+# history rewrite in the scan
 # --------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("grad_fn", "guard", "span"))
-def _online_segment(params, t0, W, G, cols, sd: DeviceSchedule, dWs, dGs,
-                    clip, *, grad_fn, guard: bool, span: int):
-    """Online-deletion approx segment: like `_replay_segment` but with the
-    per-step effective batch size B_t(k) = kept + dB (paper's n-k
-    bookkeeping) and emitting the rewrite pairs (w_t <- w^I_t, g_t <- g^a_t,
-    eq. (S62)) as stacked scan outputs."""
+@partial(jax.jit, static_argnames=("sign", "momentum"))
+def _online_approx_step(params, vel, w_t, g_t, dWs, dGs, g_one, lr, kept, dB,
+                        clip, mom, *, sign: int, momentum: bool):
+    """One Algorithm-3 approx step — the quasi-Hessian-corrected gradient of
+    the post-request objective at params (eq. (S62), with the per-step
+    PRE-request batch size kept+dB for deletes / kept for adds), the
+    resulting SGD or heavy-ball update, and the guard verdict.
 
-    def body(params, t):
+    This is the ONE definition shared verbatim by the scan body and the
+    per-step python oracle (`core.online`), which is what makes
+    scan-vs-python parity hold to float32 round-off."""
+    b_prev = kept + dB if sign > 0 else kept
+    v = tree_sub(params, w_t)
+    bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v)
+    g_new = _approx_math(g_t, bv, g_one, b_prev, dB, sign)
+    if momentum:
+        new_p, new_vel = _momentum_math(params, vel, g_new, lr, mom)
+    else:
+        new_p, new_vel = _sgd_math(params, g_new, lr), vel
+    ok = jnp.logical_and(tree_all_finite(new_p),
+                         tree_norm(bv) <= clip * tree_norm(v))
+    return new_p, new_vel, g_new, ok
+
+
+@partial(jax.jit, static_argnames=("sign", "momentum"))
+def _online_explicit_math(params, vel, w_t, g_t, g_base, g_one, lr, kept, dB,
+                          mom, *, sign: int, momentum: bool):
+    """Online explicit-step math shared by the device step and the oracle.
+
+    `g_base` is the gradient over the scheduled kept rows — the POST-request
+    batch for deletes, the PRE-request batch for adds; mixing in the request
+    row's `g_one` yields the other one.  Returns the updated (params, vel),
+    the post-request gradient `g_cur` (the cache rewrite value), and the
+    L-BFGS pair built against the PRE-request gradient (paper §A.1.2 pair
+    definition carried over to the rewritten path)."""
+    has = dB > 0
+    denom = jnp.maximum(kept + dB, 1.0)
+    mix = jax.tree.map(
+        lambda a, b: jnp.where(has, (kept * a + dB * b) / denom, a),
+        g_base, g_one)
+    g_cur, g_prev = (g_base, mix) if sign > 0 else (mix, g_base)
+    dw = tree_sub(params, w_t)
+    dg = tree_sub(g_prev, g_t)
+    admit = jnp.stack([tree_vdot(dg, dw), tree_vdot(dw, dw)])
+    if momentum:
+        new_p, new_vel = _momentum_math(params, vel, g_cur, lr, mom)
+    else:
+        new_p, new_vel = _sgd_math(params, g_cur, lr), vel
+    return new_p, new_vel, g_cur, dw, dg, admit
+
+
+@partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum", "span"))
+def _online_segment(params, vel, t0, W, G, cols, sd: DeviceSchedule, dWs,
+                    dGs, clip, mom, *, grad_fn, sign: int, momentum: bool,
+                    span: int):
+    """Online approx segment: like `_replay_segment` but with the per-step
+    effective batch size (paper's n-k bookkeeping), the velocity carried in
+    the scan state for heavy-ball histories, and the rewrite pairs
+    (w_t <- w^I_t, g_t <- g^a_t, eq. (S62)) emitted as stacked scan outputs.
+    Guard verdicts are detection-only, as in `_replay_segment`."""
+
+    def body(carry, t):
+        params, vel = carry
         w_t = jax.tree.map(lambda x: x[t], W)
         g_t = jax.tree.map(lambda x: x[t], G)
         lr, dB, kept = sd.lr[t], sd.dB[t], sd.kept[t]
-        eff_prev = kept + dB
         has = (dB > 0).astype(jnp.float32)
         g_one = jax.tree.map(
             lambda x: has * x,
             grad_fn(params, _gather(cols, sd.changed_idx[t]),
                     sd.changed_w[t]))
-        v = tree_sub(params, w_t)
-        bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v)
-        g_new = _approx_math(g_t, bv, g_one, eff_prev, has, 1)
-        new_p = _sgd_math(params, g_new, lr)
-        ok = jnp.logical_and(tree_all_finite(new_p),
-                             tree_norm(bv) <= clip * tree_norm(v))
+        new_p, new_vel, g_new, ok = _online_approx_step(
+            params, vel, w_t, g_t, dWs, dGs, g_one, lr, kept, dB, clip, mom,
+            sign=sign, momentum=momentum)
 
-        if guard:
-            def fallback(_):
-                g_cur = grad_fn(params, _gather(cols, sd.idx[t]),
-                                sd.kept_w[t])
-                return _sgd_math(params, g_cur, lr), g_cur
-
-            new_p, g_new = jax.lax.cond(
-                ok, lambda _: (new_p, g_new), fallback, None)
-
-        skip = jnp.logical_and(kept <= 0, dB > 0)  # Algorithm 3's condition
-        new_p = jax.tree.map(lambda n, o: jnp.where(skip, o, n), new_p, params)
+        if sign > 0:  # Algorithm 3's skip: request emptied the whole batch
+            skip = jnp.logical_and(kept <= 0, dB > 0)
+        else:
+            skip = jnp.bool_(False)
+        new_p = jax.tree.map(lambda n, o: jnp.where(skip, o, n), new_p,
+                             params)
+        new_vel = jax.tree.map(lambda n, o: jnp.where(skip, o, n), new_vel,
+                               vel)
         w_wr = jax.tree.map(lambda n, o: jnp.where(skip, o, n), params, w_t)
         g_wr = jax.tree.map(lambda n, o: jnp.where(skip, o, n), g_new, g_t)
-        return new_p, (w_wr, g_wr, ok)
+        return (new_p, new_vel), (w_wr, g_wr, ok)
 
-    params, (w_writes, g_writes, oks) = jax.lax.scan(
-        body, params, t0 + jnp.arange(span))
-    return params, w_writes, g_writes, oks
+    (params, vel), (w_writes, g_writes, oks) = jax.lax.scan(
+        body, (params, vel), t0 + jnp.arange(span))
+    return params, vel, w_writes, g_writes, oks
 
 
 @jax.jit
@@ -849,36 +933,69 @@ def _write_segment(W, G, w_writes, g_writes, t0):
                          g_writes))
 
 
-@jax.jit
-def _write_entry(W, G, t, w, g):
-    return (jax.tree.map(lambda x, v: x.at[t].set(v), W, w),
-            jax.tree.map(lambda x, v: x.at[t].set(v), G, g))
+@partial(jax.jit, static_argnames=("kinds",))
+def _flush_chunks(W, G, t0, parts_w, parts_g, *, kinds):
+    """Assemble one contiguous run of rewrites — interleaved explicit-step
+    runs ("run": tuples of per-step pytrees, stacked here) and scanned
+    segments ("seg": already stacked) — and land it in ONE
+    `lax.dynamic_update_slice`.  `kinds` is static, so a steady request
+    stream compiles this exactly once."""
+
+    def lift(p, kind):
+        if kind == "run":
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *p)
+        return p
+
+    ws = [lift(p, k) for p, k in zip(parts_w, kinds)]
+    gs = [lift(p, k) for p, k in zip(parts_g, kinds)]
+    w_cat = jax.tree.map(lambda *xs: jnp.concatenate(xs), *ws)
+    g_cat = jax.tree.map(lambda *xs: jnp.concatenate(xs), *gs)
+    return _write_segment(W, G, w_cat, g_cat, t0)
 
 
-@partial(jax.jit, static_argnames=("grad_fn",))
-def _online_explicit_step(params, t, W, G, cols, sd: DeviceSchedule, *,
-                          grad_fn):
-    """Online explicit step fused into one program: post-request gradient,
-    PRE-request pair gradient, cache rewrite at t, and the SGD step.  Only
-    the two L-BFGS admission scalars return to the host."""
+@partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum"))
+def _online_explicit_step(params, vel, t, W, G, cols, sd: DeviceSchedule,
+                          mom, *, grad_fn, sign: int, momentum: bool):
+    """Online explicit step fused into one program: history slice, kept and
+    changed-row gradients, the pre/post-request gradient pair, and the
+    update.  Only the two L-BFGS admission scalars return to the host; the
+    cache rewrite value `g_cur` is handed back so the caller can batch it
+    into the end-of-request flush instead of scattering per step."""
     w_t = jax.tree.map(lambda x: x[t], W)
     g_t = jax.tree.map(lambda x: x[t], G)
     kept, dB, lr = sd.kept[t], sd.dB[t], sd.lr[t]
-    g_cur = grad_fn(params, _gather(cols, sd.idx[t]), sd.kept_w[t])
+    g_base = grad_fn(params, _gather(cols, sd.idx[t]), sd.kept_w[t])
     has = (dB > 0).astype(jnp.float32)
     g_one = jax.tree.map(
         lambda x: has * x,
         grad_fn(params, _gather(cols, sd.changed_idx[t]), sd.changed_w[t]))
-    # pair: gradient over the PRE-request batch at params (exact g_cur when
-    # the request row is absent from batch t)
-    g_prev = jax.tree.map(
-        lambda a, b: jnp.where(has > 0, (kept * a + b) / (kept + dB), a),
-        g_cur, g_one)
-    dw = tree_sub(params, w_t)
-    dg = tree_sub(g_prev, g_t)
-    admit = jnp.stack([tree_vdot(dg, dw), tree_vdot(dw, dw)])
-    W, G = _write_entry(W, G, t, params, g_cur)
-    return _sgd_math(params, g_cur, lr), W, G, dw, dg, admit
+    return _online_explicit_math(params, vel, w_t, g_t, g_base, g_one, lr,
+                                 kept, dB, mom, sign=sign, momentum=momentum)
+
+
+@partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum"))
+def _online_explicit_fused(params, vel, t, W, G, cols, sd: DeviceSchedule,
+                           dWs, dGs, eps, mom, *, grad_fn, sign: int,
+                           momentum: bool):
+    """`_online_explicit_step` with the Algorithm-4 pair admission resolved
+    ON DEVICE: once the ring buffer is full, admission is a `where`-gated
+    shift-append of the stacked (m, ...) pair arrays — the same rule
+    `<dg, dw> >= eps * <dw, dw>` LbfgsBuffer applies on the host, evaluated
+    without any round-trip, so a steady online request runs with ZERO
+    mid-request host syncs (guard off)."""
+    new_p, new_vel, g_cur, dw, dg, admit = _online_explicit_step(
+        params, vel, t, W, G, cols, sd, mom, grad_fn=grad_fn, sign=sign,
+        momentum=momentum)
+    ok = jnp.logical_and(admit[1] > 0.0, admit[0] >= eps * admit[1])
+    dWs = jax.tree.map(
+        lambda b, n: jnp.where(
+            ok, jnp.concatenate([b[1:], n[None].astype(b.dtype)]), b),
+        dWs, dw)
+    dGs = jax.tree.map(
+        lambda b, n: jnp.where(
+            ok, jnp.concatenate([b[1:], n[None].astype(b.dtype)]), b),
+        dGs, dg)
+    return new_p, new_vel, g_cur, dWs, dGs
 
 
 def run_online_request(
@@ -886,68 +1003,192 @@ def run_online_request(
     history: TrainingHistory,
     W, G,
     cols,
-    req: int,
+    sched: ReplaySchedule,
     cfg: DeltaGradConfig,
-    live_mask: np.ndarray,
-    idx_all: np.ndarray,
     static_dev: Optional[Tuple[jax.Array, jax.Array]] = None,
 ) -> Tuple[Any, Any, Any, RetrainStats]:
-    """One deletion request against the current (stacked) cached path.
-    Returns (params, W', G', stats); the caller flushes W'/G' into history.
-    `static_dev` is the request-invariant (idx, lr) pair already on device —
-    pass it so a stream uploads the (T, B) schedule once, not per request."""
+    """One online request (delete or add — `sched.mode`) against the current
+    (stacked) cached path.  Returns (params, W', G', stats); the caller
+    flushes W'/G' into history.
+
+    `sched` comes from `data.sampler.build_online_schedule` (the caller owns
+    the stream state: liveness, added rows, join masks).  `static_dev` is
+    the request-invariant (idx, lr) pair already on device — pass it so a
+    stream uploads the (T, B [+pad]) schedule once, not per request.
+
+    History rewrites are fully deferred: explicit steps hand their (w, g)
+    rewrite back instead of scattering per step, segment outputs stay as
+    stacked chunks, and each maximal contiguous region of rewrites lands in
+    ONE jitted assembly + `lax.dynamic_update_slice` at the end of the
+    request (sound because every step is visited once and reads only its
+    original entry).  Momentum-trained histories replay with the heavy-ball
+    velocity reconstructed from vel_0 = 0 in the scan carry; the cache keeps
+    storing plain gradients, so each request's reconstruction is
+    self-contained (Algorithm 3 with momentum)."""
     meta = history.meta
-    sched = build_schedule(meta.seed, meta.steps, meta.n, meta.batch_size,
-                           np.asarray([req], np.int64), "delete", 1,
-                           meta.lr_at, idx_all=idx_all, live_mask=live_mask)
+    op = sched.mode
+    sign = 1 if op == "delete" else -1
+    momentum = bool(meta.momentum)
     plan = build_plan(cfg, sched, online=True)
     sd = to_device(sched, *(static_dev or (None, None)))
     buffer = LbfgsBuffer(cfg.history_size, curvature_eps=cfg.curvature_eps)
     params = jax.tree.map(lambda x: x[0], W)  # w_0 is never rewritten
+    vel = _tree_zeros(params) if momentum else None
     clip = jnp.float32(cfg.guard_norm_clip)
+    mom = jnp.float32(meta.momentum)
     stats = RetrainStats()
     T = meta.steps
     seg_oks: List[Tuple[int, int, Any]] = []
 
+    # Deferred history rewrites.  Every step t is visited exactly once per
+    # request and only ever READS the original entry at t, so nothing needs
+    # to land in (W, G) before the request completes: rewrites accumulate as
+    # contiguous chunks — explicit-step runs and scanned-segment outputs —
+    # and ONE jitted assembly per contiguous region scatters them all
+    # (`_flush_chunks`; steady streams compile it once).
+    regions: List[Tuple[int, List[str], List, List]] = []
+    write_end = -1
+
+    def _region(t):
+        if not regions or t != write_end:
+            regions.append((t, [], [], []))
+        return regions[-1]
+
+    def note_single(t, w, g):
+        nonlocal write_end
+        _, kinds, pw, pg = _region(t)
+        if not kinds or kinds[-1] != "run":
+            kinds.append("run")
+            pw.append([])
+            pg.append([])
+        pw[-1].append(w)
+        pg[-1].append(g)
+        write_end = t + 1
+
+    def note_seg(t, span, w, g):
+        nonlocal write_end
+        _, kinds, pw, pg = _region(t)
+        kinds.append("seg")
+        pw.append(w)
+        pg.append(g)
+        write_end = t + span
+
+    # L-BFGS pair state runs in two phases.  While the ring is FILLING, the
+    # host buffer decides admission (one sync per explicit run).  Once it is
+    # full — normally right after the burn-in — the stacked (m, ...) pair
+    # arrays are adopted as a DEVICE ring and `_online_explicit_fused`
+    # resolves admission with a where-gated shift-append: the rest of the
+    # request runs with zero host syncs (guard off).
+    dWs = dGs = None
+    eps = jnp.float32(cfg.curvature_eps)
+
+    def explicit_host(params, vel, t, r2):
+        """Explicit steps [t, r2) dispatched back-to-back; the admission
+        scalars sync ONCE at the end of the run — explicit steps never read
+        the pair buffer, so admission can lag until the next segment."""
+        pairs: List[Tuple[Any, Any]] = []
+        admits: List[Any] = []
+        for tt in range(t, r2):
+            p_in = params
+            params, vel, g_cur, dw, dg, admit = _online_explicit_step(
+                params, vel, tt, W, G, cols, sd, mom, grad_fn=grad_fn,
+                sign=sign, momentum=momentum)
+            note_single(tt, p_in, g_cur)
+            pairs.append((dw, dg))
+            admits.append(admit)
+        ads = np.asarray(admits[0])[None] if len(admits) == 1 \
+            else np.asarray(jnp.stack(admits))
+        for (dw, dg), ad in zip(pairs, ads):
+            buffer.add_pair(dw, dg, float(ad[0]), float(ad[1]))
+        return params, vel
+
+    def do_explicit(params, vel, t, r2):
+        nonlocal dWs, dGs
+        if dWs is None:
+            params, vel = explicit_host(params, vel, t, r2)
+            if len(buffer) == buffer.capacity:
+                dWs, dGs = buffer.stacked()
+        else:
+            for tt in range(t, r2):
+                p_in = params
+                params, vel, g_cur, dWs, dGs = _online_explicit_fused(
+                    params, vel, tt, W, G, cols, sd, dWs, dGs, eps, mom,
+                    grad_fn=grad_fn, sign=sign, momentum=momentum)
+                note_single(tt, p_in, g_cur)
+        stats.grad_examples += int(
+            (sched.kept[t:r2] + sched.dB[t:r2]).sum())
+        stats.explicit_steps += r2 - t
+        return params, vel
+
     t = 0
     while t < T:
         code = plan[t]
-        if code == EXPLICIT or (code == APPROX and len(buffer) == 0):
-            params, W, G, dw, dg, admit = _online_explicit_step(
-                params, t, W, G, cols, sd, grad_fn=grad_fn)
-            curv, ss = np.asarray(admit)
-            buffer.add_pair(dw, dg, float(curv), float(ss))
-            stats.grad_examples += int(sched.kept[t])
-            stats.explicit_steps += 1
-            t += 1
-        elif code == SKIP and len(buffer) == 0:
-            t += 1
+        have_pairs = dWs is not None or len(buffer) > 0
+        if code == EXPLICIT or (code == APPROX and not have_pairs):
+            r2 = t + 1
+            if code == EXPLICIT:
+                while r2 < T and plan[r2] == EXPLICIT:
+                    r2 += 1
+            params, vel = do_explicit(params, vel, t, r2)
+            t = r2
+        elif code == SKIP and not have_pairs:
+            t += 1  # entry stays as-is; the write region simply breaks here
         else:
             t2 = t
             while t2 < T and plan[t2] != EXPLICIT:
                 t2 += 1
-            dWs, dGs = buffer.stacked()
-            params, w_wr, g_wr, oks = _online_segment(
-                params, jnp.int32(t), W, G, cols, sd, dWs, dGs, clip,
-                grad_fn=grad_fn, guard=cfg.guard, span=t2 - t)
-            W, G = _write_segment(W, G, w_wr, g_wr, jnp.int32(t))
-            seg_oks.append((t, t2, oks))
-            t = t2
+            while t < t2:
+                pW, pG = (dWs, dGs) if dWs is not None else buffer.stacked()
+                p_in, v_in = params, vel
+                params, vel, w_wr, g_wr, oks = _online_segment(
+                    p_in, v_in, jnp.int32(t), W, G, cols, sd, pW, pG, clip,
+                    mom, grad_fn=grad_fn, sign=sign, momentum=momentum,
+                    span=t2 - t)
+                if cfg.guard:
+                    # segment-splitting retry (see run_replay): the tripped
+                    # step becomes an explicit step that admits its pair and
+                    # rewrites the exact post-request gradient; the failed
+                    # segment's outputs are never noted, so they are simply
+                    # dropped from the flush.
+                    fell = np.flatnonzero(
+                        (plan[t:t2] != SKIP) & ~np.asarray(oks))
+                    if fell.size:
+                        tf = t + int(fell[0])
+                        if tf > t:
+                            params, vel, w_wr, g_wr, oks_p = _online_segment(
+                                p_in, v_in, jnp.int32(t), W, G, cols, sd,
+                                pW, pG, clip, mom, grad_fn=grad_fn,
+                                sign=sign, momentum=momentum, span=tf - t)
+                            note_seg(t, tf - t, w_wr, g_wr)
+                            seg_oks.append((t, tf, oks_p))
+                        else:
+                            params, vel = p_in, v_in
+                        stats.guard_fallbacks += 1
+                        params, vel = do_explicit(params, vel, tf, tf + 1)
+                        t = tf + 1
+                        continue
+                note_seg(t, t2 - t, w_wr, g_wr)
+                seg_oks.append((t, t2, oks))
+                t = t2
+
+    for t0_, kinds, pw, pg in regions:
+        W, G = _flush_chunks(
+            W, G, jnp.int32(t0_),
+            tuple(tuple(p) if isinstance(p, list) else p for p in pw),
+            tuple(tuple(p) if isinstance(p, list) else p for p in pg),
+            kinds=tuple(kinds))
 
     for t0_, t1_, oks in seg_oks:
-        oks = np.asarray(oks)
         nonskip = plan[t0_:t1_] != SKIP
         if cfg.guard:
-            fell = nonskip & ~oks
-            stats.approx_steps += int((nonskip & oks).sum())
-            stats.guard_fallbacks += int(fell.sum())
-            stats.explicit_steps += int(fell.sum())  # exact update applied
-            stats.grad_examples += int(
-                sched.kept[t0_:t1_].astype(np.int64)[fell].sum())
+            stats.approx_steps += int((nonskip & np.asarray(oks)).sum())
         else:
             stats.approx_steps += int(nonskip.sum())
         stats.grad_examples += int(
             sched.dB[t0_:t1_].astype(np.int64)[nonskip].sum())
     stats.skipped_steps = int((plan == SKIP).sum())
-    stats.grad_examples_baseline = int(sched.kept.astype(np.int64).sum())
+    base = sched.kept.astype(np.int64)
+    if op == "add":
+        base = base + sched.dB.astype(np.int64)
+    stats.grad_examples_baseline = int(base.sum())
     return params, W, G, stats

@@ -113,8 +113,9 @@ class HistoryMeta:
     lr_schedule: Tuple[Tuple[int, float], ...]  # piecewise-constant (from_step, lr)
     l2: float = 0.0
     # beyond-paper: heavy-ball momentum (paper covers plain SGD; with
-    # momentum the retraining path maintains its own velocity from the
-    # corrected gradients — see core/deltagrad.py and tests)
+    # momentum every replay — batch or online — reconstructs its own
+    # velocity from vel_0 = 0 using the corrected gradients, so the cache
+    # stores plain gradients only — see core/engine.py and tests)
     momentum: float = 0.0
     extra: Dict[str, Any] = field(default_factory=dict)
 
@@ -294,24 +295,27 @@ class TrainingHistory:
                     return True
         return False
 
-    def replace_from_stacked(self, Ws, Gs) -> None:
+    def replace_from_stacked(self, Ws, Gs, final_params=None) -> None:
         """Bulk-rewrite the whole cache from edited stacked arrays (the online
-        engine's end-of-request flush)."""
+        engine's end-of-request flush); pass `final_params` to finalize the
+        post-request model in the same call."""
         if self.tier == "stacked" or (self.tier == "device"
                                       and not self._multi_device()):
             self._params, self._grads = [], []
             self._stacked = (Ws, Gs)
             self._stacked_len = jax.tree.leaves(Ws)[0].shape[0]
             self._pending_over = {}
-            return
-        T = len(self)
-        self._stacked = None
-        for t in range(T):
-            self.overwrite(t, jax.tree.map(lambda x: x[t], Ws),
-                           jax.tree.map(lambda x: x[t], Gs))
-        # do NOT cache (Ws, Gs) here: under a lossy codec the raw arrays
-        # would diverge from what entry() decodes back; let stacked_view()
-        # rebuild from the encoded entries so both read paths agree
+        else:
+            T = len(self)
+            self._stacked = None
+            for t in range(T):
+                self.overwrite(t, jax.tree.map(lambda x: x[t], Ws),
+                               jax.tree.map(lambda x: x[t], Gs))
+            # do NOT cache (Ws, Gs) here: under a lossy codec the raw arrays
+            # would diverge from what entry() decodes back; let stacked_view()
+            # rebuild from the encoded entries so both read paths agree
+        if final_params is not None:
+            self.finalize(final_params)
 
     # -- read path ----------------------------------------------------------
 

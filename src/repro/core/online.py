@@ -5,64 +5,61 @@ optimization-path cache is REWRITTEN in place so the next request corrects
 the *previous DeltaGrad path* rather than the original training run:
 
   explicit steps:  w_t <- w^I_t,  g_t <- exact mean gradient of the current
-                   (post-deletion) objective at w^I_t;
+                   (post-request) objective at w^I_t;
   approx steps:    w_t <- w^I_t,  g_t <- g^a_t, the approximated gradient
                    (paper eq. (S62)) — this is what keeps per-request cost
                    independent of how many requests came before.
 
 The minibatch schedule is always replayed against the ORIGINAL dataset
 numbering; cumulative deletions shrink each batch's effective size
-``B_t(k) = B - |batch_t ∩ R_k|`` (paper's n-k bookkeeping).
+``B_t(k) = B - |batch_t ∩ R_k|`` (paper's n-k bookkeeping), and rows
+appended by earlier ADDITION requests extend each batch through their
+precomputed, prefix-stable join masks (``data.sampler``).  Heavy-ball
+histories are supported: each request reconstructs the velocity from
+``vel_0 = 0`` while replaying, so the cache keeps storing plain gradients.
 
-Deletion streams run on the compiled engine (`core.engine.run_online_request`):
-per request, approx segments execute under `lax.scan` against the stacked
-history and the rewrite pairs are written back with
-`lax.dynamic_update_slice`; the storage flush is an O(1) pointer swap after
-each request.  Addition streams, offload tiers (host/disk) and
-`impl="python"` use the pre-refactor loop below.
+`OnlineEngine` owns the stream state (liveness over original AND added
+rows, added-row join masks, the request-invariant device schedule) and
+serves every request flavor — delete or add, SGD or momentum — through
+`core.engine.run_online_request`: approx segments execute under `lax.scan`
+against the stacked history, rewrites land in batched
+`lax.dynamic_update_slice` flushes, and the storage flush is an O(1)
+pointer swap after each request.  `impl="python"` and the offload tiers
+(host/disk) use `_online_request_python`, a per-step oracle driving the
+SAME precomputed `ReplaySchedule` through the same jitted step math, kept
+as the parity reference.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, List, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.deltagrad import (DeltaGradConfig, Objective, RetrainStats,
-                                  _next_pow2, _sgd_apply, _tree_zeros)
-from repro.core.engine import _approx_math, run_online_request
+                                  _next_pow2, _tree_zeros)
+from repro.core.engine import (SKIP, EXPLICIT, _online_approx_step,
+                               _online_explicit_math, build_plan,
+                               run_online_request)
 from repro.core.history import TrainingHistory
-from repro.core.lbfgs import LbfgsBuffer, lbfgs_hvp_stacked_pytree
+from repro.core.lbfgs import LbfgsBuffer
 from repro.data.dataset import Dataset
-from repro.data.sampler import batch_indices, batch_indices_all
-from repro.utils.tree import tree_all_finite, tree_norm, tree_sub
-
-
-@partial(jax.jit, static_argnames=("sign",))
-def _online_approx_update(params, w_t, g_t, dWs, dGs, g_one, lr, b_eff, has,
-                          clip, sign: int):
-    """One fused approx step; also returns g^a (eq. S62) for the rewrite."""
-    v = tree_sub(params, w_t)
-    bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v)
-    # gradient of the post-request objective at params
-    g_new = _approx_math(g_t, bv, g_one, b_eff, has, sign)
-    new_params = jax.tree.map(lambda p, g: p - lr * g, params, g_new)
-    ok = jnp.logical_and(
-        tree_all_finite(new_params),
-        tree_norm(bv) <= clip * tree_norm(v),
-    )
-    return new_params, g_new, ok
+from repro.data.sampler import (ReplaySchedule, addition_mask_all,
+                                batch_indices_all, build_online_schedule)
 
 
 @dataclass
 class OnlineStats:
     per_request: List[RetrainStats] = field(default_factory=list)
     wall_time_s: float = 0.0
+    # first-request trace/compile cost, measured by the engine's warm-up
+    # request (0.0 when warm-up is off) — kept OUT of wall_time_s so stream
+    # throughput numbers aren't dominated by tracing
+    compile_time_s: float = 0.0
 
     @property
     def grad_examples(self) -> int:
@@ -77,177 +74,271 @@ class OnlineStats:
         return self.grad_examples_baseline / max(self.grad_examples, 1)
 
 
+Request = Union[int, Tuple[str, int]]
+
+
+class OnlineEngine:
+    """Persistent Algorithm-3 request engine over one cached training run.
+
+    Owns everything that outlives a single request: the replayed (T, B)
+    index matrix (uploaded once), liveness over original and added rows,
+    the added-row join masks (grown prefix-stably as adds arrive), and the
+    extended index matrix whose add-columns pad to powers of two so the
+    compiled segment shapes stay stable across a stream.  Both backends
+    serve requests from the same `build_online_schedule` output, so they
+    see identical per-step row sets, weights, and learning rates.
+    """
+
+    def __init__(self, objective: Objective, history: TrainingHistory,
+                 ds: Dataset, cfg: DeltaGradConfig, warmup=False,
+                 add_capacity: int = 0):
+        self.objective = objective
+        self.history = history
+        self.ds = ds
+        self.cfg = cfg
+        # preallocated add-column block: sizing it for the expected number
+        # of additions up front keeps the extended-schedule width (and so
+        # every compiled segment shape) constant across the stream
+        self.add_capacity = int(add_capacity)
+        self.grad_fn = objective.make_grad_fn()
+        meta = history.meta
+        # offload tiers stay on the per-step oracle (stacking them on device
+        # would defeat the offload — ROADMAP: stream segments host->device)
+        self.impl = "python" if (cfg.impl == "python"
+                                 or history.tier in ("host", "disk")) \
+            else "scan"
+        self.idx_all = batch_indices_all(meta.seed, meta.steps, meta.n,
+                                         meta.batch_size)
+        # Rows already deleted (by an earlier online stream over this same
+        # rewritten history, or by a batch replay) stay masked out of the
+        # replayed batches: the schedule then matches the CURRENT dataset.
+        # If the cache was not rewritten for some of those deletions (batch
+        # `deltagrad_retrain` does not rewrite), the first requests' explicit
+        # steps serve as catch-up corrections — they evaluate exact
+        # current-objective gradients and rewrite the cache toward
+        # consistency, which is how Algorithm 3 absorbs any cache/objective
+        # mismatch.  Rows added by an EARLIER engine instance cannot be
+        # recovered from the dataset alone; reuse one OnlineEngine per
+        # rewritten history (as `core.api.Unlearner` does) to keep their
+        # join columns alive.
+        self.live = ~np.asarray(ds.removed, dtype=bool)
+        self.added: List[int] = []
+        self._joins = None  # (T, capacity) bool, prefix-stable columns
+        self.params = history.final_params
+        self.compile_time_s = 0.0
+        if self.impl == "scan":
+            self.W, self.G = history.stacked_view()
+            self._lr_dev = jnp.asarray(
+                [meta.lr_at(t) for t in range(meta.steps)], jnp.float32)
+            self._idx_dev = None  # uploaded lazily, re-used across requests
+            self._idx_ver = None  # (len(added), width) of the upload
+            if warmup:  # True, or an iterable of op flavors to precompile
+                self._warmup(("delete",) if warmup is True else tuple(warmup))
+
+    # -- stream state ------------------------------------------------------
+
+    @property
+    def _add_pad(self) -> int:
+        need = max(len(self.added), self.add_capacity)
+        return _next_pow2(need) if need else 0
+
+    def _ensure_joins(self, n_cols: int) -> None:
+        if n_cols and (self._joins is None
+                       or self._joins.shape[1] < n_cols):
+            meta = self.history.meta
+            self._joins = addition_mask_all(
+                meta.seed, meta.steps, meta.n, meta.batch_size,
+                _next_pow2(n_cols))
+
+    def _schedule(self, op: str, row: int) -> ReplaySchedule:
+        meta = self.history.meta
+        self._ensure_joins(len(self.added) + (1 if op == "add" else 0))
+        return build_online_schedule(
+            meta.seed, meta.steps, meta.n, meta.batch_size, row, op,
+            meta.lr_at, self.live, np.asarray(self.added, np.int64),
+            self._joins, self._add_pad, idx_all=self.idx_all)
+
+    def _static_dev(self, sched: ReplaySchedule):
+        """(idx, lr) on device, re-uploaded only when the added set grows or
+        the padded schedule width changes (e.g. add_capacity was raised)."""
+        key = (len(self.added), sched.idx.shape[1])
+        if self._idx_ver != key or self._idx_dev is None:
+            self._idx_dev = jnp.asarray(sched.idx, jnp.int32)
+            self._idx_ver = key
+        return self._idx_dev, self._lr_dev
+
+    def _warmup(self, ops=("delete",)) -> None:
+        """Trace + compile the request programs on throwaway requests (one
+        per op flavor the stream will serve — the compiled programs key on
+        the request sign).
+
+        `run_online_request` is purely functional over (W, G), so discarding
+        its outputs leaves no trace; the measured time is the first-request
+        compile cost reported as `OnlineStats.compile_time_s`."""
+        live_rows = np.flatnonzero(self.live[:self.history.meta.n])
+        if live_rows.size == 0:
+            return
+        t0 = time.perf_counter()
+        for op in ops:
+            # an existing live row stands in for an appended one in add
+            # mode: the schedule only needs a gatherable row id + the next
+            # free join-mask column
+            sched = self._schedule(op, int(live_rows[0]))
+            out = run_online_request(self.grad_fn, self.history, self.W,
+                                     self.G, self.ds.device_columns(), sched,
+                                     self.cfg,
+                                     static_dev=self._static_dev(sched))
+            jax.block_until_ready(out[0])
+        self.compile_time_s = time.perf_counter() - t0
+
+    # -- request serving ---------------------------------------------------
+
+    def request(self, op: str, row: int) -> RetrainStats:
+        """Serve one delete/add request, rewriting history + bookkeeping."""
+        assert op in ("delete", "add"), op
+        row = int(row)
+        if row >= len(self.live):  # dataset grew since engine construction
+            grown = np.ones(self.ds.n, dtype=bool)
+            grown[:len(self.live)] = self.live
+            self.live = grown
+        if op == "delete":
+            assert self.live[row], f"row {row} already deleted"
+        else:
+            assert self.history.meta.n <= row < self.ds.n, (
+                "add requests name rows appended AFTER the cached training "
+                f"run (expected {self.history.meta.n} <= row < {self.ds.n}, "
+                f"got {row}) — an original row would be double-counted")
+        sched = self._schedule(op, row)
+
+        if self.impl == "scan":
+            params, self.W, self.G, rstat = run_online_request(
+                self.grad_fn, self.history, self.W, self.G,
+                self.ds.device_columns(), sched, self.cfg,
+                static_dev=self._static_dev(sched))
+            # flush per request (O(1) pointer swap for stacked/device
+            # storage) so dataset bookkeeping and the rewritten cache never
+            # diverge even if a later request dies mid-stream
+            self.history.replace_from_stacked(self.W, self.G,
+                                              final_params=params)
+        else:
+            params, rstat = _online_request_python(
+                self.grad_fn, self.history, self.ds, sched, self.cfg)
+            self.history.finalize(params)
+
+        if op == "delete":
+            self.live[row] = False
+            self.ds.removed[row] = True
+        else:
+            self.added.append(row)
+        self.params = params
+        return rstat
+
+
 def online_deltagrad(
     objective: Objective,
     history: TrainingHistory,
     ds: Dataset,
-    requests: Sequence[int],
+    requests: Sequence[Request],
     cfg: DeltaGradConfig,
     mode: str = "delete",
+    warmup: bool = False,
 ) -> Tuple[Any, OnlineStats]:
-    """Process deletion (or addition) requests sequentially, rewriting history.
+    """Process deletion/addition requests sequentially, rewriting history.
 
-    For mode == "add", `requests` are indices of rows already appended to `ds`
-    (ds.n > history.meta.n); each request inserts one of them into the replayed
-    batches with the deterministic `addition_mask` of `data.sampler` — here,
-    for single-sample requests, the sample simply joins every batch with
-    probability B/n via the same hash (handled by treating it as a deleted
-    sample of the *future* run and running the add-update).
+    `requests` is either a sequence of row indices (all treated as `mode`)
+    or a sequence of ``(op, row)`` pairs for mixed delete/add streams.  For
+    additions, rows must already be appended to `ds` (``ds.n`` >
+    ``history.meta.n``); each joins the replayed batches through the
+    deterministic `addition_mask` of `data.sampler`, matching the inclusion
+    probability of original samples.  `warmup=True` runs (and times) a
+    throwaway first request so `OnlineStats.compile_time_s` absorbs the
+    trace/compile cost and `wall_time_s` measures the warm stream only.
     """
     assert mode in ("delete", "add")
-    # Algorithm 3 rewrites the cache assuming plain-SGD replay; a heavy-ball
-    # path would need per-request velocity reconstruction (ROADMAP item) —
-    # silently applying SGD to a momentum-cached path diverges unboundedly
-    assert not history.meta.momentum, (
-        "online_deltagrad does not support momentum-trained histories yet")
-    if mode == "add" or cfg.impl == "python" \
-            or history.tier in ("host", "disk"):
-        return _online_python(objective, history, ds, requests, cfg, mode)
-
-    meta = history.meta
-    grad_fn = objective.make_grad_fn()
-    cols = ds.device_columns()
-    idx_all = batch_indices_all(meta.seed, meta.steps, meta.n,
-                                meta.batch_size)
-    # the (T, B) index matrix and lr vector never change across requests —
-    # upload them once
-    static_dev = (jnp.asarray(idx_all, jnp.int32),
-                  jnp.asarray([meta.lr_at(t) for t in range(meta.steps)],
-                              jnp.float32))
-    live = np.ones(meta.n, dtype=bool)
-    W, G = history.stacked_view()
-    params = history.final_params
-    stats = OnlineStats()
+    requests = list(requests)
+    ops = [r[0] if isinstance(r, (tuple, list)) else mode for r in requests]
+    n_adds = ops.count("add")
+    engine = OnlineEngine(objective, history, ds, cfg,
+                          warmup=sorted(set(ops)) if warmup else False,
+                          add_capacity=n_adds)
+    stats = OnlineStats(compile_time_s=engine.compile_time_s)
     t_start = time.perf_counter()
-
-    for req in requests:
-        req = int(req)
-        params, W, G, rstat = run_online_request(
-            grad_fn, history, W, G, cols, req, cfg, live, idx_all,
-            static_dev=static_dev)
-        # flush per request (O(1) pointer swap for stacked/device storage)
-        # so dataset bookkeeping and the rewritten cache never diverge even
-        # if a later request dies mid-stream
-        history.replace_from_stacked(W, G)
-        history.finalize(params)
-        live[req] = False
-        ds.removed[req] = True
-        stats.per_request.append(rstat)
-
-    jax.block_until_ready(params)
+    for r in requests:
+        op, row = r if isinstance(r, (tuple, list)) else (mode, r)
+        stats.per_request.append(engine.request(op, int(row)))
+    jax.block_until_ready(engine.params)
     stats.wall_time_s = time.perf_counter() - t_start
-    return params, stats
+    return engine.params, stats
 
 
-def _online_python(objective, history, ds, requests, cfg, mode):
-    """Pre-refactor per-step loop: additions, disk tier, parity oracle."""
+def _online_request_python(grad_fn, history, ds, sched: ReplaySchedule,
+                           cfg) -> Tuple[Any, RetrainStats]:
+    """Per-step oracle: one request driven from the host over the SAME
+    precomputed schedule and jitted step math as the scan path (additions,
+    momentum, offload tiers, and the parity reference)."""
     meta = history.meta
-    grad_fn = objective.make_grad_fn()
-    B = min(meta.batch_size, meta.n)
-    r_pad = 1  # single-sample requests
-    add_pad = _next_pow2(len(list(requests))) if mode == "add" else 0
-    batch_pad = B + add_pad
-
+    op = sched.mode
+    sign = 1 if op == "delete" else -1
+    momentum = bool(meta.momentum)
+    plan = build_plan(cfg, sched, online=True)
+    buffer = LbfgsBuffer(cfg.history_size, curvature_eps=cfg.curvature_eps)
+    params = history.params_at(0)
+    vel = _tree_zeros(params) if momentum else None
+    mom = jnp.float32(meta.momentum)
     clip = jnp.float32(cfg.guard_norm_clip)
+    stats = RetrainStats()
 
-    removed_so_far: List[int] = []
-    added_so_far: List[int] = []
-    params = history.final_params
-    stats = OnlineStats()
-    t_start = time.perf_counter()
+    def changed_grad(t):
+        has = jnp.float32(1.0 if sched.dB[t] > 0 else 0.0)
+        g = grad_fn(params, ds.take(sched.changed_idx[t]),
+                    jnp.asarray(sched.changed_w[t]))
+        return jax.tree.map(lambda x: has * x, g)
 
-    for req in requests:
-        req = int(req)
-        buffer = LbfgsBuffer(cfg.history_size, curvature_eps=cfg.curvature_eps)
-        params = history.params_at(0)
-        rstat = RetrainStats()
+    for t in range(meta.steps):
+        code = plan[t]
+        if code == SKIP:
+            stats.skipped_steps += 1
+            continue
+        kept = jnp.float32(sched.kept[t])
+        dB = jnp.float32(sched.dB[t])
+        lr = jnp.float32(meta.lr_at(t))
+        w_t, g_t = history.entry(t)
+        explicit = code == EXPLICIT or len(buffer) == 0
+        g_one = None
 
-        for t in range(meta.steps):
-            idx = batch_indices(meta.seed, t, meta.n, meta.batch_size)
-            # rows already gone from previous requests are masked out of the
-            # replayed batch; the cached g_t already excludes them.
-            live = idx[~np.isin(idx, removed_so_far)] if removed_so_far else idx
-            if mode == "delete":
-                in_batch = req in set(live.tolist())
-                base = live  # batch the cached (pre-request) path used
+        if not explicit:
+            g_one = changed_grad(t)
+            stats.grad_examples += int(sched.dB[t])
+            dWs, dGs = buffer.stacked()
+            new_p, new_vel, g_new, ok = _online_approx_step(
+                params, vel, w_t, g_t, dWs, dGs, g_one, lr, kept, dB, clip,
+                mom, sign=sign, momentum=momentum)
+            if cfg.guard and not bool(ok):
+                stats.guard_fallbacks += 1
+                explicit = True  # g_one is reused — true cost kept + dB
             else:
-                from repro.data.sampler import addition_mask
+                history.overwrite(t, params, g_new)
+                params, vel = new_p, new_vel
+                stats.approx_steps += 1
 
-                n_new = len(added_so_far) + 1
-                joins = addition_mask(meta.seed, t, meta.n, meta.batch_size, n_new)
-                in_batch = bool(joins[-1])
-                prev_added = np.asarray(added_so_far, dtype=np.int64)[joins[:-1]]
-                base = np.concatenate([live, prev_added])
-            eff_prev = len(base)
-            has = 1.0 if in_batch else 0.0
-            lr = jnp.float32(meta.lr_at(t))
-            rstat.grad_examples_baseline += eff_prev - (1 if (mode == "delete" and in_batch) else 0)
+        if explicit:
+            g_base = grad_fn(params, ds.take(sched.idx[t]),
+                             jnp.asarray(sched.kept_w[t]))
+            if g_one is None:
+                g_one = changed_grad(t)
+                stats.grad_examples += int(sched.dB[t])
+            stats.grad_examples += int(sched.kept[t])
+            p_in = params
+            params, vel, g_cur, dw, dg, admit = _online_explicit_math(
+                params, vel, w_t, g_t, g_base, g_one, lr, kept, dB, mom,
+                sign=sign, momentum=momentum)
+            curv, ss = np.asarray(admit)
+            buffer.add_pair(dw, dg, float(curv), float(ss))
+            history.overwrite(t, p_in, g_cur)
+            stats.explicit_steps += 1
 
-            if mode == "delete" and in_batch and eff_prev <= 1:
-                rstat.skipped_steps += 1
-                continue
-
-            explicit = cfg.is_explicit(t) or len(buffer) == 0
-            w_t, g_t = history.entry(t)
-
-            if not explicit:
-                if in_batch:
-                    cb, cw = ds.padded_batch(np.array([req]), r_pad)
-                    g_one = grad_fn(params, cb, cw)
-                    rstat.grad_examples += 1
-                else:
-                    g_one = _tree_zeros(params)
-                dWs, dGs = buffer.stacked()
-                sign = 1 if mode == "delete" else -1
-                new_params, g_new, ok = _online_approx_update(
-                    params, w_t, g_t, dWs, dGs, g_one, lr,
-                    jnp.float32(eff_prev), jnp.float32(has), clip, sign,
-                )
-                if cfg.guard and not bool(ok):
-                    rstat.guard_fallbacks += 1
-                    explicit = True
-                else:
-                    history.overwrite(t, params, g_new)
-                    params = new_params
-                    rstat.approx_steps += 1
-
-            if explicit:
-                if mode == "delete":
-                    cur = base[base != req]
-                else:
-                    cur = np.concatenate([base, np.array([req], dtype=np.int64)]) \
-                        if in_batch else base
-                kb, kw = ds.padded_batch(cur, batch_pad)
-                g_cur = grad_fn(params, kb, kw)  # mean grad, post-request batch
-                rstat.grad_examples += len(cur)
-                # pair: gradient over the PRE-request batch at params
-                if in_batch:
-                    cb, cw = ds.padded_batch(np.array([req]), r_pad)
-                    g_one = grad_fn(params, cb, cw)
-                    if mode == "delete":
-                        g_prev = jax.tree.map(
-                            lambda a, b: (len(cur) * a + b) / eff_prev, g_cur, g_one
-                        )
-                    else:
-                        g_prev = jax.tree.map(
-                            lambda a, b: ((len(cur)) * a - b) / eff_prev, g_cur, g_one
-                        )
-                else:
-                    g_prev = g_cur
-                dw = tree_sub(params, w_t)
-                dg = tree_sub(g_prev, g_t)
-                buffer.add(dw, dg)
-                history.overwrite(t, params, g_cur)
-                params = _sgd_apply(params, g_cur, lr)
-                rstat.explicit_steps += 1
-
-        if mode == "delete":
-            removed_so_far.append(req)
-            ds.removed[req] = True
-        else:
-            added_so_far.append(req)
-        history.finalize(params)
-        stats.per_request.append(rstat)
-
-    stats.wall_time_s = time.perf_counter() - t_start
+    base = sched.kept.astype(np.int64)
+    if op == "add":
+        base = base + sched.dB.astype(np.int64)
+    stats.grad_examples_baseline = int(base.sum())
     return params, stats

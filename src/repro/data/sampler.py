@@ -63,7 +63,13 @@ def batch_indices_all(seed: int, steps: int, n: int, batch_size: int) -> np.ndar
 
 def addition_mask_all(seed: int, steps: int, n: int, batch_size: int,
                       n_added: int) -> np.ndarray:
-    """(steps, n_added) bool; row t == addition_mask(seed, t, ...)."""
+    """(steps, n_added) bool; row t == addition_mask(seed, t, ...).
+
+    Column j is PREFIX-STABLE in n_added: the per-step SeedSequence stream is
+    read sequentially, so sample j's joins are independent of how many samples
+    were added after it.  The online engine relies on this to grow one wide
+    (T, capacity) mask across an addition stream instead of resampling per
+    request."""
     out = np.empty((steps, n_added), dtype=bool)
     for t in range(steps):
         out[t] = addition_mask(seed, t, n, batch_size, n_added)
@@ -173,4 +179,99 @@ def build_schedule(
         lr=lr,
         mode=mode,
         r_pad=r_pad,
+    )
+
+
+def build_online_schedule(
+    seed: int,
+    steps: int,
+    n: int,
+    batch_size: int,
+    req: int,
+    op: str,
+    lr_at,
+    live: np.ndarray,
+    added_ids: np.ndarray,
+    joins: Optional[np.ndarray],
+    add_pad: int,
+    idx_all: Optional[np.ndarray] = None,
+) -> ReplaySchedule:
+    """Replay plan for ONE online request (Algorithm 3, Appendix C.2).
+
+    The replayed batch is extended with one column per row appended by
+    earlier addition requests: columns ``[0, B)`` hold the original
+    minibatch schedule, columns ``[B, B + add_pad)`` hold ``added_ids``
+    (padding columns point at row 0 with weight 0).  ``kept_w`` marks
+    POST-request membership — the request row itself always rides the
+    ``changed`` slot, so ``kept`` is the post-request effective batch size
+    and the PRE-request size is ``kept + dB`` for deletions (resp. ``kept``
+    pre / ``kept + dB`` post for additions).
+
+    Args:
+      req:       row id of the request (original or previously-added row for
+                 delete; a row already appended to the dataset for add).
+      op:        "delete" | "add".
+      live:      bool per row id (original and added), False once deleted by
+                 an earlier request — Algorithm 3's n-k bookkeeping.
+      added_ids: (A,) rows appended by earlier ADD requests, arrival order
+                 (join-mask column j belongs to added_ids[j]).
+      joins:     (T, >= A [+1 for op=="add"]) precomputed addition_mask_all
+                 columns; None only when no adds are involved.
+      add_pad:   padded width of the added-column block (>= A; pow2 so the
+                 compiled segment shapes are stable across a stream).
+      idx_all:   reusable (T, B) original schedule (request-invariant).
+    """
+    assert op in ("delete", "add")
+    req = int(req)
+    added_ids = np.asarray(added_ids, dtype=np.int64)
+    A = len(added_ids)
+    assert add_pad >= A, (add_pad, A)
+    idx = batch_indices_all(seed, steps, n, batch_size) if idx_all is None \
+        else idx_all
+    T, B = idx.shape
+
+    kept_orig = live[idx].copy()  # (T, B) originals surviving earlier requests
+    presence = np.zeros(T, dtype=bool)  # request row in batch t?
+    req_added_col = -1
+    if op == "delete":
+        hits = np.nonzero(added_ids == req)[0]
+        if hits.size:  # deleting a previously-added row
+            req_added_col = int(hits[0])
+            presence = joins[:, req_added_col] & bool(live[req])
+        else:
+            hit = (idx == req) & kept_orig
+            presence = hit.any(axis=1)
+            kept_orig &= ~hit
+    else:
+        assert joins is not None and joins.shape[1] >= A + 1
+        presence = joins[:, A].copy()  # the new row's own join column
+
+    if add_pad:
+        add_cols = np.zeros((T, add_pad), dtype=np.float32)
+        add_rows = np.zeros(add_pad, dtype=np.int64)
+        add_rows[:A] = added_ids
+        for j in range(A):
+            if j == req_added_col or not live[added_ids[j]]:
+                continue  # deleted rows (and the request itself) drop out
+            add_cols[:, j] = joins[:, j]
+        idx_ext = np.concatenate(
+            [idx, np.broadcast_to(add_rows, (T, add_pad))], axis=1)
+        kept_w = np.concatenate([kept_orig.astype(np.float32), add_cols],
+                                axis=1)
+    else:
+        idx_ext = idx
+        kept_w = kept_orig.astype(np.float32)
+
+    dB = presence.astype(np.float32)
+    lr = np.asarray([lr_at(t) for t in range(T)], dtype=np.float32)
+    return ReplaySchedule(
+        idx=idx_ext,
+        kept_w=kept_w,
+        changed_idx=np.full((T, 1), req, dtype=np.int64),
+        changed_w=dB[:, None].copy(),
+        dB=dB,
+        kept=kept_w.sum(axis=1).astype(np.float32),
+        lr=lr,
+        mode=op,
+        r_pad=1,
     )

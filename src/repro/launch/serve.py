@@ -1,12 +1,27 @@
-"""Batched decode driver: prefill a prompt batch, then step the KV caches.
+"""Serving drivers.
 
-    python -m repro.launch.serve --arch internlm2-1.8b --reduced \
-        --batch 4 --prompt-len 32 --gen 16
+Two entry points share this module:
+
+  * ``unlearn`` — the DeltaGrad request server (ROADMAP serve-path item):
+    trains a model with path caching, then answers a stream of online
+    delete/add requests through ``core.engine.run_online_request`` (via
+    `core.online.OnlineEngine`, stacked history resident on the device),
+    reporting per-request latency with the compile cost separated out.
+
+        PYTHONPATH=src python -m repro.launch.serve unlearn \
+            --n 4000 --d 500 --steps 80 --requests 12 --add-frac 0.25
+
+  * batched decode (default, backwards-compatible flags): prefill a prompt
+    batch, then step the KV caches.
+
+        PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+            --reduced --batch 4 --prompt-len 32 --gen 16
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -17,7 +32,84 @@ from repro.configs.registry import get_config
 from repro.models.registry import build
 
 
-def main() -> None:
+def unlearn_main(argv) -> None:
+    """Stand up the online unlearning service and drive a request stream."""
+    from repro.core.deltagrad import DeltaGradConfig, sgd_train_with_cache
+    from repro.core.history import HistoryMeta
+    from repro.core.online import OnlineEngine
+    from repro.data.synthetic import binary_classification
+    from repro.models.simple import (logreg_accuracy, logreg_init,
+                                     logreg_objective)
+
+    ap = argparse.ArgumentParser(prog="serve unlearn")
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--d", type=int, default=500)
+    ap.add_argument("--steps", type=int, default=80)
+    ap.add_argument("--batch", type=int, default=1024)
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--l2", type=float, default=5e-3)
+    ap.add_argument("--momentum", type=float, default=0.0)
+    ap.add_argument("--period", type=int, default=5)
+    ap.add_argument("--burn-in", type=int, default=10)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--add-frac", type=float, default=0.25,
+                    help="fraction of requests that are additions")
+    ap.add_argument("--impl", default="scan", choices=("scan", "python"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    ds = binary_classification(n=args.n, d=args.d, seed=args.seed)
+    obj = logreg_objective(l2=args.l2)
+    meta = HistoryMeta(n=ds.n, batch_size=min(args.batch, ds.n),
+                       seed=args.seed, steps=args.steps,
+                       lr_schedule=((0, args.lr),), momentum=args.momentum)
+    t0 = time.perf_counter()
+    params, hist = sgd_train_with_cache(obj, logreg_init(args.d, seed=1),
+                                        ds, meta)
+    jax.block_until_ready(params)
+    print(f"trained {args.steps} steps (n={ds.n}, d={args.d}) with path "
+          f"cache in {time.perf_counter() - t0:.2f}s; "
+          f"accuracy {logreg_accuracy(params, ds):.4f}")
+
+    # additions are served from a pre-appended row pool: appending
+    # mid-stream would grow the device columns' leading dim and retrace
+    # every compiled program per add request, so stage capacity up front
+    rng = np.random.default_rng(args.seed + 1)
+    pool_src = rng.integers(0, meta.n, size=args.requests)
+    add_pool = list(ds.append({k: v[pool_src] for k, v in ds.columns.items()}))
+
+    cfg = DeltaGradConfig(period=args.period, burn_in=args.burn_in,
+                          impl=args.impl)
+    warm = ("delete", "add") if args.add_frac > 0 else ("delete",)
+    engine = OnlineEngine(obj, hist, ds, cfg,
+                          warmup=warm if args.impl == "scan" else False,
+                          add_capacity=args.requests)
+    print(f"online engine up (impl={engine.impl}); first-request compile "
+          f"{engine.compile_time_s * 1e3:.0f} ms")
+
+    lat = []
+    for i in range(args.requests):
+        if add_pool and rng.random() < args.add_frac:
+            op, row = "add", int(add_pool.pop(0))
+        else:
+            live = np.flatnonzero(engine.live[:meta.n])
+            op, row = "delete", int(rng.choice(live))
+        t0 = time.perf_counter()
+        st = engine.request(op, row)
+        jax.block_until_ready(engine.params)
+        ms = (time.perf_counter() - t0) * 1e3
+        lat.append(ms)
+        print(f"  request {i:3d} {op:6s} row {row:5d}: {ms:7.1f} ms  "
+              f"(approx {st.approx_steps}, explicit {st.explicit_steps}, "
+              f"grad-eval speedup x{st.theoretical_speedup:.1f})")
+    lat = np.asarray(lat)
+    print(f"served {args.requests} requests: "
+          f"p50 {np.percentile(lat, 50):.1f} ms, "
+          f"p95 {np.percentile(lat, 95):.1f} ms; "
+          f"accuracy {logreg_accuracy(engine.params, ds):.4f}")
+
+
+def decode_main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
@@ -75,6 +167,13 @@ def main() -> None:
           f"generated {args.gen} tok x {args.batch} in {t_gen:.2f}s "
           f"({tok_s:.1f} tok/s)")
     print("sample row 0:", gen[0].tolist())
+
+
+def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] == "unlearn":
+        unlearn_main(sys.argv[2:])
+    else:
+        decode_main()
 
 
 if __name__ == "__main__":

@@ -102,8 +102,9 @@ class TestReplayParity:
         assert _dist(w_s, w_p) < TOL
 
     def test_guard_fallback_counters_on_device(self):
-        """guard_norm_clip=0 forces every approx step to the cond fallback;
-        the scan path must count them without any per-step host sync."""
+        """guard_norm_clip=0 trips the guard on every approx step; the
+        segment-splitting retry must turn each into an explicit step (one
+        host sync per scanned segment, never per step)."""
         ds, obj, meta, p0 = _problem()
         _, hist = sgd_train_with_cache(obj, p0, ds, meta)
         changed = np.arange(10)
@@ -111,7 +112,41 @@ class TestReplayParity:
         w, st = deltagrad_retrain(obj, hist, ds, changed, cfg)
         assert st.approx_steps == 0
         assert st.guard_fallbacks > 0
+        assert st.explicit_steps == meta.steps - st.skipped_steps
         assert np.isfinite(_dist(w, p0))
+
+    @pytest.mark.parametrize("clip", [0.2, 0.0])
+    def test_guard_retry_full_stats_parity(self, clip):
+        """The two documented scan/python divergences are gone: fallback
+        steps admit their L-BFGS pair mid-segment (segment-splitting retry)
+        and both backends charge the true grad_examples cost kept + dB, so
+        with the guard ON the scan path matches the oracle exactly —
+        parameters AND every counter."""
+        ds, obj, meta, p0 = _problem()
+        _, hist = sgd_train_with_cache(obj, p0, ds, meta)
+        changed = np.random.default_rng(4).choice(meta.n, 10, replace=False)
+        cfg = dataclasses.replace(CFG, guard=True, guard_norm_clip=clip)
+        w_s, st_s = deltagrad_retrain(obj, hist, ds, changed, cfg)
+        w_p, st_p = deltagrad_retrain(obj, hist, ds, changed,
+                                      dataclasses.replace(cfg, impl="python"))
+        assert st_p.guard_fallbacks > 0  # the regime under test
+        assert _dist(w_s, w_p) < TOL
+        for f in ("explicit_steps", "approx_steps", "guard_fallbacks",
+                  "skipped_steps", "grad_examples", "grad_examples_baseline",
+                  "pairs_rejected"):
+            assert getattr(st_s, f) == getattr(st_p, f), f
+
+
+ONLINE_TOL = 1.5e-7  # both backends share the per-step math verbatim
+
+
+def _assert_request_stats_equal(st_s, st_p):
+    assert len(st_s.per_request) == len(st_p.per_request)
+    for a, b in zip(st_s.per_request, st_p.per_request):
+        for f in ("explicit_steps", "approx_steps", "guard_fallbacks",
+                  "skipped_steps", "grad_examples",
+                  "grad_examples_baseline"):
+            assert getattr(a, f) == getattr(b, f), f
 
 
 class TestOnlineParity:
@@ -124,16 +159,86 @@ class TestOnlineParity:
         _, h2 = sgd_train_with_cache(obj, p0, ds2, meta)
         w_p, st_p = online_deltagrad(obj, h2, ds2, reqs, CFG_PY,
                                      mode="delete")
-        assert _dist(w_s, w_p) < TOL
-        assert len(st_s.per_request) == len(st_p.per_request) == len(reqs)
-        for a, b in zip(st_s.per_request, st_p.per_request):
-            assert a.explicit_steps == b.explicit_steps
-            assert a.approx_steps == b.approx_steps
-            assert a.grad_examples == b.grad_examples
+        assert _dist(w_s, w_p) < ONLINE_TOL
+        assert len(st_s.per_request) == len(reqs)
+        _assert_request_stats_equal(st_s, st_p)
         # the rewritten caches must agree too (they seed the NEXT request)
         for t in (0, meta.steps - 1):
             assert _dist(h1.entry(t)[0], h2.entry(t)[0]) < TOL
             assert _dist(h1.entry(t)[1], h2.entry(t)[1]) < TOL
+
+    @pytest.mark.parametrize("momentum", [0.0, 0.9])
+    def test_online_add_scan_matches_loop(self, momentum):
+        """Addition streams must run the scanned path (no python fallback)
+        and agree with the per-step oracle in params, rewritten cache, and
+        every counter."""
+
+        def run(cfg):
+            ds, obj, meta, p0 = _problem(momentum=momentum)
+            _, h = sgd_train_with_cache(obj, p0, ds, meta)
+            src = np.arange(4)
+            new = ds.append({k: v[src] for k, v in ds.columns.items()})
+            w, st = online_deltagrad(obj, h, ds, new.tolist(), cfg,
+                                     mode="add")
+            return w, st, h, meta
+
+        w_s, st_s, h1, meta = run(CFG)
+        w_p, st_p, h2, _ = run(CFG_PY)
+        assert _dist(w_s, w_p) < ONLINE_TOL, momentum
+        _assert_request_stats_equal(st_s, st_p)
+        for t in (0, meta.steps // 2, meta.steps - 1):
+            assert _dist(h1.entry(t)[0], h2.entry(t)[0]) < TOL
+            assert _dist(h1.entry(t)[1], h2.entry(t)[1]) < TOL
+
+    def test_online_momentum_delete_scan_matches_loop(self):
+        """Heavy-ball histories are no longer rejected: the velocity is
+        reconstructed per request inside the scan carry."""
+        reqs = [3, 17, 101, 640]
+
+        def run(cfg):
+            ds, obj, meta, p0 = _problem(momentum=0.9)
+            _, h = sgd_train_with_cache(obj, p0, ds, meta)
+            return online_deltagrad(obj, h, ds, reqs, cfg, mode="delete")
+
+        w_s, st_s = run(CFG)
+        w_p, st_p = run(CFG_PY)
+        assert _dist(w_s, w_p) < ONLINE_TOL
+        _assert_request_stats_equal(st_s, st_p)
+
+    def test_online_mixed_stream_scan_matches_loop(self):
+        """Interleaved delete/add requests — including deletion of a row
+        added earlier in the same stream."""
+
+        def run(cfg):
+            ds, obj, meta, p0 = _problem()
+            _, h = sgd_train_with_cache(obj, p0, ds, meta)
+            new = ds.append({k: v[10:13] for k, v in ds.columns.items()})
+            reqs = [("delete", 3), ("add", int(new[0])), ("delete", 17),
+                    ("add", int(new[1])), ("delete", int(new[0])),
+                    ("add", int(new[2])), ("delete", 101)]
+            return online_deltagrad(obj, h, ds, reqs, cfg)
+
+        w_s, st_s = run(CFG)
+        w_p, st_p = run(CFG_PY)
+        assert _dist(w_s, w_p) < ONLINE_TOL
+        _assert_request_stats_equal(st_s, st_p)
+
+    def test_online_guard_retry_matches_loop(self):
+        """Online guard fallbacks admit their L-BFGS pair via the
+        segment-splitting retry, so the scan path tracks the oracle even
+        when the Algorithm-4 guard trips repeatedly."""
+        cfg = dataclasses.replace(CFG, guard=True, guard_norm_clip=0.1)
+
+        def run(c):
+            ds, obj, meta, p0 = _problem()
+            _, h = sgd_train_with_cache(obj, p0, ds, meta)
+            return online_deltagrad(obj, h, ds, [3, 17, 101], c)
+
+        w_s, st_s = run(cfg)
+        w_p, st_p = run(dataclasses.replace(cfg, impl="python"))
+        assert sum(s.guard_fallbacks for s in st_p.per_request) > 0
+        assert _dist(w_s, w_p) < ONLINE_TOL
+        _assert_request_stats_equal(st_s, st_p)
 
     def test_online_fully_deleted_batch_matches_loop(self):
         """Degenerate Algorithm-3 case: earlier requests empty a whole batch,

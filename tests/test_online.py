@@ -8,17 +8,17 @@ from repro.core.deltagrad import (
     sgd_train_with_cache,
 )
 from repro.core.history import HistoryMeta
-from repro.core.online import online_deltagrad
+from repro.core.online import OnlineEngine, online_deltagrad
 from repro.data.synthetic import binary_classification
 from repro.models.simple import logreg_init, logreg_objective
 from repro.utils.tree import tree_norm, tree_sub
 
 
-def setup(n=1000, d=10, steps=60, batch=256, seed=0):
+def setup(n=1000, d=10, steps=60, batch=256, seed=0, momentum=0.0, lr=0.5):
     ds = binary_classification(n=n, d=d, seed=seed)
     obj = logreg_objective(l2=5e-3)
     meta = HistoryMeta(n=ds.n, batch_size=batch, seed=7, steps=steps,
-                       lr_schedule=((0, 0.5),))
+                       lr_schedule=((0, lr),), momentum=momentum)
     p0 = logreg_init(d, seed=seed + 1)
     w_star, hist = sgd_train_with_cache(obj, p0, ds, meta)
     return ds, obj, meta, p0, w_star, hist
@@ -59,3 +59,100 @@ def test_online_single_request_close_to_batch_mode():
     w_online, _ = online_deltagrad(obj, hist, ds, req, cfg, mode="delete")
     d = float(tree_norm(tree_sub(w_batch, w_online)))
     assert d < 1e-4, d
+
+
+def test_online_addition_tracks_scratch_retrain():
+    """Add-mode streams on the compiled engine: the corrected model must
+    land much closer to exact retraining on the grown dataset than the
+    original model does."""
+    ds, obj, meta, p0, w_star, hist = setup()
+    src = np.random.default_rng(6).choice(meta.n, 5, replace=False)
+    new = ds.append({k: v[src] for k, v in ds.columns.items()})
+    cfg = DeltaGradConfig(period=5, burn_in=8, history_size=2)
+    w_i, ostats = online_deltagrad(obj, hist, ds, new.tolist(), cfg,
+                                   mode="add")
+    ds2 = binary_classification(n=1000, d=10, seed=0)
+    ds2.append({k: v[src] for k, v in ds2.columns.items()})
+    w_u, _ = baseline_retrain(obj, ds2, meta, p0, new, mode="add")
+    d_ui = float(tree_norm(tree_sub(w_u, w_i)))
+    d_us = float(tree_norm(tree_sub(w_u, w_star)))
+    assert d_ui < 0.3 * d_us, (d_ui, d_us)
+    assert len(ostats.per_request) == len(new)
+
+
+def test_online_momentum_deletion_tracks_scratch_retrain():
+    """Heavy-ball histories replay online with per-request velocity
+    reconstruction; the corrected path must track exact momentum
+    retraining."""
+    ds, obj, meta, p0, w_star, hist = setup(momentum=0.9, lr=0.1)
+    reqs = np.random.default_rng(5).choice(ds.n, size=5, replace=False)
+    cfg = DeltaGradConfig(period=5, burn_in=8, history_size=2)
+    w_i, ostats = online_deltagrad(obj, hist, ds, reqs, cfg, mode="delete")
+    ds2 = binary_classification(n=1000, d=10, seed=0)
+    w_u, _ = baseline_retrain(obj, ds2, meta, p0, reqs, mode="delete")
+    d_ui = float(tree_norm(tree_sub(w_u, w_i)))
+    d_us = float(tree_norm(tree_sub(w_u, w_star)))
+    assert d_ui < 0.3 * d_us, (d_ui, d_us)
+
+
+def test_online_warmup_reports_compile_time_and_keeps_results():
+    """warmup=True must (a) report the first-request compile cost in
+    compile_time_s, (b) keep wall_time_s for the stream itself, and (c)
+    leave the request results bit-identical (the warm-up request is purely
+    functional and discarded)."""
+    reqs = [3, 17]
+    cfg = DeltaGradConfig(period=5, burn_in=8)
+    ds1, obj, meta, p0, _, h1 = setup(steps=40)
+    w_warm, st_warm = online_deltagrad(obj, h1, ds1, reqs, cfg,
+                                       mode="delete", warmup=True)
+    ds2, _, _, _, _, h2 = setup(steps=40)
+    w_cold, st_cold = online_deltagrad(obj, h2, ds2, reqs, cfg,
+                                       mode="delete")
+    assert st_warm.compile_time_s > 0.0
+    assert st_cold.compile_time_s == 0.0
+    assert st_warm.wall_time_s > 0.0
+    assert float(tree_norm(tree_sub(w_warm, w_cold))) == 0.0
+
+
+def test_unlearner_streams_share_one_engine():
+    """Consecutive stream_* calls must not resurrect deleted rows or drop
+    previously-added join columns: the Unlearner keeps ONE OnlineEngine per
+    rewritten history, and a fresh engine seeds liveness from ds.removed."""
+    from repro.core.api import Unlearner, UnlearnerConfig
+    from repro.core.online import OnlineEngine
+
+    ds = binary_classification(n=400, d=8, seed=3)
+    unl = Unlearner(logreg_objective(l2=5e-3), logreg_init(8, seed=4), ds,
+                    UnlearnerConfig(steps=30, batch_size=64, lr=0.3,
+                                    deltagrad=DeltaGradConfig(period=5,
+                                                              burn_in=4)))
+    unl.fit()
+    unl.stream_delete([7, 21])
+    eng1 = unl._online
+    unl.stream_add({k: v[:3] for k, v in ds.columns.items()})
+    assert unl._online is eng1  # same engine — added columns persist
+    assert not eng1.live[7] and not eng1.live[21]
+    assert len(eng1.added) == 3
+    # a NEW engine over the same dataset must still mask the deleted rows
+    eng2 = OnlineEngine(unl.objective, unl.history, ds,
+                        unl.config.deltagrad)
+    assert not eng2.live[7] and not eng2.live[21]
+
+
+def test_online_engine_mixed_bookkeeping():
+    """OnlineEngine tracks liveness across interleaved delete/add requests
+    (including deleting a row added earlier in the stream)."""
+    ds, obj, meta, p0, w_star, hist = setup(steps=40)
+    new = ds.append({k: v[:2] for k, v in ds.columns.items()})
+    eng = OnlineEngine(obj, hist, ds, DeltaGradConfig(period=5, burn_in=6))
+    eng.request("delete", 3)
+    eng.request("add", int(new[0]))
+    eng.request("add", int(new[1]))
+    eng.request("delete", int(new[0]))
+    assert not eng.live[3] and not eng.live[int(new[0])]
+    assert eng.live[int(new[1])]
+    assert ds.removed[3] and ds.removed[int(new[0])]
+    assert eng.added == [int(new[0]), int(new[1])]
+    # history carries the post-stream model
+    d = float(tree_norm(tree_sub(hist.final_params, eng.params)))
+    assert d == 0.0
