@@ -1,60 +1,79 @@
-"""GDPR-style online deletion stream with ε-approximate-deletion noise.
+"""GDPR-style online request service with ε-approximate-deletion noise.
 
-Requests arrive one at a time; each is served by Algorithm 3 (history
-rewrite) and the published model gets Laplace noise per §5.1.
+Requests are `submit()`-ed to an `UnlearnerSession`: deletes arriving as a
+burst coalesce into ONE group replay, a serial stream keeps the paper's
+one-replay-per-request Algorithm-3 semantics, additions join through their
+deterministic mask columns, and the whole mid-stream session snapshots to
+disk and restores without changing what it serves next.  The published
+model gets Laplace noise per §5.1.
 
     PYTHONPATH=src python examples/online_deletion.py
 """
 
+import tempfile
 import time
 
 import jax
 import numpy as np
 
-from repro.core.api import Unlearner, UnlearnerConfig
 from repro.core.deltagrad import DeltaGradConfig
 from repro.core.privacy import laplace_publish, num_params
+from repro.core.session import UnlearnerConfig, UnlearnerSession
 from repro.data.synthetic import binary_classification
 from repro.models.simple import logreg_accuracy, logreg_init, logreg_objective
 
 
 def main():
+    objective = logreg_objective(l2=5e-3)
     ds = binary_classification(n=4000, d=500, seed=0)
-    unl = Unlearner(
-        logreg_objective(l2=5e-3), logreg_init(500, seed=1), ds,
+    sess = UnlearnerSession(
+        objective, logreg_init(500, seed=1), ds,
         UnlearnerConfig(steps=80, batch_size=1024, lr=0.3, seed=0,
                         deltagrad=DeltaGradConfig(period=5, burn_in=10)),
     )
-    unl.fit()
-    print(f"initial accuracy {logreg_accuracy(unl.params, ds):.4f}")
+    sess.fit()
+    print(f"initial accuracy {logreg_accuracy(sess.params, ds):.4f}")
 
+    # a burst of 12 deletion requests — the planner coalesces them into
+    # ONE replay (group-deletion semantics) instead of 12
     requests = np.random.default_rng(9).choice(ds.n, 12, replace=False)
-    print(f"\nserving {len(requests)} deletion requests online...")
     t0 = time.time()
-    stats = unl.stream_delete(requests.tolist())
+    resp = sess.delete(requests.tolist()).result()
     dt = time.time() - t0
-    print(f"{len(requests)} requests in {dt:.2f}s "
+    st = resp.stats[0]
+    print(f"{resp.group_size} deletes coalesced into 1 replay in {dt:.2f}s "
           f"({dt / len(requests) * 1e3:.0f} ms/request), "
-          f"grad-eval speedup x{stats.theoretical_speedup:.2f}")
-    print(f"accuracy after stream: {logreg_accuracy(unl.params, ds):.4f}")
+          f"grad-eval speedup x{st.theoretical_speedup:.2f}")
+    print(f"accuracy after burst: {logreg_accuracy(sess.params, ds):.4f}")
 
-    # additions stream on the same engine (Algorithm 3 add-mode): fresh
-    # rows join the replayed batches through the deterministic join masks
+    # additions stream on the same engine (serial Algorithm-3 add-mode:
+    # fresh rows join the replayed batches via deterministic join masks)
     rng = np.random.default_rng(10)
     src = rng.choice(4000, 6)  # one draw so features and labels stay paired
     rows = {k: v[src] for k, v in ds.columns.items()}
     t0 = time.time()
-    stats = unl.stream_add(rows)
+    stats = sess.stream_add(rows)
     dt = time.time() - t0
     print(f"\n6 addition requests in {dt:.2f}s "
           f"({dt / 6 * 1e3:.0f} ms/request); "
-          f"accuracy {logreg_accuracy(unl.params, ds):.4f}")
+          f"accuracy {logreg_accuracy(sess.params, ds):.4f}")
+
+    # snapshot the mid-stream session and restore it: params, history,
+    # liveness, added rows and the L-BFGS ring round-trip through
+    # train/checkpoint, so the restored service picks up where it left off
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        sess.save(ckpt_dir)
+        sess = UnlearnerSession.restore(ckpt_dir, objective)
+    stats = sess.stream_delete([100, 200])
+    print(f"\nrestored session served {len(stats.per_request)} more "
+          f"requests; accuracy {logreg_accuracy(sess.params, ds):.4f}")
 
     # publish with epsilon-approximate-deletion noise (Laplace mechanism)
     eps, delta0 = 1.0, 1e-4  # delta0: certified ||w_I - w_U|| bound
-    published = laplace_publish(jax.random.PRNGKey(0), unl.params, eps, delta0)
+    published = laplace_publish(jax.random.PRNGKey(0), sess.params, eps,
+                                delta0)
     print(f"\npublished eps={eps} noisy model "
-          f"(p={num_params(unl.params)}, delta0={delta0}): "
+          f"(p={num_params(sess.params)}, delta0={delta0}): "
           f"accuracy {logreg_accuracy(published, ds):.4f}")
 
 

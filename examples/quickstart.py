@@ -1,13 +1,14 @@
-"""Quickstart: train with path caching, delete 1% of the data with DeltaGrad,
-compare against exact retraining.
+"""Quickstart: train with path caching, then delete 1% of the data with ONE
+coalesced DeltaGrad replay through the session API, comparing against exact
+retraining.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core.api import Unlearner, UnlearnerConfig
 from repro.core.deltagrad import DeltaGradConfig
+from repro.core.session import UnlearnerConfig, UnlearnerSession
 from repro.data.synthetic import binary_classification
 from repro.models.simple import logreg_accuracy, logreg_init, logreg_objective
 from repro.utils.tree import tree_norm, tree_sub
@@ -15,7 +16,7 @@ from repro.utils.tree import tree_norm, tree_sub
 
 def main():
     ds = binary_classification(n=5000, d=200, seed=0)
-    unl = Unlearner(
+    sess = UnlearnerSession(
         objective=logreg_objective(l2=5e-3),
         params0=logreg_init(200, seed=1),
         dataset=ds,
@@ -26,25 +27,32 @@ def main():
     )
 
     print("== phase 1: train once, caching the optimization path ==")
-    unl.fit()
-    print(f"accuracy: {logreg_accuracy(unl.params, ds):.4f}, "
-          f"cached {len(unl.history)} steps "
-          f"({unl.history.nbytes() / 1e6:.1f} MB)")
+    sess.fit()
+    print(f"accuracy: {logreg_accuracy(sess.params, ds):.4f}, "
+          f"cached {len(sess.history)} steps "
+          f"({sess.history.nbytes() / 1e6:.1f} MB)")
 
     print("\n== phase 2: a user asks for 50 rows to be deleted ==")
     to_delete = np.random.default_rng(3).choice(ds.n, 50, replace=False)
-    w_exact, base_stats = unl.baseline(to_delete)  # ground truth
-    stats = unl.delete(to_delete)
+    w_exact, base_stats = sess.baseline(to_delete)  # ground truth
 
-    dist = float(tree_norm(tree_sub(w_exact, unl.params)))
-    print(f"DeltaGrad: {stats.wall_time_s:.2f}s "
-          f"({stats.explicit_steps} explicit + {stats.approx_steps} approx steps)")
+    # submit() is lazy — nothing executes until the handle is forced; the
+    # planner then coalesces the whole batch into ONE group replay that
+    # also rewrites the cached path, so later requests build on it
+    handle = sess.delete(to_delete.tolist())
+    resp = handle.result()  # flush + block
+    stats = resp.stats[0]
+
+    dist = float(tree_norm(tree_sub(w_exact, sess.params)))
+    print(f"DeltaGrad: one coalesced replay for {resp.group_size} rows "
+          f"({stats.explicit_steps} explicit + {stats.approx_steps} approx "
+          f"steps, dispatched in {resp.dispatch_s * 1e3:.0f} ms)")
     print(f"BaseL (exact retrain): {base_stats.wall_time_s:.2f}s")
     print(f"gradient evaluations: {stats.grad_examples:,} vs "
           f"{stats.grad_examples_baseline:,} "
           f"(x{stats.theoretical_speedup:.2f} fewer)")
     print(f"||w_exact - w_deltagrad|| = {dist:.2e}")
-    print(f"accuracy after deletion: {logreg_accuracy(unl.params, ds):.4f}")
+    print(f"accuracy after deletion: {logreg_accuracy(sess.params, ds):.4f}")
 
 
 if __name__ == "__main__":

@@ -1,25 +1,52 @@
-"""High-level Unlearner API: train once with caching, then serve an arbitrary
-stream of delete/add requests — each answered by DeltaGrad at ~T0x less
-gradient work than retraining from scratch.
+"""Compatibility facade over `core.session.UnlearnerSession`.
 
-    unl = Unlearner(objective, params0, dataset, UnlearnerConfig(...))
-    unl.fit()
-    unl.delete([3, 17, 256])        # batch deletion  (Algorithm 1)
-    unl.add({"x": new_x, "y": new_y})
-    unl.stream_delete([5, 9, ...])  # online requests (Algorithm 3)
-    unl.stream_add({"x": ..., "y": ...})       # online additions
-    unl.stream([("delete", 5), ("add", 1001)])  # mixed request stream
-    unl.params                      # current model
+The PRIMARY serving surface is the session + request-plan API
+(`core/session.py`): typed `UnlearnRequest`s are `submit()`-ed to an
+`UnlearnerSession` and come back as lazy `RequestHandle`s; a coalescing
+planner merges bursts of same-op requests into one group replay; sessions
+snapshot/restore through `train/checkpoint`.
+
+    from repro.core.session import UnlearnerSession, UnlearnerConfig
+    sess = UnlearnerSession(objective, params0, dataset, UnlearnerConfig())
+    sess.fit()
+    h = sess.delete([3, 17, 256])   # lazy handle; ONE coalesced replay
+    h.result().stats                # force (flush + block)
+    sess.stream_delete([5, 9])      # serial Algorithm-3 semantics
+    sess.save(ckpt_dir)             # restorable mid-stream snapshot
+
+`Unlearner` below keeps the pre-session method zoo alive as a THIN shim:
+every call — batch `delete()`/`add()` AND the `stream_*` methods — routes
+through the session's single `OnlineEngine`, which rewrites the cached
+path after each replay.  That closes the old footgun where a batch
+`delete()`/`add()` after a `stream_*` call silently reset the engine
+(dropping liveness and added-row join state): interleaving batch and
+stream requests is now well-defined, with no state loss in either
+direction.
+
+Migration from the pre-session `Unlearner`:
+
+  * `unl.delete(idx)` / `unl.add(rows)`  →  `sess.delete(idx).result()` /
+    `sess.add(data=rows).result()` — now ONE group replay that also
+    rewrites the cached path (previously a batch replay that left the
+    cache stale).  Each returns `UnlearnResponse` whose `.stats` is a list
+    (one entry for the coalesced replay).
+  * `unl.stream_delete/stream_add/stream`  →  `sess.stream_delete(...)` /
+    `sess.stream_add(...)` / `sess.serve_stream(pairs)` — unchanged
+    serial semantics, same `OnlineStats`.
+  * `unl.params`  →  `sess.params` (forces pending requests, blocks) or
+    `handle.params` for a specific request.
+  * new: `sess.submit(...)` + `flush()` for explicit request plans,
+    `sess.save(dir)` / `UnlearnerSession.restore(dir, objective)`.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.deltagrad import (
+# Re-exports: the historical import site for these names.
+from repro.core.deltagrad import (  # noqa: F401
     DeltaGradConfig,
     Objective,
     RetrainStats,
@@ -27,172 +54,115 @@ from repro.core.deltagrad import (
     deltagrad_retrain,
     sgd_train_with_cache,
 )
-from repro.core.history import HistoryMeta, TrainingHistory
-from repro.core.online import OnlineEngine, OnlineStats
+from repro.core.online import OnlineEngine, OnlineStats  # noqa: F401
+from repro.core.session import (  # noqa: F401
+    RequestHandle,
+    UnlearnerConfig,
+    UnlearnerSession,
+    UnlearnRequest,
+    UnlearnResponse,
+)
 from repro.data.dataset import Dataset
 
 
-@dataclass
-class UnlearnerConfig:
-    steps: int = 100
-    batch_size: int = 1 << 30  # default: deterministic full-batch GD
-    lr: float = 0.1
-    lr_schedule: Optional[Sequence] = None  # overrides lr if given
-    seed: int = 0
-    deltagrad: DeltaGradConfig = field(default_factory=DeltaGradConfig)
-    # None resolves to "stacked" (the engine's native tier, see core/engine),
-    # or to "host" — the codec-honoring offload tier — when history_codec is
-    # not "f32" (stacked storage is uncompressed by construction).  An
-    # EXPLICIT "stacked" + lossy codec is rejected by TrainingHistory.
-    history_tier: Optional[str] = None
-    history_codec: str = "f32"
-    spill_dir: Optional[str] = None
-
-
 class Unlearner:
+    """Thin compatibility shim — every method delegates to one
+    `UnlearnerSession` (see the module docstring for the mapping)."""
+
     def __init__(
         self,
         objective: Objective,
-        params0: Any,
+        params0,
         dataset: Dataset,
         config: UnlearnerConfig,
     ):
-        self.objective = objective
-        self.params0 = params0
-        self.dataset = dataset
-        self.config = config
-        self.history: Optional[TrainingHistory] = None
-        self.params: Any = params0
-        self.log: List[Dict] = []
-        # ONE online engine per rewritten history: it owns the stream state
-        # (liveness, added-row join columns) that must survive across
-        # stream_delete/stream_add/stream calls; reset whenever the cache is
-        # rebuilt (fit) or bulk-replayed without a rewrite (delete/add)
-        self._online: Optional[OnlineEngine] = None
+        self.session = UnlearnerSession(objective, params0, dataset, config)
 
-    # -- phase 1: training with path caching ---------------------------------
+    # -- session state passthrough ------------------------------------------
 
-    def fit(self) -> Any:
-        c = self.config
-        tier = c.history_tier
-        if tier is None:
-            tier = "host" if c.history_codec != "f32" else "stacked"
-        meta = HistoryMeta(
-            n=self.dataset.n,
-            batch_size=min(c.batch_size, self.dataset.n),
-            seed=c.seed,
-            steps=c.steps,
-            lr_schedule=tuple(c.lr_schedule) if c.lr_schedule else ((0, c.lr),),
-            l2=self.objective.l2,
-        )
-        self.params, self.history = sgd_train_with_cache(
-            self.objective,
-            self.params0,
-            self.dataset,
-            meta,
-            tier=tier,
-            codec=c.history_codec,
-            spill_dir=c.spill_dir,
-        )
-        self._online = None
-        return self.params
+    @property
+    def objective(self) -> Objective:
+        return self.session.objective
 
-    def _require_fit(self):
-        if self.history is None:
-            raise RuntimeError("call fit() before delete/add")
+    @property
+    def dataset(self) -> Dataset:
+        return self.session.dataset
 
-    # -- phase 2: batch requests (Algorithm 1) --------------------------------
+    @property
+    def config(self) -> UnlearnerConfig:
+        return self.session.config
+
+    @property
+    def params0(self):
+        return self.session.params0
+
+    @property
+    def history(self):
+        return self.session.history
+
+    @property
+    def params(self):
+        """Current model (forces pending session work, blocks)."""
+        return self.session.params
+
+    @property
+    def log(self) -> List[Dict]:
+        return self.session.log
+
+    @property
+    def _online(self) -> Optional[OnlineEngine]:
+        """The session's engine (None until the first request) — batch and
+        stream requests share it, so nothing here ever silently resets."""
+        return self.session._engine
+
+    # -- phase 1 -------------------------------------------------------------
+
+    def fit(self):
+        return self.session.fit()
+
+    # -- phase 2: batch requests — ONE coalesced group replay each -----------
 
     def delete(self, indices) -> RetrainStats:
-        self._require_fit()
-        idx = np.asarray(list(indices), dtype=np.int64)
-        self.params, stats = deltagrad_retrain(
-            self.objective, self.history, self.dataset, idx,
-            self.config.deltagrad, mode="delete",
-        )
-        self.dataset.delete(idx)
-        self._online = None  # batch replay does not rewrite the cache
-        self.log.append({"op": "delete", "idx": idx, "stats": stats})
+        import time
+
+        t0 = time.perf_counter()
+        resp = self.session.delete(list(indices)).result()
+        stats = resp.stats[0]
+        stats.wall_time_s = time.perf_counter() - t0
         return stats
 
     def add(self, rows: Dict[str, np.ndarray]) -> RetrainStats:
-        self._require_fit()
-        new_idx = self.dataset.append(rows)
-        self.params, stats = deltagrad_retrain(
-            self.objective, self.history, self.dataset, new_idx,
-            self.config.deltagrad, mode="add",
-        )
-        self._online = None  # batch replay does not rewrite the cache
-        self.log.append({"op": "add", "idx": new_idx, "stats": stats})
-        return stats
-
-    # -- phase 2': online request streams (Algorithm 3) -----------------------
-
-    def _online_engine(self) -> OnlineEngine:
-        if self._online is None:
-            self._online = OnlineEngine(
-                self.objective, self.history, self.dataset,
-                self.config.deltagrad)
-        return self._online
-
-    def _serve_stream(self, requests, mode: Optional[str]) -> OnlineStats:
         import time
 
-        import jax
-
-        engine = self._online_engine()
-        for r in requests:
-            if mode is None and not isinstance(r, (tuple, list)):
-                raise TypeError(
-                    f"stream() takes (op, row) pairs, got {r!r}; use "
-                    "stream_delete()/stream_add() for single-op streams")
-        ops = [(r if isinstance(r, (tuple, list)) else (mode, r))
-               for r in requests]
-        # size the add-column block once for the whole stream so the padded
-        # schedule width (and every compiled shape) stays put
-        n_adds = sum(1 for op, _ in ops if op == "add")
-        engine.add_capacity = max(engine.add_capacity,
-                                  len(engine.added) + n_adds)
-        stats = OnlineStats(compile_time_s=engine.compile_time_s)
         t0 = time.perf_counter()
-        for op, row in ops:
-            stats.per_request.append(engine.request(op, int(row)))
-        # steady-state scan requests enqueue device work without syncing;
-        # block so wall_time_s measures compute, not dispatch
-        jax.block_until_ready(engine.params)
+        resp = self.session.add(data=rows).result()
+        stats = resp.stats[0]
         stats.wall_time_s = time.perf_counter() - t0
-        self.params = engine.params
         return stats
+
+    # -- phase 2': online request streams (serial Algorithm 3) ---------------
 
     def stream_delete(self, requests: Sequence[int]) -> OnlineStats:
-        self._require_fit()
-        stats = self._serve_stream(list(requests), "delete")
-        self.log.append({"op": "stream_delete", "idx": list(requests), "stats": stats})
-        return stats
+        return self.session.stream_delete(list(requests))
 
     def stream_add(self, rows: Dict[str, np.ndarray]) -> OnlineStats:
         """Append `rows` and insert them one request at a time (Algorithm 3
         add-mode: each joins the replayed batches via the deterministic
         addition mask, rewriting history after every request)."""
-        self._require_fit()
-        new_idx = self.dataset.append(rows)
-        stats = self._serve_stream(new_idx.tolist(), "add")
-        self.log.append({"op": "stream_add", "idx": new_idx, "stats": stats})
-        return stats
+        return self.session.stream_add(rows)
 
     def stream(self, requests: Sequence) -> OnlineStats:
         """Mixed online stream: `requests` are ("delete"|"add", row) pairs;
         add rows must already be appended (e.g. via `dataset.append`)."""
-        self._require_fit()
-        stats = self._serve_stream(list(requests), None)
-        self.log.append({"op": "stream", "idx": list(requests), "stats": stats})
-        return stats
+        for r in requests:
+            if not isinstance(r, (tuple, list)):
+                raise TypeError(
+                    f"stream() takes (op, row) pairs, got {r!r}; use "
+                    "stream_delete()/stream_add() for single-op streams")
+        return self.session.serve_stream(
+            [(op, int(row)) for op, row in requests])
 
     # -- reference: exact retraining (BaseL) ----------------------------------
 
     def baseline(self, indices, mode: str = "delete"):
-        self._require_fit()
-        idx = np.asarray(list(indices), dtype=np.int64)
-        return baseline_retrain(
-            self.objective, self.dataset, self.history.meta, self.params0, idx, mode
-        )
+        return self.session.baseline(indices, mode=mode)

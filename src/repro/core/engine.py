@@ -1007,9 +1007,10 @@ def run_online_request(
     cfg: DeltaGradConfig,
     static_dev: Optional[Tuple[jax.Array, jax.Array]] = None,
 ) -> Tuple[Any, Any, Any, RetrainStats]:
-    """One online request (delete or add — `sched.mode`) against the current
-    (stacked) cached path.  Returns (params, W', G', stats); the caller
-    flushes W'/G' into history.
+    """One online request — a single row or a coalesced GROUP of rows
+    (delete or add — `sched.mode`, width `sched.r_pad`) — against the
+    current (stacked) cached path.  Returns (params, W', G', stats); the
+    caller flushes W'/G' into history.
 
     `sched` comes from `data.sampler.build_online_schedule` (the caller owns
     the stream state: liveness, added rows, join masks).  `static_dev` is
@@ -1191,4 +1192,12 @@ def run_online_request(
     if op == "add":
         base = base + sched.dB.astype(np.int64)
     stats.grad_examples_baseline = int(base.sum())
+    # the end-of-request pair ring, for session snapshots (the ring is
+    # rebuilt from the rewritten path on every request, so this is state
+    # a snapshot records rather than state the next request consumes);
+    # the engine pops it off extra so logged stats stay device-array-free
+    if dWs is not None:
+        stats.extra["lbfgs_ring"] = (dWs, dGs)
+    elif len(buffer):
+        stats.extra["lbfgs_ring"] = buffer.stacked()
     return params, W, G, stats

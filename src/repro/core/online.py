@@ -20,7 +20,9 @@ histories are supported: each request reconstructs the velocity from
 
 `OnlineEngine` owns the stream state (liveness over original AND added
 rows, added-row join masks, the request-invariant device schedule) and
-serves every request flavor — delete or add, SGD or momentum — through
+serves every request flavor — delete or add, single row or a COALESCED
+GROUP of rows (`request_group`, one replay for K requests — the
+session planner's batching primitive), SGD or momentum — through
 `core.engine.run_online_request`: approx segments execute under `lax.scan`
 against the stacked history, rewrites land in batched
 `lax.dynamic_update_slice` flushes, and the storage flush is an O(1)
@@ -34,7 +36,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, List, Sequence, Tuple, Union
+from typing import Any, Dict, List, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -126,6 +128,15 @@ class OnlineEngine:
         self._joins = None  # (T, capacity) bool, prefix-stable columns
         self.params = history.final_params
         self.compile_time_s = 0.0
+        # the last served request's L-BFGS pair ring — snapshot state only
+        # (every request rebuilds its ring from the rewritten path)
+        self.last_ring = None
+        # pow2-bucketed device-row capacity: appends within the bucket keep
+        # every compiled shape put; outgrowing it bumps to the next pow2,
+        # so an addition stream re-traces O(log #adds) times, not per add
+        self._base_n = ds.n
+        self._row_cap = ds.n + (_next_pow2(self.add_capacity)
+                                if self.add_capacity else 0)
         if self.impl == "scan":
             self.W, self.G = history.stacked_view()
             self._lr_dev = jnp.asarray(
@@ -150,13 +161,32 @@ class OnlineEngine:
                 meta.seed, meta.steps, meta.n, meta.batch_size,
                 _next_pow2(n_cols))
 
-    def _schedule(self, op: str, row: int) -> ReplaySchedule:
+    def _schedule(self, op: str, rows: Sequence[int]) -> ReplaySchedule:
         meta = self.history.meta
-        self._ensure_joins(len(self.added) + (1 if op == "add" else 0))
+        K = len(rows)
+        self._ensure_joins(len(self.added) + (K if op == "add" else 0))
+        if op == "delete":
+            # per-step changed count is bounded by the minibatch overlap
+            # (<= B original rows) plus the group's previously-added rows,
+            # so cap the pad like the batch path's min(r, B) — a K >> B
+            # group must not widen every step's changed block to K
+            n_added_in = len(set(rows) & set(self.added)) if self.added \
+                else 0
+            r_eff = min(K, min(meta.batch_size, meta.n) + n_added_in)
+        else:
+            r_eff = K  # add groups carry all K rows in the changed block
         return build_online_schedule(
-            meta.seed, meta.steps, meta.n, meta.batch_size, row, op,
+            meta.seed, meta.steps, meta.n, meta.batch_size, rows, op,
             meta.lr_at, self.live, np.asarray(self.added, np.int64),
-            self._joins, self._add_pad, idx_all=self.idx_all)
+            self._joins, self._add_pad, idx_all=self.idx_all,
+            r_pad=_next_pow2(r_eff))
+
+    def _cols(self):
+        """Device columns at the bucketed row capacity (see `_row_cap`)."""
+        if self.ds.n > self._row_cap:
+            self._row_cap = self._base_n + _next_pow2(self.ds.n
+                                                      - self._base_n)
+        return self.ds.device_columns(capacity=self._row_cap)
 
     def _static_dev(self, sched: ReplaySchedule):
         """(idx, lr) on device, re-uploaded only when the added set grows or
@@ -169,8 +199,9 @@ class OnlineEngine:
 
     def _warmup(self, ops=("delete",)) -> None:
         """Trace + compile the request programs on throwaway requests (one
-        per op flavor the stream will serve — the compiled programs key on
-        the request sign).
+        per flavor the stream will serve — the compiled programs key on the
+        request sign AND the pow2-bucketed group width, so `ops` entries
+        are op names or ``(op, group_size)`` pairs).
 
         `run_online_request` is purely functional over (W, G), so discarding
         its outputs leaves no trace; the measured time is the first-request
@@ -179,13 +210,15 @@ class OnlineEngine:
         if live_rows.size == 0:
             return
         t0 = time.perf_counter()
-        for op in ops:
-            # an existing live row stands in for an appended one in add
-            # mode: the schedule only needs a gatherable row id + the next
-            # free join-mask column
-            sched = self._schedule(op, int(live_rows[0]))
+        for spec in ops:
+            op, k = spec if isinstance(spec, tuple) else (spec, 1)
+            k = int(min(k, live_rows.size))
+            # existing live rows stand in for appended ones in add mode:
+            # the schedule only needs gatherable row ids + the next free
+            # join-mask columns
+            sched = self._schedule(op, [int(r) for r in live_rows[:k]])
             out = run_online_request(self.grad_fn, self.history, self.W,
-                                     self.G, self.ds.device_columns(), sched,
+                                     self.G, self._cols(), sched,
                                      self.cfg,
                                      static_dev=self._static_dev(sched))
             jax.block_until_ready(out[0])
@@ -195,25 +228,43 @@ class OnlineEngine:
 
     def request(self, op: str, row: int) -> RetrainStats:
         """Serve one delete/add request, rewriting history + bookkeeping."""
+        return self.request_group(op, [int(row)])
+
+    def request_group(self, op: str, rows: Sequence[int]) -> RetrainStats:
+        """Serve a COALESCED group of same-op requests as ONE replay.
+
+        Group deletion applies the paper's index-set semantics (Algorithm 1
+        with R = `rows`) to the current rewritten path, rewriting history
+        once; group addition joins every new row through its own mask
+        column in the same single replay.  K sequential replays collapse to
+        one — per-request cost drops ~Kx — at the price of a path that is
+        the GROUP correction, not the composition of K single-request
+        corrections (both approximate the same leave-R-out model; see
+        core.session for the serving-semantics contract)."""
         assert op in ("delete", "add"), op
-        row = int(row)
-        if row >= len(self.live):  # dataset grew since engine construction
+        rows = [int(r) for r in rows]
+        assert len(rows) == len(set(rows)), f"duplicate rows in {rows}"
+        if max(rows) >= len(self.live):  # dataset grew since construction
             grown = np.ones(self.ds.n, dtype=bool)
             grown[:len(self.live)] = self.live
             self.live = grown
         if op == "delete":
-            assert self.live[row], f"row {row} already deleted"
+            for row in rows:
+                assert self.live[row], f"row {row} already deleted"
         else:
-            assert self.history.meta.n <= row < self.ds.n, (
-                "add requests name rows appended AFTER the cached training "
-                f"run (expected {self.history.meta.n} <= row < {self.ds.n}, "
-                f"got {row}) — an original row would be double-counted")
-        sched = self._schedule(op, row)
+            for row in rows:
+                assert self.history.meta.n <= row < self.ds.n, (
+                    "add requests name rows appended AFTER the cached "
+                    f"training run (expected {self.history.meta.n} <= row < "
+                    f"{self.ds.n}, got {row}) — an original row would be "
+                    "double-counted")
+                assert row not in self.added, f"row {row} already added"
+        sched = self._schedule(op, rows)
 
         if self.impl == "scan":
             params, self.W, self.G, rstat = run_online_request(
                 self.grad_fn, self.history, self.W, self.G,
-                self.ds.device_columns(), sched, self.cfg,
+                self._cols(), sched, self.cfg,
                 static_dev=self._static_dev(sched))
             # flush per request (O(1) pointer swap for stacked/device
             # storage) so dataset bookkeeping and the rewritten cache never
@@ -224,14 +275,53 @@ class OnlineEngine:
             params, rstat = _online_request_python(
                 self.grad_fn, self.history, self.ds, sched, self.cfg)
             self.history.finalize(params)
+        ring = rstat.extra.pop("lbfgs_ring", None)
+        if ring is not None:
+            self.last_ring = ring
 
         if op == "delete":
-            self.live[row] = False
-            self.ds.removed[row] = True
+            for row in rows:
+                self.live[row] = False
+                self.ds.removed[row] = True
         else:
-            self.added.append(row)
+            self.added.extend(rows)
         self.params = params
         return rstat
+
+    # -- snapshot / restore (core.session.save/restore) --------------------
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Stream state that cannot be rebuilt from the dataset alone:
+        liveness over original AND added rows, the added-row arrival order
+        (join-mask column assignment), staged capacities, and the last
+        request's L-BFGS pair ring (recorded for completeness — rings are
+        rebuilt from the rewritten path on every request, so restore does
+        not feed it back into the math)."""
+        state = {
+            "live": np.asarray(self.live, dtype=bool).copy(),
+            "added": list(self.added),
+            "add_capacity": int(self.add_capacity),
+            "base_n": int(self._base_n),
+            "row_cap": int(self._row_cap),
+            "lbfgs_ring": None,
+        }
+        if self.last_ring is not None:
+            state["lbfgs_ring"] = jax.device_get(self.last_ring)
+        return state
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        self.live = np.asarray(state["live"], dtype=bool).copy()
+        self.added = list(state["added"])
+        self.add_capacity = int(state["add_capacity"])
+        self._base_n = int(state.get("base_n", self.ds.n))
+        self._row_cap = max(int(state.get("row_cap", self.ds.n)), self.ds.n)
+        ring = state.get("lbfgs_ring")
+        self.last_ring = (jax.tree.map(jnp.asarray, ring)
+                          if ring is not None else None)
+        self._joins = None
+        self._ensure_joins(len(self.added))
+        if self.impl == "scan":
+            self._idx_dev = self._idx_ver = None
 
 
 def online_deltagrad(
@@ -341,4 +431,6 @@ def _online_request_python(grad_fn, history, ds, sched: ReplaySchedule,
     if op == "add":
         base = base + sched.dB.astype(np.int64)
     stats.grad_examples_baseline = int(base.sum())
+    if len(buffer):  # see run_online_request: snapshot state for sessions
+        stats.extra["lbfgs_ring"] = buffer.stacked()
     return params, stats

@@ -1,0 +1,515 @@
+"""UnlearnerSession — the request-plan serving surface for DeltaGrad.
+
+The paper's headline use case is answering *streams* of deletion/addition
+requests far cheaper than retraining; follow-up work (Descent-to-Delete,
+Neel et al. 2020; Mahadevan & Mathioudakis 2021) frames unlearning
+explicitly as an online service.  This module is that service's API:
+
+    sess = UnlearnerSession(objective, params0, dataset, UnlearnerConfig())
+    sess.fit()                              # train once, caching the path
+    h = sess.delete([3, 17, 256])           # returns a lazy RequestHandle
+    sess.add(data={"x": new_x, "y": new_y})
+    h.result().stats                        # force: flush + block
+    sess.save("ckpt/"); UnlearnerSession.restore("ckpt/", objective)
+
+Design:
+
+  * REQUEST PLAN.  `submit()` enqueues typed `UnlearnRequest`s and returns
+    lightweight `RequestHandle`s that resolve lazily — nothing executes
+    (and nothing host-syncs) until a handle is forced via `.result()` /
+    `.params`, or `flush()` runs.  Batch and stream semantics are unified:
+    every request — bursty or one-at-a-time — is served by the session's
+    ONE `core.online.OnlineEngine`, which rewrites the cached path after
+    each replay, so interleaving "batch" deletes with "online" streams is
+    well-defined instead of silently discarding engine state (the
+    pre-session `Unlearner` footgun).
+
+  * COALESCING PLANNER.  At flush, maximal runs of adjacent same-op
+    requests with ``coalesce=True`` merge into ONE engine replay using the
+    paper's group-deletion semantics (Algorithm 1 with an index set,
+    applied to the current rewritten path): K pending deletes cost one
+    T-step replay instead of K.  Serving-semantics contract: the coalesced
+    result is the GROUP correction for the K rows — it approximates the
+    same leave-K-out model as K sequential Algorithm-3 single-request
+    corrections, but is not bitwise the serial composition (both land
+    within the method's approximation error of exact retraining; the
+    serial path remains available via ``coalesce=False`` and the
+    ``stream_*`` helpers, and scan-vs-python parity holds for either).
+    Changed-row blocks pad to the next pow2 of the burst size, so burst
+    sizes bucket into O(log) distinct compiled shapes.
+
+  * BUCKETED ADD CAPACITY.  The engine uploads device columns at a
+    pow2-bucketed row capacity (`Dataset.device_columns(capacity=...)`),
+    so an addition stream that outgrows the staged pool re-traces O(log
+    #adds) times instead of once per appended row.
+
+  * SNAPSHOT/RESTORE.  `save()` writes params through `train/checkpoint`
+    (sharded .npz + atomic manifest) with the `TrainingHistory` state (all
+    tiers), dataset columns + deletion mask, and the engine's stream state
+    (liveness, added-row order, capacities, last L-BFGS pair ring) in the
+    checkpoint's extra payload.  `restore()` rebuilds a session that
+    serves the next request with results identical to the uninterrupted
+    one.  Objectives hold code, not state, so the caller passes the
+    objective to `restore()`.
+
+`core.api.Unlearner` is a thin compatibility shim over this class.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.deltagrad import (DeltaGradConfig, Objective, RetrainStats,
+                                  baseline_retrain, sgd_train_with_cache)
+from repro.core.history import HistoryMeta, TrainingHistory
+from repro.core.online import OnlineEngine, OnlineStats
+from repro.data.dataset import Dataset
+from repro.train import checkpoint as ckpt
+
+
+@dataclass
+class UnlearnerConfig:
+    steps: int = 100
+    batch_size: int = 1 << 30  # default: deterministic full-batch GD
+    lr: float = 0.1
+    lr_schedule: Optional[Sequence] = None  # overrides lr if given
+    seed: int = 0
+    momentum: float = 0.0  # heavy-ball (beyond-paper; see HistoryMeta)
+    deltagrad: DeltaGradConfig = field(default_factory=DeltaGradConfig)
+    # None resolves to "stacked" (the engine's native tier, see core/engine),
+    # or to "host" — the codec-honoring offload tier — when history_codec is
+    # not "f32" (stacked storage is uncompressed by construction).  An
+    # EXPLICIT "stacked" + lossy codec is rejected by TrainingHistory.
+    history_tier: Optional[str] = None
+    history_codec: str = "f32"
+    spill_dir: Optional[str] = None
+
+
+@dataclass
+class UnlearnRequest:
+    """One typed unlearning request.
+
+    op:       "delete" | "add".
+    rows:     row ids — original or previously-added rows for delete;
+              already-appended rows for add (filled in automatically when
+              `data` is given).
+    data:     add payload (dict of columns); appended to the dataset at
+              submit time so later requests can reference the new rows.
+    coalesce: True → the planner may merge this request with adjacent
+              same-op requests into ONE group replay; False → serve each
+              row as its own Algorithm-3 replay (paper-exact
+              single-request semantics), never merged.
+    """
+
+    op: str
+    rows: Optional[Sequence[int]] = None
+    data: Optional[Dict[str, np.ndarray]] = None
+    coalesce: bool = True
+
+
+@dataclass
+class UnlearnResponse:
+    """Resolved outcome of one request.
+
+    stats holds one `RetrainStats` per replay that served the request — a
+    single entry when the request was coalesced into (or was itself) one
+    group replay, len(rows) entries for a serial (`coalesce=False`)
+    request.  `group_size` is the total number of rows the replay(s)
+    coalesced (> len(request.rows) when neighbors merged in).
+    `dispatch_s` is host dispatch time for the whole group; `params` is
+    the post-request model (a device value — NOT host-synced; forcing a
+    handle blocks on it)."""
+
+    request: UnlearnRequest
+    stats: List[RetrainStats]
+    group_size: int
+    dispatch_s: float
+    params: Any = None
+
+
+class RequestHandle:
+    """Lazy handle returned by `UnlearnerSession.submit`.
+
+    Holding a handle costs nothing: the request executes when the session
+    flushes (explicitly, or because some handle was forced).  `.result()`
+    forces the flush and blocks until this request's post-request params
+    are on host — the only sync point in the serving path."""
+
+    def __init__(self, session: "UnlearnerSession", ticket: int,
+                 request: UnlearnRequest):
+        self._session = session
+        self._ticket = ticket
+        self.request = request
+
+    @property
+    def done(self) -> bool:
+        """True once the request has been served (it may still be
+        executing asynchronously on the device)."""
+        return self._ticket in self._session._responses
+
+    def result(self, block: bool = True) -> UnlearnResponse:
+        resp = self._session._resolve(self._ticket)
+        if block:
+            jax.block_until_ready(resp.params)
+        return resp
+
+    @property
+    def params(self):
+        """Post-request model (forces resolution, blocks)."""
+        return self.result().params
+
+    @property
+    def stats(self) -> List[RetrainStats]:
+        return self.result(block=False).stats
+
+
+def plan_requests(pending: List[Tuple[int, UnlearnRequest]]
+                  ) -> List[List[Tuple[int, UnlearnRequest]]]:
+    """The coalescing planner: partition pending requests, in submission
+    order, into serving groups.  Maximal runs of adjacent same-op requests
+    with ``coalesce=True`` merge into one group (one engine replay);
+    ``coalesce=False`` requests form singleton groups and break runs, so
+    an explicitly-serial request is never reordered past a burst."""
+    groups: List[List[Tuple[int, UnlearnRequest]]] = []
+    for ticket, req in pending:
+        if (groups and req.coalesce
+                and groups[-1][0][1].coalesce
+                and groups[-1][0][1].op == req.op):
+            groups[-1].append((ticket, req))
+        else:
+            groups.append([(ticket, req)])
+    return groups
+
+
+class UnlearnerSession:
+    """Request-plan serving session over one cached training run."""
+
+    def __init__(
+        self,
+        objective: Objective,
+        params0: Any,
+        dataset: Dataset,
+        config: UnlearnerConfig,
+    ):
+        self.objective = objective
+        self.params0 = params0
+        self.dataset = dataset
+        self.config = config
+        self.history: Optional[TrainingHistory] = None
+        self.log: List[Dict] = []
+        self._trained_params: Any = params0
+        self._engine: Optional[OnlineEngine] = None
+        self._pending: List[Tuple[int, UnlearnRequest]] = []
+        self._responses: Dict[int, UnlearnResponse] = {}
+        self._failed: Dict[int, Exception] = {}
+        self._tickets = 0
+        # responses pin their post-request params (a device pytree) so
+        # handles can be forced later; bound how many stay live — beyond
+        # this, the oldest resolve to a clear "evicted" error instead of
+        # leaking device memory on fire-and-forget submitters
+        self.max_responses = 256
+
+    # -- phase 1: training with path caching --------------------------------
+
+    def fit(self) -> Any:
+        if self._pending:
+            raise RuntimeError(
+                "flush() or resolve pending requests before refitting")
+        c = self.config
+        tier = c.history_tier
+        if tier is None:
+            tier = "host" if c.history_codec != "f32" else "stacked"
+        meta = HistoryMeta(
+            n=self.dataset.n,
+            batch_size=min(c.batch_size, self.dataset.n),
+            seed=c.seed,
+            steps=c.steps,
+            lr_schedule=tuple(c.lr_schedule) if c.lr_schedule else ((0, c.lr),),
+            l2=self.objective.l2,
+            momentum=c.momentum,
+        )
+        self._trained_params, self.history = sgd_train_with_cache(
+            self.objective,
+            self.params0,
+            self.dataset,
+            meta,
+            tier=tier,
+            codec=c.history_codec,
+            spill_dir=c.spill_dir,
+        )
+        self._engine = None
+        return self._trained_params
+
+    def _require_fit(self):
+        if self.history is None:
+            raise RuntimeError("call fit() (or restore()) before serving")
+
+    # -- engine / current model ---------------------------------------------
+
+    def engine(self) -> OnlineEngine:
+        """The session's ONE online engine (created lazily; owns liveness,
+        added-row join columns, and the rewritten cached path)."""
+        self._require_fit()
+        if self._engine is None:
+            self._engine = OnlineEngine(
+                self.objective, self.history, self.dataset,
+                self.config.deltagrad)
+        return self._engine
+
+    def warmup(self, specs=("delete",)) -> float:
+        """Pre-compile the request programs; `specs` entries are op names
+        or ``(op, group_size)`` pairs (group sizes bucket to pow2, so warm
+        the bucket the serving bursts will hit).  Returns compile time."""
+        engine = self.engine()
+        if engine.impl == "scan":
+            engine._warmup(tuple(specs))
+        return engine.compile_time_s
+
+    @property
+    def params(self):
+        """Current model — forces every pending request and blocks."""
+        self.flush()
+        p = self._engine.params if self._engine is not None \
+            else self._trained_params
+        jax.block_until_ready(p)
+        return p
+
+    # -- phase 2: the request plan ------------------------------------------
+
+    def submit(self, request: Optional[UnlearnRequest] = None, *,
+               op: Optional[str] = None,
+               rows: Optional[Sequence[int]] = None,
+               data: Optional[Dict[str, np.ndarray]] = None,
+               coalesce: bool = True) -> RequestHandle:
+        """Enqueue one request; returns a lazy `RequestHandle`.
+
+        Nothing executes until the session flushes.  Add payloads (`data`)
+        ARE appended to the dataset here, so their row ids are assigned at
+        submission time and later requests may delete them."""
+        self._require_fit()
+        if request is None:
+            request = UnlearnRequest(op=op, rows=rows, data=data,
+                                     coalesce=coalesce)
+        if request.op not in ("delete", "add"):
+            raise ValueError(f"op must be 'delete' or 'add', got "
+                             f"{request.op!r}")
+        if request.op == "add" and request.data is not None \
+                and request.rows is None:
+            request.rows = self.dataset.append(request.data).tolist()
+        if not request.rows:
+            raise ValueError("request names no rows")
+        request.rows = [int(r) for r in request.rows]
+        if len(set(request.rows)) != len(request.rows):
+            raise ValueError(f"duplicate rows in request: {request.rows}")
+        if request.op == "delete":
+            pending_del = {r for _, q in self._pending if q.op == "delete"
+                           for r in q.rows}
+            for r in request.rows:
+                if not 0 <= r < self.dataset.n:
+                    raise ValueError(f"row {r} out of range")
+                if self.dataset.removed[r] or r in pending_del:
+                    raise ValueError(f"row {r} already deleted (or has a "
+                                     "pending delete)")
+        else:
+            pending_add = {r for _, q in self._pending if q.op == "add"
+                           for r in q.rows}
+            already = set(self._engine.added) if self._engine else set()
+            base_n = self.history.meta.n
+            for r in request.rows:
+                if not base_n <= r < self.dataset.n:
+                    raise ValueError(
+                        "add requests name rows appended AFTER the cached "
+                        f"training run (expected {base_n} <= row < "
+                        f"{self.dataset.n}, got {r}) — an original row "
+                        "would be double-counted")
+                if r in already or r in pending_add:
+                    raise ValueError(f"row {r} already added (or has a "
+                                     "pending add)")
+        ticket = self._tickets
+        self._tickets += 1
+        self._pending.append((ticket, request))
+        return RequestHandle(self, ticket, request)
+
+    def delete(self, rows: Sequence[int], coalesce: bool = True
+               ) -> RequestHandle:
+        return self.submit(op="delete", rows=list(rows), coalesce=coalesce)
+
+    def add(self, data: Optional[Dict[str, np.ndarray]] = None,
+            rows: Optional[Sequence[int]] = None, coalesce: bool = True
+            ) -> RequestHandle:
+        return self.submit(op="add", rows=rows, data=data, coalesce=coalesce)
+
+    def _resolve(self, ticket: int) -> UnlearnResponse:
+        if ticket not in self._responses and ticket not in self._failed:
+            self.flush()
+        if ticket in self._failed:
+            err = self._failed[ticket]
+            raise RuntimeError(
+                f"request {ticket} was not served: {err}") from err
+        return self._responses[ticket]
+
+    def _record(self, ticket: int, resp: UnlearnResponse) -> None:
+        self._responses[ticket] = resp
+        while len(self._responses) > self.max_responses:
+            old = next(iter(self._responses))  # oldest (insertion order)
+            del self._responses[old]
+            self._failed[old] = RuntimeError(
+                "response evicted (more than max_responses unread "
+                "responses); force handles promptly or raise "
+                "session.max_responses")
+
+    def flush(self) -> List[UnlearnResponse]:
+        """Serve every pending request through the coalescing planner.
+
+        Replays are DISPATCHED, not synced: device work queues up and
+        `dispatch_s` measures host time only; blocking happens when a
+        handle (or `.params`) is forced."""
+        if not self._pending:
+            return []
+        engine = self.engine()
+        pending, self._pending = self._pending, []
+        # size the add-column block for the whole plan once so the padded
+        # schedule width (and every compiled shape) stays put across it
+        n_adds = sum(len(q.rows) for _, q in pending if q.op == "add")
+        engine.add_capacity = max(engine.add_capacity,
+                                  len(engine.added) + n_adds)
+        out: List[UnlearnResponse] = []
+        groups = plan_requests(pending)
+        for gi, group in enumerate(groups):
+            op = group[0][1].op
+            rows = [r for _, q in group for r in q.rows]
+            t0 = time.perf_counter()
+            try:
+                if group[0][1].coalesce and len(rows) > 1:
+                    stats = [engine.request_group(op, rows)]
+                else:
+                    stats = [engine.request(op, r) for r in rows]
+            except Exception as e:
+                # the failing group's handles resolve to this error; groups
+                # after it go back on the queue (ahead of anything submitted
+                # later) so their handles stay servable
+                for ticket, _ in group:
+                    self._failed[ticket] = e
+                self._pending = [tr for g in groups[gi + 1:] for tr in g] \
+                    + self._pending
+                raise
+            dispatch_s = time.perf_counter() - t0
+            for ticket, req in group:
+                resp = UnlearnResponse(request=req, stats=stats,
+                                       group_size=len(rows),
+                                       dispatch_s=dispatch_s,
+                                       params=engine.params)
+                self._record(ticket, resp)
+                out.append(resp)
+            self.log.append({"op": op, "rows": rows,
+                             "coalesced": len(stats) == 1 and len(rows) > 1,
+                             "stats": stats})
+        return out
+
+    # -- streams (serial Algorithm-3 semantics; the paper's request model) ---
+
+    def serve_stream(self, ops: Sequence[Tuple[str, int]]) -> OnlineStats:
+        """Serve ``(op, row)`` pairs one replay per row (never coalesced),
+        returning aggregate `OnlineStats`; wall_time_s covers dispatch +
+        the final device sync, with compile cost reported separately."""
+        self._require_fit()
+        self.flush()  # drain older pending work outside this stream's timer
+        engine = self.engine()
+        handles = [self.submit(op=op, rows=[int(row)], coalesce=False)
+                   for op, row in ops]
+        stats = OnlineStats(compile_time_s=engine.compile_time_s)
+        t0 = time.perf_counter()
+        self.flush()
+        jax.block_until_ready(engine.params)
+        stats.wall_time_s = time.perf_counter() - t0
+        for h in handles:
+            stats.per_request.extend(h.stats)
+        return stats
+
+    def stream_delete(self, rows: Sequence[int]) -> OnlineStats:
+        return self.serve_stream([("delete", int(r)) for r in rows])
+
+    def stream_add(self, data: Dict[str, np.ndarray]) -> OnlineStats:
+        new_idx = self.dataset.append(data)
+        return self.serve_stream([("add", int(r)) for r in new_idx])
+
+    # -- reference: exact retraining (BaseL) ---------------------------------
+
+    def baseline(self, indices, mode: str = "delete"):
+        self._require_fit()
+        idx = np.asarray(list(indices), dtype=np.int64)
+        return baseline_retrain(
+            self.objective, self.dataset, self.history.meta, self.params0,
+            idx, mode)
+
+    # -- snapshot / restore --------------------------------------------------
+
+    def save(self, directory: str, step: Optional[int] = None) -> str:
+        """Write a restorable snapshot through `train/checkpoint`.
+
+        Pending requests are flushed (and the device drained) first, so
+        the snapshot is always a consistent between-requests state: params
+        ride as the checkpoint's sharded pytree; `TrainingHistory` (any
+        tier), the dataset (columns + deletion mask), and the engine's
+        stream state (liveness, added-row order, capacities, last L-BFGS
+        pair ring) ride in the extra payload.  Returns the step dir."""
+        self._require_fit()
+        self.flush()
+        params = self._engine.params if self._engine is not None \
+            else self._trained_params
+        jax.block_until_ready(params)
+        step = self._tickets if step is None else int(step)
+        extra = {
+            "format": 1,
+            "config": self.config,
+            "params0": jax.device_get(self.params0),
+            "history": self.history.state_dict(),
+            "dataset": {
+                "columns": {k: np.asarray(v)
+                            for k, v in self.dataset.columns.items()},
+                "removed": np.asarray(self.dataset.removed, dtype=bool).copy(),
+            },
+            "engine": (self._engine.state_dict()
+                       if self._engine is not None else None),
+            "tickets": self._tickets,
+        }
+        return ckpt.save(directory, step, params, extra=extra)
+
+    @classmethod
+    def restore(cls, directory: str, objective: Objective,
+                step: Optional[int] = None,
+                spill_dir: Optional[str] = None) -> "UnlearnerSession":
+        """Rebuild a session from `save()` output; the next request served
+        is identical to what the uninterrupted session would have served.
+        `objective` is code, not state — pass the same objective the saved
+        session was built with."""
+        if step is None:
+            step = ckpt.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no complete checkpoint under {directory}")
+        extra = ckpt.restore_extra(directory, step)
+        history = TrainingHistory.from_state_dict(extra["history"],
+                                                  spill_dir=spill_dir)
+        ds = Dataset(extra["dataset"]["columns"])
+        ds.removed = np.asarray(extra["dataset"]["removed"],
+                                dtype=bool).copy()
+        params = ckpt.restore(directory, step, like=history.final_params)
+        params0 = extra.get("params0")
+        if params0 is not None:
+            params0 = jax.tree.map(jax.numpy.asarray, params0)
+        sess = cls(objective, params0=params0, dataset=ds,
+                   config=extra["config"])
+        sess.history = history
+        sess._trained_params = params
+        sess._tickets = int(extra.get("tickets", 0))
+        if extra.get("engine") is not None:
+            engine = sess.engine()
+            engine.load_state(extra["engine"])
+            engine.params = params
+        return sess

@@ -27,16 +27,36 @@ class Dataset:
     def take(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
         return {k: v[idx] for k, v in self.columns.items()}
 
-    def device_columns(self):
+    def device_columns(self, capacity: Optional[int] = None):
         """Columns uploaded to device once (cached; refreshed after append).
 
         The replay engine gathers minibatches with on-device `jnp.take`
-        inside `lax.scan`, so the host never materializes per-step batches."""
+        inside `lax.scan`, so the host never materializes per-step batches.
+
+        `capacity` (>= n) pads the leading dimension with zero rows so the
+        uploaded shape — and with it every compiled program keyed on it —
+        stays put while the dataset grows underneath (the online engine
+        passes a pow2-bucketed capacity, so an addition stream re-traces
+        O(log #adds) times instead of once per append).  Padding rows are
+        never gathered: schedules only index rows < n."""
         import jax.numpy as jnp
 
-        if getattr(self, "_device_cols", None) is None or self._device_n != self.n:
-            self._device_cols = {k: jnp.asarray(v) for k, v in self.columns.items()}
+        cap = self.n if capacity is None else int(capacity)
+        assert cap >= self.n, (cap, self.n)
+        if (getattr(self, "_device_cols", None) is None
+                or self._device_n != self.n
+                or getattr(self, "_device_cap", None) != cap):
+
+            def upload(v):
+                if cap > len(v):
+                    pad = np.zeros((cap - len(v),) + v.shape[1:],
+                                   dtype=v.dtype)
+                    v = np.concatenate([v, pad])
+                return jnp.asarray(v)
+
+            self._device_cols = {k: upload(v) for k, v in self.columns.items()}
             self._device_n = self.n
+            self._device_cap = cap
         return self._device_cols
 
     def __len__(self) -> int:

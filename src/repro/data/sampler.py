@@ -182,12 +182,16 @@ def build_schedule(
     )
 
 
+def _pow2(x: int) -> int:
+    return 1 << max(0, (x - 1)).bit_length()
+
+
 def build_online_schedule(
     seed: int,
     steps: int,
     n: int,
     batch_size: int,
-    req: int,
+    req,
     op: str,
     lr_at,
     live: np.ndarray,
@@ -195,34 +199,48 @@ def build_online_schedule(
     joins: Optional[np.ndarray],
     add_pad: int,
     idx_all: Optional[np.ndarray] = None,
+    r_pad: Optional[int] = None,
 ) -> ReplaySchedule:
-    """Replay plan for ONE online request (Algorithm 3, Appendix C.2).
+    """Replay plan for ONE online request — a single row or a COALESCED
+    GROUP of rows served as one replay (Algorithm 3, Appendix C.2; group
+    deletion is the paper's Algorithm-1 index-set semantics applied to the
+    current rewritten path).
 
     The replayed batch is extended with one column per row appended by
     earlier addition requests: columns ``[0, B)`` hold the original
     minibatch schedule, columns ``[B, B + add_pad)`` hold ``added_ids``
     (padding columns point at row 0 with weight 0).  ``kept_w`` marks
-    POST-request membership — the request row itself always rides the
-    ``changed`` slot, so ``kept`` is the post-request effective batch size
-    and the PRE-request size is ``kept + dB`` for deletions (resp. ``kept``
-    pre / ``kept + dB`` post for additions).
+    POST-request membership — the request rows always ride the ``changed``
+    block, so ``kept`` is the post-request effective batch size and the
+    PRE-request size is ``kept + dB`` for deletions (resp. ``kept`` pre /
+    ``kept + dB`` post for additions).
 
     Args:
-      req:       row id of the request (original or previously-added row for
-                 delete; a row already appended to the dataset for add).
+      req:       row id of the request, or a sequence of row ids for a
+                 coalesced group (original or previously-added rows for
+                 delete; rows already appended to the dataset for add —
+                 add groups take the next len(req) join-mask columns).
       op:        "delete" | "add".
       live:      bool per row id (original and added), False once deleted by
                  an earlier request — Algorithm 3's n-k bookkeeping.
       added_ids: (A,) rows appended by earlier ADD requests, arrival order
                  (join-mask column j belongs to added_ids[j]).
-      joins:     (T, >= A [+1 for op=="add"]) precomputed addition_mask_all
+      joins:     (T, >= A [+K for op=="add"]) precomputed addition_mask_all
                  columns; None only when no adds are involved.
       add_pad:   padded width of the added-column block (>= A; pow2 so the
                  compiled segment shapes are stable across a stream).
       idx_all:   reusable (T, B) original schedule (request-invariant).
+      r_pad:     padded width of the changed-row block (defaults to the next
+                 pow2 of the group size, so burst sizes bucket into O(log)
+                 distinct compiled shapes instead of one per size).
     """
     assert op in ("delete", "add")
-    req = int(req)
+    reqs = np.atleast_1d(np.asarray(req, dtype=np.int64))
+    K = len(reqs)
+    assert K >= 1 and len(set(reqs.tolist())) == K, (
+        f"group request must name distinct rows, got {reqs}")
+    if r_pad is None:
+        r_pad = _pow2(K)
     added_ids = np.asarray(added_ids, dtype=np.int64)
     A = len(added_ids)
     assert add_pad >= A, (add_pad, A)
@@ -231,28 +249,47 @@ def build_online_schedule(
     T, B = idx.shape
 
     kept_orig = live[idx].copy()  # (T, B) originals surviving earlier requests
-    presence = np.zeros(T, dtype=bool)  # request row in batch t?
-    req_added_col = -1
+    changed_rows = np.zeros((T, r_pad), dtype=np.int64)
+    changed_w = np.zeros((T, r_pad), dtype=np.float32)
+    drop_cols: set = set()
     if op == "delete":
-        hits = np.nonzero(added_ids == req)[0]
-        if hits.size:  # deleting a previously-added row
-            req_added_col = int(hits[0])
-            presence = joins[:, req_added_col] & bool(live[req])
-        else:
-            hit = (idx == req) & kept_orig
-            presence = hit.any(axis=1)
-            kept_orig &= ~hit
+        col_of = {int(r): j for j, r in enumerate(added_ids)}
+        req_orig = np.asarray([r for r in reqs if int(r) not in col_of],
+                              dtype=np.int64)
+        # (r, per-step presence) for group rows that were added earlier —
+        # their membership comes from their join columns, not the schedule
+        pres_added = []
+        for r in reqs:
+            j = col_of.get(int(r))
+            if j is not None:
+                drop_cols.add(j)
+                pres_added.append((int(r), joins[:, j] & bool(live[r])))
+        hit = (np.isin(idx, req_orig) & kept_orig) if len(req_orig) \
+            else np.zeros_like(kept_orig)
+        kept_orig &= ~hit
+        rows_any = hit.any(axis=1)
+        for _, p in pres_added:
+            rows_any |= p
+        for t in np.nonzero(rows_any)[0]:
+            rows = idx[t][hit[t]].tolist() \
+                + [r for r, p in pres_added if p[t]]
+            assert len(rows) <= r_pad, (
+                f"r_pad={r_pad} smaller than per-batch overlap {len(rows)}")
+            changed_rows[t, : len(rows)] = rows
+            changed_w[t, : len(rows)] = 1.0
     else:
-        assert joins is not None and joins.shape[1] >= A + 1
-        presence = joins[:, A].copy()  # the new row's own join column
+        assert joins is not None and joins.shape[1] >= A + K
+        changed_rows[:, :K] = reqs  # constant: the new rows themselves
+        changed_w[:, :K] = joins[:, A:A + K].astype(np.float32)
+    dB = changed_w.sum(axis=1)
 
     if add_pad:
         add_cols = np.zeros((T, add_pad), dtype=np.float32)
         add_rows = np.zeros(add_pad, dtype=np.int64)
         add_rows[:A] = added_ids
         for j in range(A):
-            if j == req_added_col or not live[added_ids[j]]:
-                continue  # deleted rows (and the request itself) drop out
+            if j in drop_cols or not live[added_ids[j]]:
+                continue  # deleted rows (and the request rows) drop out
             add_cols[:, j] = joins[:, j]
         idx_ext = np.concatenate(
             [idx, np.broadcast_to(add_rows, (T, add_pad))], axis=1)
@@ -262,16 +299,15 @@ def build_online_schedule(
         idx_ext = idx
         kept_w = kept_orig.astype(np.float32)
 
-    dB = presence.astype(np.float32)
     lr = np.asarray([lr_at(t) for t in range(T)], dtype=np.float32)
     return ReplaySchedule(
         idx=idx_ext,
         kept_w=kept_w,
-        changed_idx=np.full((T, 1), req, dtype=np.int64),
-        changed_w=dB[:, None].copy(),
-        dB=dB,
+        changed_idx=changed_rows,
+        changed_w=changed_w,
+        dB=dB.astype(np.float32),
         kept=kept_w.sum(axis=1).astype(np.float32),
         lr=lr,
         mode=op,
-        r_pad=1,
+        r_pad=r_pad,
     )

@@ -2,11 +2,15 @@
 
 Two entry points share this module:
 
-  * ``unlearn`` — the DeltaGrad request server (ROADMAP serve-path item):
-    trains a model with path caching, then answers a stream of online
-    delete/add requests through ``core.engine.run_online_request`` (via
-    `core.online.OnlineEngine`, stacked history resident on the device),
-    reporting per-request latency with the compile cost separated out.
+  * ``unlearn`` — the DeltaGrad request server (ROADMAP serve-path item),
+    built on ``core.session.UnlearnerSession``: trains with path caching,
+    answers a stream of online delete/add requests (one lazy `submit()`
+    per request — DISPATCH latency is what the server's queue sees, and is
+    reported separately from BLOCKED latency, the device-drained time a
+    per-request sync would pay), then serves a burst of ``--burst``
+    deletes both serially and COALESCED into one group replay.  Summary
+    percentiles include p99; a machine-readable ``BENCH_serve.json`` is
+    written to ``--bench-out``.
 
         PYTHONPATH=src python -m repro.launch.serve unlearn \
             --n 4000 --d 500 --steps 80 --requests 12 --add-frac 0.25
@@ -32,14 +36,24 @@ from repro.configs.registry import get_config
 from repro.models.registry import build
 
 
+def _pcts(ms) -> dict:
+    ms = np.asarray(ms, dtype=np.float64)
+    return {"mean": float(ms.mean()),
+            "p50": float(np.percentile(ms, 50)),
+            "p95": float(np.percentile(ms, 95)),
+            "p99": float(np.percentile(ms, 99))}
+
+
 def unlearn_main(argv) -> None:
     """Stand up the online unlearning service and drive a request stream."""
-    from repro.core.deltagrad import DeltaGradConfig, sgd_train_with_cache
-    from repro.core.history import HistoryMeta
-    from repro.core.online import OnlineEngine
+    import json
+
+    from repro.core.deltagrad import DeltaGradConfig
+    from repro.core.session import UnlearnerConfig, UnlearnerSession
     from repro.data.synthetic import binary_classification
     from repro.models.simple import (logreg_accuracy, logreg_init,
                                      logreg_objective)
+    from repro.utils.tree import tree_norm, tree_sub
 
     ap = argparse.ArgumentParser(prog="serve unlearn")
     ap.add_argument("--n", type=int, default=4000)
@@ -56,57 +70,132 @@ def unlearn_main(argv) -> None:
                     help="fraction of requests that are additions")
     ap.add_argument("--impl", default="scan", choices=("scan", "python"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--burst", type=int, default=8,
+                    help="K for the coalesced-vs-serial delete burst")
+    ap.add_argument("--bench-out", default="BENCH_serve.json",
+                    help="machine-readable results path ('' disables)")
     args = ap.parse_args(argv)
 
-    ds = binary_classification(n=args.n, d=args.d, seed=args.seed)
     obj = logreg_objective(l2=args.l2)
-    meta = HistoryMeta(n=ds.n, batch_size=min(args.batch, ds.n),
-                       seed=args.seed, steps=args.steps,
-                       lr_schedule=((0, args.lr),), momentum=args.momentum)
+    cfg = UnlearnerConfig(
+        steps=args.steps, batch_size=args.batch, lr=args.lr, seed=args.seed,
+        momentum=args.momentum,
+        deltagrad=DeltaGradConfig(period=args.period, burn_in=args.burn_in,
+                                  impl=args.impl))
+
+    def build_session():
+        ds = binary_classification(n=args.n, d=args.d, seed=args.seed)
+        sess = UnlearnerSession(obj, logreg_init(args.d, seed=1), ds, cfg)
+        sess.fit()
+        return sess, ds
+
     t0 = time.perf_counter()
-    params, hist = sgd_train_with_cache(obj, logreg_init(args.d, seed=1),
-                                        ds, meta)
-    jax.block_until_ready(params)
+    sess, ds = build_session()
+    jax.block_until_ready(sess.params)
     print(f"trained {args.steps} steps (n={ds.n}, d={args.d}) with path "
           f"cache in {time.perf_counter() - t0:.2f}s; "
-          f"accuracy {logreg_accuracy(params, ds):.4f}")
+          f"accuracy {logreg_accuracy(sess.params, ds):.4f}")
 
-    # additions are served from a pre-appended row pool: appending
-    # mid-stream would grow the device columns' leading dim and retrace
-    # every compiled program per add request, so stage capacity up front
+    # additions are served from a pre-appended row pool; with the engine's
+    # pow2-bucketed row capacity a stream MAY outgrow the pool at O(log)
+    # retrace cost, but staging the expected count keeps steady-state
+    # latency clean of re-uploads entirely
     rng = np.random.default_rng(args.seed + 1)
-    pool_src = rng.integers(0, meta.n, size=args.requests)
+    pool_src = rng.integers(0, args.n, size=args.requests)
     add_pool = list(ds.append({k: v[pool_src] for k, v in ds.columns.items()}))
+    engine = sess.engine()
+    engine.add_capacity = args.requests
 
-    cfg = DeltaGradConfig(period=args.period, burn_in=args.burn_in,
-                          impl=args.impl)
-    warm = ("delete", "add") if args.add_frac > 0 else ("delete",)
-    engine = OnlineEngine(obj, hist, ds, cfg,
-                          warmup=warm if args.impl == "scan" else False,
-                          add_capacity=args.requests)
-    print(f"online engine up (impl={engine.impl}); first-request compile "
-          f"{engine.compile_time_s * 1e3:.0f} ms")
+    warm = [("delete", 1)] + ([("add", 1)] if args.add_frac > 0 else [])
+    compile_s = sess.warmup(warm)
+    print(f"session up (impl={engine.impl}); first-request compile "
+          f"{compile_s * 1e3:.0f} ms")
 
-    lat = []
+    # -- latency loop: dispatch (what the request queue sees) vs blocked
+    # (dispatch + device drain) measured separately — timing a forced
+    # jax.block_until_ready inside the per-request loop conflates the two
+    dispatch_ms, blocked_ms = [], []
     for i in range(args.requests):
         if add_pool and rng.random() < args.add_frac:
             op, row = "add", int(add_pool.pop(0))
         else:
-            live = np.flatnonzero(engine.live[:meta.n])
+            live = np.flatnonzero(engine.live[:args.n])
             op, row = "delete", int(rng.choice(live))
         t0 = time.perf_counter()
-        st = engine.request(op, row)
+        h = sess.submit(op=op, rows=[row], coalesce=False)
+        sess.flush()
+        t_disp = time.perf_counter() - t0
         jax.block_until_ready(engine.params)
-        ms = (time.perf_counter() - t0) * 1e3
-        lat.append(ms)
-        print(f"  request {i:3d} {op:6s} row {row:5d}: {ms:7.1f} ms  "
+        t_block = time.perf_counter() - t0
+        dispatch_ms.append(t_disp * 1e3)
+        blocked_ms.append(t_block * 1e3)
+        st = h.stats[0]
+        print(f"  request {i:3d} {op:6s} row {row:5d}: dispatch "
+              f"{t_disp * 1e3:7.1f} ms, blocked {t_block * 1e3:7.1f} ms  "
               f"(approx {st.approx_steps}, explicit {st.explicit_steps}, "
               f"grad-eval speedup x{st.theoretical_speedup:.1f})")
-    lat = np.asarray(lat)
-    print(f"served {args.requests} requests: "
-          f"p50 {np.percentile(lat, 50):.1f} ms, "
-          f"p95 {np.percentile(lat, 95):.1f} ms; "
-          f"accuracy {logreg_accuracy(engine.params, ds):.4f}")
+    dp, bp = _pcts(dispatch_ms), _pcts(blocked_ms)
+    print(f"served {args.requests} requests: dispatch p50 {dp['p50']:.1f} / "
+          f"p95 {dp['p95']:.1f} / p99 {dp['p99']:.1f} ms, blocked p50 "
+          f"{bp['p50']:.1f} / p95 {bp['p95']:.1f} / p99 {bp['p99']:.1f} ms; "
+          f"accuracy {logreg_accuracy(sess.params, ds):.4f}")
+
+    # -- coalesced burst: K deletes as ONE group replay vs the serial path
+    K = args.burst
+    results = {
+        "config": {"n": args.n, "d": args.d, "steps": args.steps,
+                   "batch": args.batch, "requests": args.requests,
+                   "add_frac": args.add_frac, "impl": args.impl,
+                   "momentum": args.momentum, "burst": K},
+        "compile_s": compile_s,
+        "latency_ms": {"dispatch": dp, "blocked": bp},
+        "accuracy": float(logreg_accuracy(sess.params, ds)),
+    }
+    if K > 0:
+        burst_rows = np.random.default_rng(args.seed + 2).choice(
+            args.n, size=K, replace=False).tolist()
+
+        sess_a, _ = build_session()          # serial Algorithm-3 stream
+        sess_a.warmup([("delete", 1)])
+        t0 = time.perf_counter()
+        sess_a.stream_delete(burst_rows)
+        t_serial = time.perf_counter() - t0
+
+        sess_b, ds_b = build_session()       # ONE coalesced group replay
+        sess_b.warmup([("delete", K)])
+        t0 = time.perf_counter()
+        hb = sess_b.delete(burst_rows)
+        jax.block_until_ready(hb.params)
+        t_coal = time.perf_counter() - t0
+
+        # parity of the coalesced replay vs the python oracle
+        import dataclasses
+        cfg_py = dataclasses.replace(
+            cfg, deltagrad=dataclasses.replace(cfg.deltagrad, impl="python"))
+        ds_c = binary_classification(n=args.n, d=args.d, seed=args.seed)
+        sess_c = UnlearnerSession(obj, logreg_init(args.d, seed=1), ds_c,
+                                  cfg_py)
+        sess_c.fit()
+        sess_c.delete(burst_rows).result()
+        parity = float(tree_norm(tree_sub(sess_b.params, sess_c.params)))
+        drift = float(tree_norm(tree_sub(sess_b.params, sess_a.params)))
+        results["coalesce"] = {
+            "k": K,
+            "serial_ms_per_req": t_serial / K * 1e3,
+            "coalesced_ms_per_req": t_coal / K * 1e3,
+            "per_request_speedup": t_serial / max(t_coal, 1e-9),
+            "parity_vs_python": parity,
+            "serial_vs_coalesced_dist": drift,
+        }
+        print(f"burst K={K}: serial {t_serial / K * 1e3:.1f} ms/req, "
+              f"coalesced {t_coal / K * 1e3:.1f} ms/req "
+              f"(x{t_serial / max(t_coal, 1e-9):.1f}); parity vs python "
+              f"{parity:.2e}; serial-vs-coalesced dist {drift:.2e}")
+
+    if args.bench_out:
+        with open(args.bench_out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.bench_out}")
 
 
 def decode_main() -> None:

@@ -1,0 +1,312 @@
+"""UnlearnerSession: request-plan serving — coalescing, laziness,
+interleaved batch/stream semantics, snapshot/restore, capacity bucketing."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.deltagrad import DeltaGradConfig
+from repro.core.session import (UnlearnerConfig, UnlearnerSession,
+                                UnlearnRequest, plan_requests)
+from repro.data.synthetic import binary_classification
+from repro.models.simple import logreg_init, logreg_objective
+from repro.utils.tree import tree_norm, tree_sub
+
+PARITY_TOL = 1.5e-7
+
+
+def make_session(n=800, d=10, steps=50, batch=256, impl="scan", seed=0):
+    ds = binary_classification(n=n, d=d, seed=seed)
+    obj = logreg_objective(l2=5e-3)
+    cfg = UnlearnerConfig(
+        steps=steps, batch_size=batch, lr=0.4, seed=seed,
+        deltagrad=DeltaGradConfig(period=5, burn_in=8, history_size=2,
+                                  impl=impl))
+    sess = UnlearnerSession(obj, logreg_init(d, seed=seed + 1), ds, cfg)
+    sess.fit()
+    return sess, ds
+
+
+def leaves_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# -- coalescing ------------------------------------------------------------
+
+
+def test_coalesced_burst_parity_vs_python_oracle():
+    """The acceptance bar: a K=8 coalesced delete replay must match the
+    per-step python oracle serving the SAME group schedule to <= 1.5e-7."""
+    rows = np.random.default_rng(5).choice(800, 8, replace=False).tolist()
+    sess_scan, _ = make_session(impl="scan")
+    sess_py, _ = make_session(impl="python")
+    w_scan = sess_scan.delete(rows).params
+    w_py = sess_py.delete(rows).params
+    d = float(tree_norm(tree_sub(w_scan, w_py)))
+    assert d <= PARITY_TOL, d
+
+
+def test_coalesced_burst_tracks_baseline_and_serial():
+    """Serving-semantics contract (core.session docstring): the coalesced
+    group correction approximates the same leave-K-out model as the serial
+    Algorithm-3 stream — both must land far closer to exact retraining
+    than the original model, and close to each other."""
+    rows = np.random.default_rng(6).choice(800, 8, replace=False).tolist()
+    sess_c, _ = make_session()
+    w_star = sess_c.params
+    w_u, _ = sess_c.baseline(rows)
+
+    w_coal = sess_c.delete(rows).params
+    sess_s, _ = make_session()
+    sess_s.stream_delete(rows)
+    w_serial = sess_s.params
+
+    d_cu = float(tree_norm(tree_sub(w_coal, w_u)))
+    d_su = float(tree_norm(tree_sub(w_serial, w_u)))
+    d_0u = float(tree_norm(tree_sub(w_star, w_u)))
+    assert d_cu < 0.3 * d_0u, (d_cu, d_0u)
+    assert d_su < 0.3 * d_0u, (d_su, d_0u)
+    d_cs = float(tree_norm(tree_sub(w_coal, w_serial)))
+    assert d_cs < 0.5 * d_0u, (d_cs, d_0u)
+
+
+def test_planner_groups_adjacent_same_op_requests():
+    reqs = [
+        (0, UnlearnRequest("delete", [1])),
+        (1, UnlearnRequest("delete", [2, 3])),
+        (2, UnlearnRequest("add", [800])),
+        (3, UnlearnRequest("delete", [4])),
+        (4, UnlearnRequest("delete", [5], coalesce=False)),  # breaks the run
+        (5, UnlearnRequest("delete", [6])),
+    ]
+    groups = plan_requests(reqs)
+    shape = [[t for t, _ in g] for g in groups]
+    assert shape == [[0, 1], [2], [3], [4], [5]]
+
+
+def test_handles_are_lazy_and_share_one_group_replay():
+    sess, ds = make_session(steps=40)
+    h1 = sess.delete([1, 2, 3])
+    h2 = sess.delete([10, 11])
+    h3 = sess.add(data={k: v[:2] for k, v in ds.columns.items()})
+    # nothing executed yet: no engine, no responses
+    assert sess._engine is None and not h1.done and not h3.done
+    r1 = h1.result()
+    # forcing ONE handle flushes the whole plan
+    assert h2.done and h3.done
+    # the two delete requests coalesced into one 5-row replay
+    assert r1.group_size == 5 and len(r1.stats) == 1
+    assert h2.result().stats[0] is r1.stats[0]
+    assert h3.result().group_size == 2
+    assert ds.removed[[1, 2, 3, 10, 11]].all()
+    assert sess._engine.added == [800, 801]
+
+
+def test_submit_validates_rows():
+    sess, _ = make_session(steps=40)
+    sess.delete([7]).result()
+    with pytest.raises(ValueError, match="already deleted"):
+        sess.delete([7])
+    sess.delete([8])  # pending
+    with pytest.raises(ValueError, match="already deleted"):
+        sess.delete([8])
+    with pytest.raises(ValueError, match="out of range"):
+        sess.delete([10_000])
+    with pytest.raises(ValueError, match="duplicate"):
+        sess.delete([9, 9])
+    with pytest.raises(ValueError, match="names no rows"):
+        sess.delete([])
+
+
+def test_submit_validates_add_rows():
+    sess, ds = make_session(steps=40)
+    with pytest.raises(ValueError, match="appended AFTER"):
+        sess.add(rows=[3])  # an original row would be double-counted
+    new = ds.append({k: v[:1] for k, v in ds.columns.items()})
+    h = sess.add(rows=new.tolist())
+    with pytest.raises(ValueError, match="pending add"):
+        sess.add(rows=new.tolist())
+    h.result()
+    with pytest.raises(ValueError, match="already added"):
+        sess.add(rows=new.tolist())
+
+
+def test_flush_failure_keeps_later_requests_servable(monkeypatch):
+    """A group that dies mid-plan must not strand the rest of the plan:
+    later groups go back on the queue, and the failed group's handles
+    resolve to a clear error instead of a bare KeyError."""
+    sess, ds = make_session(steps=40)
+    h1 = sess.delete([1])
+    h2 = sess.delete([2], coalesce=False)  # this group will fail
+    h3 = sess.delete([3])
+
+    from repro.core import online
+    orig = online.OnlineEngine.request_group
+
+    def boom(self, op, rows):
+        if rows == [2]:
+            raise RuntimeError("boom")
+        return orig(self, op, rows)
+
+    monkeypatch.setattr(online.OnlineEngine, "request_group", boom)
+    with pytest.raises(RuntimeError, match="boom"):
+        h1.result()  # forces the flush that hits the failure
+    monkeypatch.undo()
+
+    assert h1.result().group_size == 1  # served before the failure
+    with pytest.raises(RuntimeError, match="not served"):
+        h2.result()
+    r3 = h3.result()  # re-queued and served on the next flush
+    assert r3.group_size == 1 and ds.removed[3] and not ds.removed[2]
+
+
+def test_group_delete_r_pad_capped_at_batch_size():
+    """A K >> B delete group must not widen every step's changed block to
+    K: the pad caps at the minibatch bound (like the batch path)."""
+    sess, _ = make_session(n=800, batch=64, steps=30)
+    eng = sess.engine()
+    rows = list(range(100))
+    sched = eng._schedule("delete", rows)
+    assert sched.changed_idx.shape[1] == 64  # pow2(min(100, B=64))
+    assert sess.delete(rows).result().group_size == 100
+
+
+def test_response_eviction_bounds_memory():
+    sess, _ = make_session(steps=40)
+    sess.max_responses = 2
+    handles = [sess.delete([r], coalesce=False) for r in (1, 2, 3)]
+    sess.flush()
+    # oldest response evicted (3 singleton groups, cap 2)
+    with pytest.raises(RuntimeError, match="evicted"):
+        handles[0].result()
+    assert handles[2].result().group_size == 1
+
+
+# -- interleaved batch/stream semantics ------------------------------------
+
+
+def _interleaved_plan(sess, ds):
+    """delete (coalesced batch) -> stream_add (serial) -> delete again —
+    the interleaving the pre-session API silently corrupted."""
+    sess.delete([3, 17]).result()
+    sess.stream_add({k: v[:2] for k, v in ds.columns.items()})
+    sess.delete([40, 41]).result()
+    return sess.params
+
+
+def test_interleaved_batch_stream_parity_vs_python_oracle():
+    sess_a, ds_a = make_session(impl="scan", steps=40)
+    sess_b, ds_b = make_session(impl="python", steps=40)
+    w_a = _interleaved_plan(sess_a, ds_a)
+    w_b = _interleaved_plan(sess_b, ds_b)
+    d = float(tree_norm(tree_sub(w_a, w_b)))
+    assert d <= PARITY_TOL, d
+    # both engines kept the full stream state across the interleaving
+    for sess in (sess_a, sess_b):
+        eng = sess._engine
+        assert eng.added == [800, 801]
+        assert not eng.live[[3, 17, 40, 41]].any()
+
+
+# -- snapshot / restore ----------------------------------------------------
+
+
+def test_snapshot_restore_roundtrip_mid_stream(tmp_path):
+    """save() mid-stream; the restored session must serve the next request
+    IDENTICALLY: bitwise-equal params and equal OnlineStats counters."""
+    obj = logreg_objective(l2=5e-3)
+    ds = binary_classification(n=800, d=10, seed=0)
+    cfg = UnlearnerConfig(steps=50, batch_size=256, lr=0.4, seed=0,
+                          deltagrad=DeltaGradConfig(period=5, burn_in=8))
+    sess = UnlearnerSession(obj, logreg_init(10, seed=1), ds, cfg)
+    sess.fit()
+    sess.delete([1, 2, 3]).result()
+    sess.stream_add({k: v[:2] for k, v in ds.columns.items()})
+    sess.save(str(tmp_path))
+
+    restored = UnlearnerSession.restore(str(tmp_path), obj)
+    assert leaves_equal(sess.params, restored.params)
+    assert restored._engine.added == sess._engine.added
+    assert np.array_equal(restored._engine.live, sess._engine.live)
+    assert restored._engine.last_ring is not None
+
+    st_a = sess.stream_delete([30])
+    st_b = restored.stream_delete([30])
+    assert leaves_equal(sess.params, restored.params)  # bitwise
+    a, b = st_a.per_request[0], st_b.per_request[0]
+    for f in ("explicit_steps", "approx_steps", "guard_fallbacks",
+              "skipped_steps", "grad_examples", "grad_examples_baseline"):
+        assert getattr(a, f) == getattr(b, f), f
+    # restored history keeps rewriting (next request also matches)
+    assert leaves_equal(sess.history.final_params,
+                        restored.history.final_params)
+
+
+def test_restore_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        UnlearnerSession.restore(str(tmp_path / "nope"),
+                                 logreg_objective(l2=5e-3))
+
+
+# -- pow2-bucketed add capacity --------------------------------------------
+
+
+def test_device_columns_capacity_keeps_shapes_stable():
+    ds = binary_classification(n=100, d=4, seed=0)
+    cols = ds.device_columns(capacity=128)
+    assert all(v.shape[0] == 128 for v in cols.values())
+    ds.append({k: v[:5] for k, v in ds.columns.items()})
+    cols2 = ds.device_columns(capacity=128)
+    # re-uploaded (new rows) but the SHAPE — what compiled programs key on
+    # — is unchanged, so nothing retraces
+    assert all(v.shape[0] == 128 for v in cols2.values())
+    with pytest.raises(AssertionError):
+        ds.device_columns(capacity=64)  # below n
+
+
+def test_engine_row_capacity_grows_pow2():
+    sess, ds = make_session(steps=40)
+    eng = sess.engine()
+    base = eng._base_n
+    assert eng._row_cap == base
+    widths = set()
+    for i in range(5):
+        sess.stream_add({k: v[i:i + 1] for k, v in ds.columns.items()})
+        widths.add(eng._cols()["x"].shape[0])
+        assert eng._row_cap - base == 1 << max(
+            0, (ds.n - base - 1).bit_length()), (eng._row_cap, ds.n)
+    # 5 appends landed in O(log) distinct shapes: caps 1, 2, 4, 8
+    assert len(widths) <= 4, widths
+
+
+# -- unlearner shim over the session ---------------------------------------
+
+
+def test_unlearner_shim_batch_after_stream_keeps_state():
+    """The silent-state-loss footgun: batch delete()/add() after stream_*
+    must reuse the session engine (added rows + liveness survive), never
+    silently rebuild from a stale cache."""
+    from repro.core.api import Unlearner
+
+    ds = binary_classification(n=400, d=8, seed=3)
+    unl = Unlearner(logreg_objective(l2=5e-3), logreg_init(8, seed=4), ds,
+                    UnlearnerConfig(steps=30, batch_size=64, lr=0.3,
+                                    deltagrad=DeltaGradConfig(period=5,
+                                                              burn_in=4)))
+    unl.fit()
+    unl.stream_add({k: v[:2] for k, v in ds.columns.items()})
+    eng = unl._online
+    assert eng is not None and eng.added == [400, 401]
+    stats = unl.delete([5, 6])  # batch request on the SAME engine
+    assert unl._online is eng
+    assert eng.added == [400, 401]  # join columns survived
+    assert not eng.live[[5, 6]].any()
+    assert stats.approx_steps > 0
+    # deleting a previously-added row still works after the batch call
+    unl.stream_delete([400])
+    assert unl._online is eng and not eng.live[400]
