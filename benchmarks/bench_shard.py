@@ -1,0 +1,193 @@
+"""HistoryStore placement benchmark → BENCH_shard.json.
+
+Compares the three ways `core.store` can serve the cached optimization
+path to the compiled replay scan, on the same problem:
+
+  * ``resident``   — stacked tier, single device (the baseline fast path);
+  * ``streamed``   — host tier, device-resident windows with double-buffered
+                     prefetch (`SegmentStreamer`);
+  * ``mesh``       — stacked tier sharded over an N-device CPU mesh
+                     (`PlacementPolicy` + shard_map replay).  Runs in a
+                     SUBPROCESS with ``--xla_force_host_platform_device_count``
+                     so the forced device count never pollutes the caller.
+
+Reported per variant: total replay wall, per-segment wall, history HBM
+high-water per device, and parity vs the resident baseline.  The MLP
+problem is sized so its (d, hidden) leaves actually shard on the data
+axis — the HBM column is the point of the mesh variant, the window
+column is the point of the streamed one.
+
+    PYTHONPATH=src python benchmarks/bench_shard.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+
+def build_problem(args):
+    import jax.numpy as jnp
+
+    from repro.core.history import HistoryMeta
+    from repro.data.synthetic import binary_classification
+    from repro.models.simple import mlp_init, mlp_objective
+
+    ds = binary_classification(n=args.n, d=args.d, seed=args.seed)
+    ds.columns["y"] = ds.columns["y"].astype(np.int32)
+    obj = mlp_objective(l2=1e-3)
+    meta = HistoryMeta(n=args.n, batch_size=args.batch, seed=args.seed,
+                       steps=args.steps, lr_schedule=((0, 0.05),), l2=1e-3)
+    p0 = mlp_init(args.d, args.hidden, 2, seed=1)
+    changed = np.arange(args.deletes, dtype=np.int64)
+    del jnp
+    return ds, obj, meta, p0, changed
+
+
+def run_variant(args, variant: str):
+    import jax
+
+    from repro.core.deltagrad import (DeltaGradConfig, deltagrad_retrain,
+                                      sgd_train_with_cache)
+    from repro.core.store import PlacementPolicy
+    from repro.utils.tree import tree_norm, tree_sub
+
+    from repro.core.store import HistoryStore
+
+    ds, obj, meta, p0, changed = build_problem(args)
+    cfg = DeltaGradConfig(period=args.period, burn_in=args.burn_in,
+                          history_size=2, stream_window=args.window)
+    tier = "host" if variant == "streamed" else "stacked"
+    _, hist = sgd_train_with_cache(obj, p0, ds, meta, tier=tier)
+    placement = PlacementPolicy.local(args.devices) if variant == "mesh" \
+        else None
+    # ONE store across reps: the sharded variant's compiled shard_map
+    # programs are cached on the store, so the timed runs measure replay,
+    # not retrace/compile (cf. deltagrad_retrain's store= docstring)
+    store = HistoryStore.create(hist, placement=placement,
+                                window=args.window)
+
+    # reference for parity: the single-device RESIDENT replay (for the
+    # streamed variant that means a separate stacked-tier recording — the
+    # two recorders are bit-identical, see tests/test_store.py)
+    w_ref = None
+    if variant != "resident":
+        ref_hist = hist
+        if tier != "stacked":
+            _, ref_hist = sgd_train_with_cache(obj, p0, ds, meta,
+                                               tier="stacked")
+        w_ref, _ = deltagrad_retrain(obj, ref_hist, ds, changed, cfg)
+
+    run = lambda: deltagrad_retrain(obj, hist, ds, changed, cfg,
+                                    store=store)
+    w, st = run()  # warm-up (trace + compile)
+    walls = []
+    for _ in range(args.reps):
+        t0 = time.perf_counter()
+        w, st = run()
+        jax.block_until_ready(w)
+        walls.append(time.perf_counter() - t0)
+    segs = max(1, st.extra.get("segments", 1))
+    out = {
+        "variant": variant,
+        "devices": args.devices if variant == "mesh" else 1,
+        "store": st.extra["store"],
+        "wall_s": float(np.median(walls)),
+        "per_segment_ms": float(np.median(walls)) / segs * 1e3,
+        "segments": segs,
+        "hbm_high_water_bytes": int(st.extra["hbm_high_water"]),
+        "windows": int(st.extra.get("windows", 0)),
+        "host_wait_s": float(st.extra.get("host_wait_s", 0.0)),
+        "approx_steps": st.approx_steps,
+        "explicit_steps": st.explicit_steps,
+    }
+    if w_ref is not None:
+        rel = float(tree_norm(tree_sub(w, w_ref))) \
+            / max(1e-12, float(tree_norm(w_ref)))
+        out["parity_vs_resident"] = rel
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--deletes", type=int, default=8)
+    ap.add_argument("--period", type=int, default=5)
+    ap.add_argument("--burn-in", type=int, default=10)
+    ap.add_argument("--window", type=int, default=16)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes (CI)")
+    ap.add_argument("--out", default="BENCH_shard.json")
+    ap.add_argument("--role", default="main", choices=("main", "variant"),
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--variant", default="", help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.n, args.steps, args.reps = 800, 48, 2
+
+    if args.role == "variant":
+        # child process: one variant, JSON on the last stdout line
+        print(json.dumps(run_variant(args, args.variant)))
+        return
+
+    flags = [f"--{k.replace('_', '-')}={v}" for k, v in vars(args).items()
+             if k not in ("role", "variant", "quick", "out")]
+    rows = []
+    for variant in ("resident", "streamed", "mesh"):
+        # every variant runs in its own subprocess so the mesh one can
+        # force the host-platform device count before jax initializes
+        env = dict(os.environ, PYTHONPATH="src")
+        if variant == "mesh":
+            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                                " --xla_force_host_platform_device_count="
+                                f"{args.devices}").strip()
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--role", "variant",
+             "--variant", variant] + flags,
+            capture_output=True, text=True, env=env,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        if proc.returncode != 0:
+            print(proc.stdout)
+            print(proc.stderr, file=sys.stderr)
+            raise SystemExit(f"variant {variant} failed")
+        row = json.loads(proc.stdout.strip().splitlines()[-1])
+        rows.append(row)
+        par = row.get("parity_vs_resident")
+        print(f"{variant:9s} dev={row['devices']} "
+              f"wall {row['wall_s'] * 1e3:8.1f} ms  "
+              f"per-seg {row['per_segment_ms']:7.2f} ms  "
+              f"hbm {row['hbm_high_water_bytes'] / 1e6:8.3f} MB"
+              + (f"  parity {par:.2e}" if par is not None else ""))
+
+    base = next(r for r in rows if r["variant"] == "resident")
+    results = {
+        "config": {k: v for k, v in vars(args).items()
+                   if k not in ("role", "variant", "out")},
+        "variants": rows,
+        "hbm_reduction_mesh": base["hbm_high_water_bytes"]
+        / max(1, next(r["hbm_high_water_bytes"] for r in rows
+                      if r["variant"] == "mesh")),
+        "hbm_reduction_streamed": base["hbm_high_water_bytes"]
+        / max(1, next(r["hbm_high_water_bytes"] for r in rows
+                      if r["variant"] == "streamed")),
+    }
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -99,10 +99,11 @@ def sgd_train_with_cache(
     codec: str = "f32",
     spill_dir: Optional[str] = None,
     impl: str = "scan",
+    window: int = 0,
 ) -> Tuple[Any, TrainingHistory]:
     """Train w_t by plain SGD (the paper's optimizer), caching (w_t, g_t)."""
     return run_training(objective, params0, ds, meta, tier=tier, codec=codec,
-                        spill_dir=spill_dir, impl=impl)
+                        spill_dir=spill_dir, impl=impl, window=window)
 
 
 def baseline_retrain(
@@ -128,7 +129,13 @@ def deltagrad_retrain(
     cfg: DeltaGradConfig,
     mode: str = "delete",
     params0=None,
+    placement=None,
+    store=None,
 ) -> Tuple[Any, RetrainStats]:
-    """Algorithm 1 (GD + SGD unified; GD == SGD with batch_size >= n)."""
+    """Algorithm 1 (GD + SGD unified; GD == SGD with batch_size >= n).
+
+    `placement` (a `core.store.PlacementPolicy`) shards the replay across a
+    mesh; `store` reuses a prebuilt `core.store.HistoryStore` (and its
+    compiled-program cache) across calls."""
     return run_replay(objective, history, ds, changed_idx, cfg, mode=mode,
-                      params0=params0)
+                      params0=params0, placement=placement, store=store)

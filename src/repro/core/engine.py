@@ -60,9 +60,13 @@ Architecture (mapping to Wu et al., ICML 2020):
                          ``ref.py`` oracle (or the kernel's interpret mode)
                          on the same flattened operands.
 
-Execution backends: ``impl="scan"`` (this module's compiled path) and
-``impl="python"`` (the pre-refactor per-step loop, kept as the parity oracle
-and as the fallback for the offload history tiers).  Numerics and counters
+Where the history bytes live is `core.store`'s concern: stacked/device
+tiers replay fully resident (optionally sharded across a mesh, with the
+segment scans run under ``shard_map`` and per-example gradients
+psum-reduced), host/disk tiers stream double-buffered segment windows to
+the same compiled scans.  Execution backends: ``impl="scan"`` (this
+module's compiled path, all tiers) and ``impl="python"`` (the pre-refactor
+per-step loop, kept as the parity oracle).  Numerics and counters
 are identical between the two backends, guard ON or OFF.  The two
 divergences documented after the engine refactor are resolved: (1) a scanned
 segment that reports a guard fallback is re-run split at the first fallback
@@ -93,6 +97,8 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core.history import HistoryMeta, TrainingHistory
 from repro.core.lbfgs import LbfgsBuffer, lbfgs_hvp_stacked_pytree
+from repro.core.store import (HistoryStore, entry_at, make_psum_grad_fn,
+                              pad_schedule_batch)
 from repro.data.dataset import Dataset
 from repro.data.sampler import (ReplaySchedule, addition_mask,
                                 batch_indices, batch_indices_all,
@@ -117,6 +123,9 @@ class DeltaGradConfig:
     removal_pad: int = 0  # 0 → auto (next pow2 of max per-batch overlap)
     impl: str = "scan"  # "scan" (compiled engine) | "python" (legacy loop)
     fused: str = "auto"  # "auto" | "pallas" | "interpret" | "ref"
+    # steps per device-resident window when the history lives on an offload
+    # tier (served by core.store.SegmentStreamer); 0 → auto
+    stream_window: int = 0
 
     def is_explicit(self, t: int) -> bool:
         if t <= self.burn_in:
@@ -239,25 +248,48 @@ def _resolve_fused(fused: str) -> str:
     return fused
 
 
-def _flat_fused_update(params, g_t, bv, g_changed, lr, B, dB, sign: int,
-                       fused: str):
-    """Paper eq. (2)/(S7) on the FLATTENED parameter vector, through the
-    Pallas fused kernel (TPU), its interpret mode, or the jnp reference —
-    all three compute w - lr/(B - sign*dB) * (B*(g_t + Bv) - sign*dB*g_c)."""
+def _run_fused(w, g, b, c, lr, B, dB, s, fused: str):
     from repro.kernels.fused_update.ops import update as fused_op
     from repro.kernels.fused_update.ref import deltagrad_update_ref
 
+    if fused == "pallas":
+        return fused_op(w, g, b, c, lr, B, dB, s)
+    if fused == "interpret":
+        return fused_op(w, g, b, c, lr, B, dB, s, interpret=True)
+    return deltagrad_update_ref(w, g, b, c, lr, B, dB, s)
+
+
+def _flat_fused_update(params, g_t, bv, g_changed, lr, B, dB, sign: int,
+                       fused: str, axis: Optional[str] = None,
+                       n_shards: int = 1):
+    """Paper eq. (2)/(S7) on the FLATTENED parameter vector, through the
+    Pallas fused kernel (TPU), its interpret mode, or the jnp reference —
+    all three compute w - lr/(B - sign*dB) * (B*(g_t + Bv) - sign*dB*g_c).
+
+    Inside a shard_map body (`axis` set), the kernel is routed PER SHARD:
+    each mesh member along `axis` runs the fused op on its 1/n_shards tile
+    of the flattened vector and the tiles all-gather back — the update is
+    elementwise, so the split is exact."""
     w, unravel = ravel_pytree(params)
     g, _ = ravel_pytree(g_t)
     b, _ = ravel_pytree(bv)
     c, _ = ravel_pytree(g_changed)
     s = jnp.float32(sign)
-    if fused == "pallas":
-        out = fused_op(w, g, b, c, lr, B, dB, s)
-    elif fused == "interpret":
-        out = fused_op(w, g, b, c, lr, B, dB, s, interpret=True)
+    if axis is not None and n_shards > 1:
+        p = w.shape[0]
+        pp = -(-p // n_shards) * n_shards
+        ps = pp // n_shards
+        i = jax.lax.axis_index(axis)
+
+        def cut(x):
+            return jax.lax.dynamic_slice(jnp.pad(x, (0, pp - p)),
+                                         (i * ps,), (ps,))
+
+        out = _run_fused(cut(w), cut(g), cut(b), cut(c), lr, B, dB, s,
+                         fused)
+        out = jax.lax.all_gather(out, axis, axis=0, tiled=True)[:p]
     else:
-        out = deltagrad_update_ref(w, g, b, c, lr, B, dB, s)
+        out = _run_fused(w, g, b, c, lr, B, dB, s, fused)
     return unravel(out)
 
 
@@ -332,8 +364,8 @@ def _train_scan(params0, vel0, cols, idx, lr, w_ones, mom, *, grad_fn,
             new_p, new_vel = _sgd_math(params, g, lr_t), vel
         return (new_p, new_vel), (params, g)
 
-    (pT, _), (Ws, Gs) = jax.lax.scan(body, (params0, vel0), (idx, lr))
-    return pT, Ws, Gs
+    (pT, velT), (Ws, Gs) = jax.lax.scan(body, (params0, vel0), (idx, lr))
+    return pT, velT, Ws, Gs
 
 
 def run_training(
@@ -345,18 +377,20 @@ def run_training(
     codec: str = "f32",
     spill_dir: Optional[str] = None,
     impl: str = "scan",
+    window: int = 0,
 ) -> Tuple[Any, TrainingHistory]:
-    """Train w_t by plain SGD (the paper's optimizer), caching (w_t, g_t)."""
+    """Train w_t by plain SGD (the paper's optimizer), caching (w_t, g_t).
+
+    ``window`` bounds the recorder's device high-water on offload tiers
+    (steps scanned per spill; 0 → the same auto default
+    `core.store.SegmentStreamer` uses on the read path)."""
     grad_fn = objective.make_grad_fn()
     momentum = bool(meta.momentum)
     vel = _tree_zeros(params0) if momentum else None
     B = min(meta.batch_size, meta.n)
     history = TrainingHistory(meta, tier=tier, codec=codec, spill_dir=spill_dir)
 
-    # host/disk tiers exist to keep the full path OUT of device memory, so
-    # they record per-entry; the scan recorder would materialize all T
-    # entries on device first.
-    if impl == "python" or tier in ("host", "disk"):
+    if impl == "python":
         ones = np.ones(B, dtype=np.float32)
         params = params0
         for t in range(meta.steps):
@@ -375,10 +409,35 @@ def run_training(
     idx_all = batch_indices_all(meta.seed, meta.steps, meta.n, meta.batch_size)
     lrs = np.asarray([meta.lr_at(t) for t in range(meta.steps)], np.float32)
     cols = ds.device_columns()
-    params, Ws, Gs = _train_scan(
-        params0, vel, cols, jnp.asarray(idx_all, jnp.int32),
-        jnp.asarray(lrs), jnp.ones((B,), jnp.float32),
-        jnp.float32(meta.momentum), grad_fn=grad_fn, momentum=momentum)
+    idx_dev = jnp.asarray(idx_all, jnp.int32)
+    lr_dev = jnp.asarray(lrs)
+    ones = jnp.ones((B,), jnp.float32)
+    mom = jnp.float32(meta.momentum)
+
+    if tier in ("host", "disk"):
+        # offload tiers keep the full path OUT of device memory, but the
+        # recorder still runs compiled: scan one WINDOW of steps at a
+        # time and spill each window's (Ws, Gs) through the codec — the
+        # device never holds more than one window of the path (the read
+        # path mirrors this via core.store.SegmentStreamer)
+        from repro.core.store import auto_window
+        L = auto_window(meta.steps, window)
+        params = params0
+        for a in range(0, meta.steps, L):
+            b = min(meta.steps, a + L)
+            params, vel, Ws, Gs = _train_scan(
+                params, vel, cols, idx_dev[a:b], lr_dev[a:b], ones, mom,
+                grad_fn=grad_fn, momentum=momentum)
+            host_w, host_g = jax.device_get((Ws, Gs))
+            for i in range(b - a):
+                history.append(jax.tree.map(lambda x: x[i], host_w),
+                               jax.tree.map(lambda x: x[i], host_g))
+        history.finalize(params)
+        return params, history
+
+    params, _, Ws, Gs = _train_scan(
+        params0, vel, cols, idx_dev, lr_dev, ones, mom, grad_fn=grad_fn,
+        momentum=momentum)
     history.set_stacked(Ws, Gs, final_params=params)
     return params, history
 
@@ -486,25 +545,32 @@ def run_baseline(
 # --------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum",
-                                   "fused", "span"))
-def _replay_segment(params, vel, t0, W, G, cols, sd: DeviceSchedule, dWs, dGs,
-                    B, clip, mom, *, grad_fn, sign: int, momentum: bool,
-                    fused: str, span: int):
+def _replay_segment_impl(params, vel, t0, off, W, G, cols,
+                         sd: DeviceSchedule, dWs, dGs, B, clip, mom, *,
+                         grad_fn, sign: int, momentum: bool, fused: str,
+                         span: int, gather=None, axis=None,
+                         n_shards: int = 1):
     """One approx segment [t0, t0+span) as a single scan.
 
-    Per step: dynamic-slice (w_t, g_t) out of the stacked history, gradient
-    on the <= R changed rows only, compact L-BFGS correction, fused update.
+    Per step: dynamic-slice (w_t, g_t) out of the stacked history WINDOW
+    (leaves indexed ``t - off``; ``off`` is 0 for a fully resident path and
+    the window start for a streamed one — see `core.store`), gradient on
+    the <= R changed rows only, compact L-BFGS correction, fused update.
     The Algorithm-4 guard verdict is DETECTION-only here: the stacked `oks`
     output flags failing steps, and the caller re-runs the segment split at
     the first failure so that step executes as a host explicit step (which
     admits its L-BFGS pair — see `run_replay`).  Steps after a failed guard
-    may therefore carry garbage; the caller discards them."""
+    may therefore carry garbage; the caller discards them.
+
+    Under `core.store.ShardedReplay` this same body runs inside shard_map:
+    `grad_fn` is the psum-reducing variant (the schedule arrives
+    batch-sharded), `gather` all-gathers sharded history leaves one step
+    at a time, and (`axis`, `n_shards`) route the fused kernel per shard."""
 
     def body(carry, t):
         params, vel = carry
-        w_t = jax.tree.map(lambda x: x[t], W)
-        g_t = jax.tree.map(lambda x: x[t], G)
+        w_t = entry_at(W, t, off, gather)
+        g_t = entry_at(G, t, off, gather)
         lr, dB, kept = sd.lr[t], sd.dB[t], sd.kept[t]
         has = (dB > 0).astype(jnp.float32)
         g_changed = jax.tree.map(
@@ -520,7 +586,8 @@ def _replay_segment(params, vel, t0, W, G, cols, sd: DeviceSchedule, dWs, dGs,
             new_p, new_vel = _momentum_math(params, vel, g_est, lr, mom)
         else:
             new_p = _flat_fused_update(params, g_t, bv, g_changed, lr, B, dB,
-                                       sign, fused)
+                                       sign, fused, axis=axis,
+                                       n_shards=n_shards)
             ok = jnp.logical_and(tree_all_finite(new_p), guard_ok)
             new_vel = vel
 
@@ -534,6 +601,11 @@ def _replay_segment(params, vel, t0, W, G, cols, sd: DeviceSchedule, dWs, dGs,
     return params, vel, oks
 
 
+_replay_segment = partial(jax.jit, static_argnames=(
+    "grad_fn", "sign", "momentum", "fused", "span", "gather", "axis",
+    "n_shards"))(_replay_segment_impl)
+
+
 def run_replay(
     objective,
     history: TrainingHistory,
@@ -542,18 +614,23 @@ def run_replay(
     cfg: DeltaGradConfig,
     mode: str = "delete",
     params0=None,
+    placement=None,
+    store: Optional[HistoryStore] = None,
 ) -> Tuple[Any, RetrainStats]:
-    """Algorithm 1 (GD + SGD unified; GD == SGD with batch_size >= n)."""
+    """Algorithm 1 (GD + SGD unified; GD == SGD with batch_size >= n).
+
+    Where the history bytes live is `core.store.HistoryStore`'s problem:
+    stacked/device tiers replay fully resident (optionally mesh-sharded —
+    pass a `PlacementPolicy` or a prebuilt store), host/disk tiers stream
+    device-resident segment windows with prefetch.  Only
+    ``cfg.impl="python"`` still selects the per-step oracle loop."""
     assert mode in ("delete", "add")
-    impl = cfg.impl
-    if impl == "scan" and history.tier in ("host", "disk"):
-        # the offload tiers promise the cache does NOT live on device;
-        # stacking it there for the scan would defeat them (ROADMAP: stream
-        # segments host->device instead)
-        impl = "python"
-    if impl == "python":
+    if cfg.impl == "python":
         return _run_replay_python(objective, history, ds, changed_idx, cfg,
                                   mode, params0)
+    if store is None:
+        store = HistoryStore.create(history, placement=placement,
+                                    window=cfg.stream_window)
 
     meta = history.meta
     changed_idx = np.asarray(changed_idx, dtype=np.int64)
@@ -564,14 +641,21 @@ def run_replay(
     sign = 1 if mode == "delete" else -1
     fused = _resolve_fused(cfg.fused)
     r_pad = cfg.removal_pad or _next_pow2(max(1, min(r, B)))
+    runner = store.sharded_replay()
 
     t_start = time.perf_counter()
     sched = build_schedule(meta.seed, meta.steps, meta.n, meta.batch_size,
                            changed_idx, mode, r_pad, meta.lr_at)
     plan = build_plan(cfg, sched)
     sd = to_device(sched)
+    if runner is not None:
+        sd = pad_schedule_batch(sd, runner.placement.data_size)
+        seg_grad_fn = make_psum_grad_fn(objective,
+                                        runner.placement.data_axis)
+        gather = runner.gather_info()
+        axis = runner.placement.data_axis
+        n_shards = runner.placement.data_size
     cols = ds.device_columns()
-    W, G = history.stacked_view()
     buffer = LbfgsBuffer(cfg.history_size, curvature_eps=cfg.curvature_eps)
 
     params = params0 if params0 is not None else history.params_at(0)
@@ -584,17 +668,27 @@ def run_replay(
     seg_oks: List[Tuple[int, int, Any]] = []  # (t0, t1, device flags)
 
     def scan_segment(p, v, a, b):
+        W, G, off = store.window(a, b)
+        if runner is not None:
+            fn = runner.wrap(
+                partial(_replay_segment_impl, grad_fn=seg_grad_fn,
+                        sign=sign, momentum=momentum, fused=fused,
+                        span=b - a, gather=gather, axis=axis,
+                        n_shards=n_shards),
+                key=("replay", b - a, sign, momentum, fused), n_outputs=3)
+            return fn(p, v, jnp.int32(a), jnp.int32(off), W, G, cols, sd,
+                      dWs, dGs, Bf, clip, mom)
         return _replay_segment(
-            p, v, jnp.int32(a), W, G, cols, sd, dWs, dGs, Bf, clip, mom,
-            grad_fn=grad_fn, sign=sign, momentum=momentum, fused=fused,
-            span=b - a)
+            p, v, jnp.int32(a), jnp.int32(off), W, G, cols, sd, dWs, dGs,
+            Bf, clip, mom, grad_fn=grad_fn, sign=sign, momentum=momentum,
+            fused=fused, span=b - a)
 
     t = 0
     while t < T:
         code = plan[t]
         if code == EXPLICIT or (code == APPROX and len(buffer) == 0):
             params, vel = _host_explicit_step(
-                grad_fn, buffer, params, vel, t, W, G, cols, sd,
+                grad_fn, buffer, params, vel, t, store, cols, sd,
                 float(sched.kept[t]), float(sched.dB[t]), Bf, mom, sign,
                 momentum, stats)
             t += 1
@@ -605,9 +699,12 @@ def run_replay(
             while t2 < T and plan[t2] != EXPLICIT:
                 t2 += 1
             while t < t2:
+                # a streamed store may cap the scan at its window boundary;
+                # resident stores always run the whole segment at once
+                b = store.span_end(t, t2)
                 dWs, dGs = buffer.stacked()
                 p_in, v_in = params, vel
-                params, vel, oks = scan_segment(p_in, v_in, t, t2)
+                params, vel, oks = scan_segment(p_in, v_in, t, b)
                 if cfg.guard:
                     # segment-splitting retry: one host sync per scanned
                     # segment (guard ON only); if any step tripped the
@@ -618,9 +715,9 @@ def run_replay(
                     # explicit period, so at most period-2 extra scan
                     # compilations exist per stream — the prefix re-run is
                     # the real cost when fallbacks are dense (ROADMAP: a
-                    # lax.while_loop formulation would keep this on device).
+                    # lax.while_loop formulation could keep this on device).
                     fell = np.flatnonzero(
-                        (plan[t:t2] != SKIP) & ~np.asarray(oks))
+                        (plan[t:b] != SKIP) & ~np.asarray(oks))
                     if fell.size:
                         tf = t + int(fell[0])
                         if tf > t:
@@ -631,13 +728,13 @@ def run_replay(
                             params, vel = p_in, v_in
                         stats.guard_fallbacks += 1
                         params, vel = _host_explicit_step(
-                            grad_fn, buffer, params, vel, tf, W, G, cols, sd,
-                            float(sched.kept[tf]), float(sched.dB[tf]), Bf,
-                            mom, sign, momentum, stats)
+                            grad_fn, buffer, params, vel, tf, store, cols,
+                            sd, float(sched.kept[tf]), float(sched.dB[tf]),
+                            Bf, mom, sign, momentum, stats)
                         t = tf + 1
                         continue
-                seg_oks.append((t, t2, oks))
-                t = t2
+                seg_oks.append((t, b, oks))
+                t = b
 
     # counters resolved once at the end — no per-step host syncs (with the
     # guard enabled, recorded segments are all-ok by construction: fallback
@@ -660,18 +757,25 @@ def run_replay(
     stats.extra["buffer_rejected"] = buffer.rejected
     stats.extra["impl"] = "scan"
     stats.extra["fused"] = fused
+    stats.extra["store"] = store.kind
+    stats.extra["hbm_high_water"] = store.hbm_high_water()
+    stats.extra["segments"] = max(1, len(seg_oks))
+    if getattr(store, "windows_fetched", 0):
+        stats.extra["windows"] = store.windows_fetched
+        stats.extra["host_wait_s"] = store.host_wait_s
+    if runner is not None:
+        stats.extra["mesh"] = runner.placement.describe()
     return params, stats
 
 
 @partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum"))
-def _explicit_step(params, vel, t, W, G, cols, sd: DeviceSchedule, B, mom, *,
-                   grad_fn, sign: int, momentum: bool):
-    """The whole explicit step as ONE program: history slice, kept + changed
-    gradients, pair construction (with the Algorithm-4 admission inner
-    products), and the parameter update.  The host only syncs the two
-    admission scalars — one round-trip per explicit step."""
-    w_t = jax.tree.map(lambda x: x[t], W)
-    g_t = jax.tree.map(lambda x: x[t], G)
+def _explicit_step(params, vel, t, w_t, g_t, cols, sd: DeviceSchedule, B,
+                   mom, *, grad_fn, sign: int, momentum: bool):
+    """The whole explicit step as ONE program: kept + changed gradients
+    against the store-served (w_t, g_t) history entry, pair construction
+    (with the Algorithm-4 admission inner products), and the parameter
+    update.  The host only syncs the two admission scalars — one
+    round-trip per explicit step."""
     k, dB, lr = sd.kept[t], sd.dB[t], sd.lr[t]
     g_kept = grad_fn(params, _gather(cols, sd.idx[t]), sd.kept_w[t])
     has = (dB > 0).astype(jnp.float32)
@@ -689,12 +793,13 @@ def _explicit_step(params, vel, t, W, G, cols, sd: DeviceSchedule, B, mom, *,
     return new_p, new_vel, dw, dg, admit
 
 
-def _host_explicit_step(grad_fn, buffer, params, vel, t, W, G, cols, sd,
+def _host_explicit_step(grad_fn, buffer, params, vel, t, store, cols, sd,
                         k, dB, Bf, mom, sign, momentum, stats):
     """One explicit step (host-driven: it mutates the L-BFGS buffer)."""
+    w_t, g_t = store.entry(t)
     params, vel, dw, dg, admit = _explicit_step(
-        params, vel, t, W, G, cols, sd, Bf, mom, grad_fn=grad_fn, sign=sign,
-        momentum=momentum)
+        params, vel, t, w_t, g_t, cols, sd, Bf, mom, grad_fn=grad_fn,
+        sign=sign, momentum=momentum)
     curv, ss = np.asarray(admit)
     if not buffer.add_pair(dw, dg, float(curv), float(ss)):
         stats.pairs_rejected += 1
@@ -883,20 +988,22 @@ def _online_explicit_math(params, vel, w_t, g_t, g_base, g_one, lr, kept, dB,
     return new_p, new_vel, g_cur, dw, dg, admit
 
 
-@partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum", "span"))
-def _online_segment(params, vel, t0, W, G, cols, sd: DeviceSchedule, dWs,
-                    dGs, clip, mom, *, grad_fn, sign: int, momentum: bool,
-                    span: int):
+def _online_segment_impl(params, vel, t0, off, W, G, cols,
+                         sd: DeviceSchedule, dWs, dGs, clip, mom, *,
+                         grad_fn, sign: int, momentum: bool, span: int,
+                         gather=None):
     """Online approx segment: like `_replay_segment` but with the per-step
     effective batch size (paper's n-k bookkeeping), the velocity carried in
     the scan state for heavy-ball histories, and the rewrite pairs
     (w_t <- w^I_t, g_t <- g^a_t, eq. (S62)) emitted as stacked scan outputs.
-    Guard verdicts are detection-only, as in `_replay_segment`."""
+    Guard verdicts are detection-only, as in `_replay_segment`.  History
+    leaves are indexed ``t - off`` (window offset for streamed stores) and
+    all-gathered per the `gather` plan when sharded across a mesh."""
 
     def body(carry, t):
         params, vel = carry
-        w_t = jax.tree.map(lambda x: x[t], W)
-        g_t = jax.tree.map(lambda x: x[t], G)
+        w_t = entry_at(W, t, off, gather)
+        g_t = entry_at(G, t, off, gather)
         lr, dB, kept = sd.lr[t], sd.dB[t], sd.kept[t]
         has = (dB > 0).astype(jnp.float32)
         g_one = jax.tree.map(
@@ -924,45 +1031,20 @@ def _online_segment(params, vel, t0, W, G, cols, sd: DeviceSchedule, dWs,
     return params, vel, w_writes, g_writes, oks
 
 
-@jax.jit
-def _write_segment(W, G, w_writes, g_writes, t0):
-    upd = partial(jax.lax.dynamic_update_slice_in_dim, axis=0)
-    return (jax.tree.map(lambda x, u: upd(x, u.astype(x.dtype), t0), W,
-                         w_writes),
-            jax.tree.map(lambda x, u: upd(x, u.astype(x.dtype), t0), G,
-                         g_writes))
-
-
-@partial(jax.jit, static_argnames=("kinds",))
-def _flush_chunks(W, G, t0, parts_w, parts_g, *, kinds):
-    """Assemble one contiguous run of rewrites — interleaved explicit-step
-    runs ("run": tuples of per-step pytrees, stacked here) and scanned
-    segments ("seg": already stacked) — and land it in ONE
-    `lax.dynamic_update_slice`.  `kinds` is static, so a steady request
-    stream compiles this exactly once."""
-
-    def lift(p, kind):
-        if kind == "run":
-            return jax.tree.map(lambda *xs: jnp.stack(xs), *p)
-        return p
-
-    ws = [lift(p, k) for p, k in zip(parts_w, kinds)]
-    gs = [lift(p, k) for p, k in zip(parts_g, kinds)]
-    w_cat = jax.tree.map(lambda *xs: jnp.concatenate(xs), *ws)
-    g_cat = jax.tree.map(lambda *xs: jnp.concatenate(xs), *gs)
-    return _write_segment(W, G, w_cat, g_cat, t0)
+_online_segment = partial(jax.jit, static_argnames=(
+    "grad_fn", "sign", "momentum", "span", "gather"))(_online_segment_impl)
 
 
 @partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum"))
-def _online_explicit_step(params, vel, t, W, G, cols, sd: DeviceSchedule,
-                          mom, *, grad_fn, sign: int, momentum: bool):
-    """Online explicit step fused into one program: history slice, kept and
-    changed-row gradients, the pre/post-request gradient pair, and the
-    update.  Only the two L-BFGS admission scalars return to the host; the
-    cache rewrite value `g_cur` is handed back so the caller can batch it
-    into the end-of-request flush instead of scattering per step."""
-    w_t = jax.tree.map(lambda x: x[t], W)
-    g_t = jax.tree.map(lambda x: x[t], G)
+def _online_explicit_step(params, vel, t, w_t, g_t, cols,
+                          sd: DeviceSchedule, mom, *, grad_fn, sign: int,
+                          momentum: bool):
+    """Online explicit step fused into one program: kept and changed-row
+    gradients against the store-served history entry, the pre/post-request
+    gradient pair, and the update.  Only the two L-BFGS admission scalars
+    return to the host; the cache rewrite value `g_cur` is handed back so
+    the caller can batch it into the end-of-request flush instead of
+    scattering per step."""
     kept, dB, lr = sd.kept[t], sd.dB[t], sd.lr[t]
     g_base = grad_fn(params, _gather(cols, sd.idx[t]), sd.kept_w[t])
     has = (dB > 0).astype(jnp.float32)
@@ -974,9 +1056,9 @@ def _online_explicit_step(params, vel, t, W, G, cols, sd: DeviceSchedule,
 
 
 @partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum"))
-def _online_explicit_fused(params, vel, t, W, G, cols, sd: DeviceSchedule,
-                           dWs, dGs, eps, mom, *, grad_fn, sign: int,
-                           momentum: bool):
+def _online_explicit_fused(params, vel, t, w_t, g_t, cols,
+                           sd: DeviceSchedule, dWs, dGs, eps, mom, *,
+                           grad_fn, sign: int, momentum: bool):
     """`_online_explicit_step` with the Algorithm-4 pair admission resolved
     ON DEVICE: once the ring buffer is full, admission is a `where`-gated
     shift-append of the stacked (m, ...) pair arrays — the same rule
@@ -984,7 +1066,7 @@ def _online_explicit_fused(params, vel, t, W, G, cols, sd: DeviceSchedule,
     without any round-trip, so a steady online request runs with ZERO
     mid-request host syncs (guard off)."""
     new_p, new_vel, g_cur, dw, dg, admit = _online_explicit_step(
-        params, vel, t, W, G, cols, sd, mom, grad_fn=grad_fn, sign=sign,
+        params, vel, t, w_t, g_t, cols, sd, mom, grad_fn=grad_fn, sign=sign,
         momentum=momentum)
     ok = jnp.logical_and(admit[1] > 0.0, admit[0] >= eps * admit[1])
     dWs = jax.tree.map(
@@ -1000,40 +1082,52 @@ def _online_explicit_fused(params, vel, t, W, G, cols, sd: DeviceSchedule,
 
 def run_online_request(
     grad_fn,
-    history: TrainingHistory,
-    W, G,
+    store: HistoryStore,
     cols,
     sched: ReplaySchedule,
     cfg: DeltaGradConfig,
     static_dev: Optional[Tuple[jax.Array, jax.Array]] = None,
-) -> Tuple[Any, Any, Any, RetrainStats]:
+    seg_grad_fn=None,
+    commit: bool = True,
+) -> Tuple[Any, RetrainStats]:
     """One online request — a single row or a coalesced GROUP of rows
     (delete or add — `sched.mode`, width `sched.r_pad`) — against the
-    current (stacked) cached path.  Returns (params, W', G', stats); the
-    caller flushes W'/G' into history.
+    current cached path, served through a `core.store.HistoryStore`
+    (resident — optionally mesh-sharded — or streamed from an offload
+    tier).  Returns (params, stats); rewrites are committed into the store
+    (and through it into the history) before returning.
 
     `sched` comes from `data.sampler.build_online_schedule` (the caller owns
     the stream state: liveness, added rows, join masks).  `static_dev` is
     the request-invariant (idx, lr) pair already on device — pass it so a
     stream uploads the (T, B [+pad]) schedule once, not per request.
+    `seg_grad_fn` (default `grad_fn`) is what scanned segments use — the
+    psum-reducing variant when the store is mesh-sharded.
 
     History rewrites are fully deferred: explicit steps hand their (w, g)
     rewrite back instead of scattering per step, segment outputs stay as
     stacked chunks, and each maximal contiguous region of rewrites lands in
-    ONE jitted assembly + `lax.dynamic_update_slice` at the end of the
-    request (sound because every step is visited once and reads only its
-    original entry).  Momentum-trained histories replay with the heavy-ball
-    velocity reconstructed from vel_0 = 0 in the scan carry; the cache keeps
-    storing plain gradients, so each request's reconstruction is
-    self-contained (Algorithm 3 with momentum)."""
-    meta = history.meta
+    ONE jitted assembly + scatter (resident) or codec write-back (streamed)
+    in `store.commit` (sound because every step is visited once and reads
+    only its original entry).  Momentum-trained histories replay with the
+    heavy-ball velocity reconstructed from vel_0 = 0 in the scan carry; the
+    cache keeps storing plain gradients, so each request's reconstruction
+    is self-contained (Algorithm 3 with momentum)."""
+    meta = store.meta
     op = sched.mode
     sign = 1 if op == "delete" else -1
     momentum = bool(meta.momentum)
     plan = build_plan(cfg, sched, online=True)
     sd = to_device(sched, *(static_dev or (None, None)))
+    runner = store.sharded_replay()
+    gather = None
+    if runner is not None:
+        sd = pad_schedule_batch(sd, runner.placement.data_size)
+        gather = runner.gather_info()
+    if seg_grad_fn is None:
+        seg_grad_fn = grad_fn
     buffer = LbfgsBuffer(cfg.history_size, curvature_eps=cfg.curvature_eps)
-    params = jax.tree.map(lambda x: x[0], W)  # w_0 is never rewritten
+    params = store.params0()  # w_0 is never rewritten
     vel = _tree_zeros(params) if momentum else None
     clip = jnp.float32(cfg.guard_norm_clip)
     mom = jnp.float32(meta.momentum)
@@ -1046,7 +1140,7 @@ def run_online_request(
     # to land in (W, G) before the request completes: rewrites accumulate as
     # contiguous chunks — explicit-step runs and scanned-segment outputs —
     # and ONE jitted assembly per contiguous region scatters them all
-    # (`_flush_chunks`; steady streams compile it once).
+    # (`store.commit`; steady streams compile it once).
     regions: List[Tuple[int, List[str], List, List]] = []
     write_end = -1
 
@@ -1091,8 +1185,9 @@ def run_online_request(
         admits: List[Any] = []
         for tt in range(t, r2):
             p_in = params
+            w_t, g_t = store.entry(tt)
             params, vel, g_cur, dw, dg, admit = _online_explicit_step(
-                params, vel, tt, W, G, cols, sd, mom, grad_fn=grad_fn,
+                params, vel, tt, w_t, g_t, cols, sd, mom, grad_fn=grad_fn,
                 sign=sign, momentum=momentum)
             note_single(tt, p_in, g_cur)
             pairs.append((dw, dg))
@@ -1112,8 +1207,9 @@ def run_online_request(
         else:
             for tt in range(t, r2):
                 p_in = params
+                w_t, g_t = store.entry(tt)
                 params, vel, g_cur, dWs, dGs = _online_explicit_fused(
-                    params, vel, tt, W, G, cols, sd, dWs, dGs, eps, mom,
+                    params, vel, tt, w_t, g_t, cols, sd, dWs, dGs, eps, mom,
                     grad_fn=grad_fn, sign=sign, momentum=momentum)
                 note_single(tt, p_in, g_cur)
         stats.grad_examples += int(
@@ -1138,13 +1234,28 @@ def run_online_request(
             t2 = t
             while t2 < T and plan[t2] != EXPLICIT:
                 t2 += 1
+
+            def scan_segment(p, v, a, b, pW, pG):
+                Wd, Gd, off = store.window(a, b)
+                if runner is not None:
+                    fn = runner.wrap(
+                        partial(_online_segment_impl, grad_fn=seg_grad_fn,
+                                sign=sign, momentum=momentum, span=b - a,
+                                gather=gather),
+                        key=("online", b - a, sign, momentum), n_outputs=5)
+                    return fn(p, v, jnp.int32(a), jnp.int32(off), Wd, Gd,
+                              cols, sd, pW, pG, clip, mom)
+                return _online_segment(
+                    p, v, jnp.int32(a), jnp.int32(off), Wd, Gd, cols, sd,
+                    pW, pG, clip, mom, grad_fn=seg_grad_fn, sign=sign,
+                    momentum=momentum, span=b - a)
+
             while t < t2:
+                b = store.span_end(t, t2)
                 pW, pG = (dWs, dGs) if dWs is not None else buffer.stacked()
                 p_in, v_in = params, vel
-                params, vel, w_wr, g_wr, oks = _online_segment(
-                    p_in, v_in, jnp.int32(t), W, G, cols, sd, pW, pG, clip,
-                    mom, grad_fn=grad_fn, sign=sign, momentum=momentum,
-                    span=t2 - t)
+                params, vel, w_wr, g_wr, oks = scan_segment(
+                    p_in, v_in, t, b, pW, pG)
                 if cfg.guard:
                     # segment-splitting retry (see run_replay): the tripped
                     # step becomes an explicit step that admits its pair and
@@ -1152,14 +1263,12 @@ def run_online_request(
                     # segment's outputs are never noted, so they are simply
                     # dropped from the flush.
                     fell = np.flatnonzero(
-                        (plan[t:t2] != SKIP) & ~np.asarray(oks))
+                        (plan[t:b] != SKIP) & ~np.asarray(oks))
                     if fell.size:
                         tf = t + int(fell[0])
                         if tf > t:
-                            params, vel, w_wr, g_wr, oks_p = _online_segment(
-                                p_in, v_in, jnp.int32(t), W, G, cols, sd,
-                                pW, pG, clip, mom, grad_fn=grad_fn,
-                                sign=sign, momentum=momentum, span=tf - t)
+                            params, vel, w_wr, g_wr, oks_p = scan_segment(
+                                p_in, v_in, t, tf, pW, pG)
                             note_seg(t, tf - t, w_wr, g_wr)
                             seg_oks.append((t, tf, oks_p))
                         else:
@@ -1168,16 +1277,12 @@ def run_online_request(
                         params, vel = do_explicit(params, vel, tf, tf + 1)
                         t = tf + 1
                         continue
-                note_seg(t, t2 - t, w_wr, g_wr)
-                seg_oks.append((t, t2, oks))
-                t = t2
+                note_seg(t, b - t, w_wr, g_wr)
+                seg_oks.append((t, b, oks))
+                t = b
 
-    for t0_, kinds, pw, pg in regions:
-        W, G = _flush_chunks(
-            W, G, jnp.int32(t0_),
-            tuple(tuple(p) if isinstance(p, list) else p for p in pw),
-            tuple(tuple(p) if isinstance(p, list) else p for p in pg),
-            kinds=tuple(kinds))
+    if commit:
+        store.commit(regions, final_params=params)
 
     for t0_, t1_, oks in seg_oks:
         nonskip = plan[t0_:t1_] != SKIP
@@ -1192,6 +1297,12 @@ def run_online_request(
     if op == "add":
         base = base + sched.dB.astype(np.int64)
     stats.grad_examples_baseline = int(base.sum())
+    stats.extra["store"] = store.kind
+    stats.extra["hbm_high_water"] = store.hbm_high_water()
+    if getattr(store, "windows_fetched", 0):
+        stats.extra["windows"] = store.windows_fetched
+    if runner is not None:
+        stats.extra["mesh"] = runner.placement.describe()
     # the end-of-request pair ring, for session snapshots (the ring is
     # rebuilt from the rewritten path on every request, so this is state
     # a snapshot records rather than state the next request consumes);
@@ -1200,4 +1311,4 @@ def run_online_request(
         stats.extra["lbfgs_ring"] = (dWs, dGs)
     elif len(buffer):
         stats.extra["lbfgs_ring"] = buffer.stacked()
-    return params, W, G, stats
+    return params, stats

@@ -27,6 +27,41 @@ Optional compression codecs trade cache size for a tiny, quantifiable
 perturbation of the cached path (bf16: 2x; int8 + per-leaf scale: ~4x) —
 DeltaGrad's correction is first-order in the cache error, and the
 ``bench_hyperparams`` benchmark measures the effect.
+
+Choosing a tier — the HBM math
+------------------------------
+
+The cache stores TWO pytrees per step (w_t and g_t), so with ``P`` model
+bytes (f32 params) and ``T`` recorded steps:
+
+  =========  =======================  ==================================
+  tier       device bytes             when to pick it
+  =========  =======================  ==================================
+  stacked    ``2*T*P``                default — replay runs fastest; fits
+                                      whenever 2*T*P is small next to HBM
+                                      (1k steps of a 10M-param model =
+                                      80 GB… too big; of a 100k-param
+                                      model = 800 MB… fine)
+  stacked    ``2*T*P / mesh``         same, placed on a mesh via
+  + mesh                              `core.store.PlacementPolicy`: each
+                                      device keeps 1/mesh of every sharded
+                                      leaf, gathered one step at a time
+  device     ``2*T*P``                per-entry arrays; only when entries
+                                      must keep a custom per-leaf sharding
+  host       ``~2*L*P`` (window)      paper's choice — frees HBM; served
+                                      to the compiled scan in ``L``-step
+                                      double-buffered windows by
+                                      `core.store.SegmentStreamer`
+                                      (host RAM pays ``2*T*P / ratio``,
+                                      codec ratio 1/2/4 for f32/bf16/int8)
+  disk       ``~2*L*P`` (window)      longest runs; host RAM ~0, entries
+                                      spill to ``spill_dir`` .npz
+                                      (``spill_dir="auto"`` → a fresh
+                                      tempdir, removed with the process)
+  =========  =======================  ==================================
+
+Codecs apply to host/disk (re-encoded per entry); ``stacked`` rejects
+lossy codecs by construction (it stores what the engine produced).
 """
 
 from __future__ import annotations
@@ -54,6 +89,12 @@ class Codec:
     def decode(self, stored):
         return jax.tree.map(jnp.asarray, stored)
 
+    def decode_stacked(self, stored):
+        """Decode a WINDOW of encoded entries stacked along a leading axis
+        (one upload per window — `core.store.SegmentStreamer`'s read path).
+        Must agree elementwise with per-entry `decode`."""
+        return jax.tree.map(jnp.asarray, stored)
+
 
 class F32Codec(Codec):
     name = "f32"
@@ -68,6 +109,10 @@ class BF16Codec(Codec):
 
     def decode(self, stored):
         return jax.tree.map(lambda x: jnp.asarray(x, dtype=jnp.float32), stored)
+
+    def decode_stacked(self, stored):
+        return jax.tree.map(lambda x: jnp.asarray(x, dtype=jnp.float32),
+                            stored)
 
 
 class Int8Codec(Codec):
@@ -92,6 +137,18 @@ class Int8Codec(Codec):
             return jnp.asarray(d["q"], dtype=jnp.float32) * d["scale"]
 
         return jax.tree.map(dec, stored, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+    def decode_stacked(self, stored):
+        """Stacked window form: q is (L, ...) int8, scale is (L,) — one
+        per-entry scale broadcast over the entry's dims."""
+
+        def dec(d):
+            q = jnp.asarray(d["q"], dtype=jnp.float32)
+            scale = jnp.asarray(d["scale"], dtype=jnp.float32)
+            return q * scale.reshape((-1,) + (1,) * (q.ndim - 1))
+
+        return jax.tree.map(dec, stored,
+                            is_leaf=lambda x: isinstance(x, dict) and "q" in x)
 
 
 CODECS = {"f32": F32Codec, "bf16": BF16Codec, "int8": Int8Codec}
@@ -138,17 +195,31 @@ class TrainingHistory:
         spill_dir: Optional[str] = None,
         lru_window: int = 64,
     ):
-        assert tier in ("stacked", "device", "host", "disk")
+        if tier not in ("stacked", "device", "host", "disk"):
+            raise ValueError(
+                f"unknown history tier {tier!r}; pick one of 'stacked' "
+                "(device-resident, fastest replay), 'device' (per-entry "
+                "arrays), 'host' (entries offloaded to host RAM, streamed "
+                "to the scan per segment), or 'disk' (.npz spill under "
+                "spill_dir) — see the tier-selection guide in "
+                "repro/core/history.py")
+        if codec not in CODECS:
+            raise ValueError(f"unknown codec {codec!r}; pick one of "
+                             f"{sorted(CODECS)}")
         # compression codecs apply where entries are re-encoded (host/disk);
         # stacked storage keeps what the engine produced, uncompressed
         # (the pre-existing device tier also ignores codecs, kept permissive
         # for backwards compatibility)
-        assert codec == "f32" or tier != "stacked", (
-            f"codec={codec!r} has no effect on tier='stacked'")
+        if codec != "f32" and tier == "stacked":
+            raise ValueError(
+                f"codec={codec!r} has no effect on tier='stacked': stacked "
+                "storage keeps the exact arrays the recording scan "
+                "produced.  Use tier='host' (or 'disk') to store the path "
+                f"{codec}-compressed — the SegmentStreamer still serves it "
+                "to the compiled scan — or drop the codec")
         self.meta = meta
         self.tier = tier
         self.codec: Codec = CODECS[codec]()
-        self.spill_dir = spill_dir
         self.lru_window = lru_window
         self._params: List[Any] = []
         self._grads: List[Any] = []
@@ -161,8 +232,22 @@ class TrainingHistory:
         self._pending_over: Dict[int, Tuple[Any, Any]] = {}
         self.final_params = None
         if tier == "disk":
-            assert spill_dir is not None, "disk tier requires spill_dir"
+            if spill_dir is None:
+                raise ValueError(
+                    "tier='disk' spills every history entry to .npz files "
+                    "and needs somewhere to put them: pass "
+                    "spill_dir=<directory> (created if missing), or "
+                    "spill_dir='auto' to opt into a fresh temporary "
+                    "directory (removed when the process exits)")
+            if spill_dir == "auto":
+                import atexit
+                import shutil
+                import tempfile
+                spill_dir = tempfile.mkdtemp(prefix="repro_history_")
+                atexit.register(shutil.rmtree, spill_dir,
+                                ignore_errors=True)
             os.makedirs(spill_dir, exist_ok=True)
+        self.spill_dir = spill_dir
 
     def __len__(self) -> int:
         return self._stacked_len + len(self._params)
@@ -345,6 +430,17 @@ class TrainingHistory:
             return self.codec.decode(self._params[t]), self.codec.decode(self._grads[t])
         p, g = self._load_disk(t)
         return self.codec.decode(p), self.codec.decode(g)
+
+    def encoded_entry(self, t: int):
+        """(w_t, g_t) in STORED form — no codec decode, no device upload.
+
+        Offload tiers only: this is `core.store.SegmentStreamer`'s read
+        path (it stacks a whole window of encoded entries, ships them in
+        one copy, and decodes on device)."""
+        assert self.tier in ("host", "disk"), self.tier
+        if self.tier == "host":
+            return self._params[t], self._grads[t]
+        return self._load_disk(t)
 
     def params_at(self, t: int):
         return self.entry(t)[0]

@@ -24,19 +24,22 @@ serves every request flavor — delete or add, single row or a COALESCED
 GROUP of rows (`request_group`, one replay for K requests — the
 session planner's batching primitive), SGD or momentum — through
 `core.engine.run_online_request`: approx segments execute under `lax.scan`
-against the stacked history, rewrites land in batched
-`lax.dynamic_update_slice` flushes, and the storage flush is an O(1)
-pointer swap after each request.  `impl="python"` and the offload tiers
-(host/disk) use `_online_request_python`, a per-step oracle driving the
-SAME precomputed `ReplaySchedule` through the same jitted step math, kept
-as the parity reference.
+against the history served by a `core.store.HistoryStore` — fully resident
+(stacked/device tiers, optionally mesh-sharded with psum-reduced
+per-example gradients) or streamed per segment window from the offload
+tiers (host/disk) — and rewrites land in batched flushes through
+`store.commit` (an O(1) pointer swap for resident storage, a codec
+write-back for streamed).  `impl="python"` selects
+`_online_request_python`, a per-step oracle driving the SAME precomputed
+`ReplaySchedule` through the same jitted step math, kept as the parity
+reference.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +52,8 @@ from repro.core.engine import (SKIP, EXPLICIT, _online_approx_step,
                                run_online_request)
 from repro.core.history import TrainingHistory
 from repro.core.lbfgs import LbfgsBuffer
+from repro.core.store import (HistoryStore, PlacementPolicy,
+                              make_psum_grad_fn)
 from repro.data.dataset import Dataset
 from repro.data.sampler import (ReplaySchedule, addition_mask_all,
                                 batch_indices_all, build_online_schedule)
@@ -93,7 +98,9 @@ class OnlineEngine:
 
     def __init__(self, objective: Objective, history: TrainingHistory,
                  ds: Dataset, cfg: DeltaGradConfig, warmup=False,
-                 add_capacity: int = 0):
+                 add_capacity: int = 0,
+                 placement: Optional[PlacementPolicy] = None,
+                 store: Optional[HistoryStore] = None):
         self.objective = objective
         self.history = history
         self.ds = ds
@@ -104,11 +111,10 @@ class OnlineEngine:
         self.add_capacity = int(add_capacity)
         self.grad_fn = objective.make_grad_fn()
         meta = history.meta
-        # offload tiers stay on the per-step oracle (stacking them on device
-        # would defeat the offload — ROADMAP: stream segments host->device)
-        self.impl = "python" if (cfg.impl == "python"
-                                 or history.tier in ("host", "disk")) \
-            else "scan"
+        # every tier runs the compiled path: offload tiers stream segment
+        # windows through core.store.SegmentStreamer; only an explicit
+        # impl="python" selects the per-step oracle
+        self.impl = "python" if cfg.impl == "python" else "scan"
         self.idx_all = batch_indices_all(meta.seed, meta.steps, meta.n,
                                          meta.batch_size)
         # Rows already deleted (by an earlier online stream over this same
@@ -137,8 +143,15 @@ class OnlineEngine:
         self._base_n = ds.n
         self._row_cap = ds.n + (_next_pow2(self.add_capacity)
                                 if self.add_capacity else 0)
+        self.store: Optional[HistoryStore] = None
+        self._seg_grad_fn = None
         if self.impl == "scan":
-            self.W, self.G = history.stacked_view()
+            self.store = store if store is not None else HistoryStore.create(
+                history, placement=placement, window=cfg.stream_window)
+            runner = self.store.sharded_replay()
+            if runner is not None:
+                self._seg_grad_fn = make_psum_grad_fn(
+                    objective, runner.placement.data_axis)
             self._lr_dev = jnp.asarray(
                 [meta.lr_at(t) for t in range(meta.steps)], jnp.float32)
             self._idx_dev = None  # uploaded lazily, re-used across requests
@@ -203,9 +216,10 @@ class OnlineEngine:
         request sign AND the pow2-bucketed group width, so `ops` entries
         are op names or ``(op, group_size)`` pairs).
 
-        `run_online_request` is purely functional over (W, G), so discarding
-        its outputs leaves no trace; the measured time is the first-request
-        compile cost reported as `OnlineStats.compile_time_s`."""
+        `run_online_request` with ``commit=False`` never lands its rewrites,
+        so discarding its outputs leaves no trace; the measured time is the
+        first-request compile cost reported as
+        `OnlineStats.compile_time_s`."""
         live_rows = np.flatnonzero(self.live[:self.history.meta.n])
         if live_rows.size == 0:
             return
@@ -217,10 +231,11 @@ class OnlineEngine:
             # the schedule only needs gatherable row ids + the next free
             # join-mask columns
             sched = self._schedule(op, [int(r) for r in live_rows[:k]])
-            out = run_online_request(self.grad_fn, self.history, self.W,
-                                     self.G, self._cols(), sched,
-                                     self.cfg,
-                                     static_dev=self._static_dev(sched))
+            out = run_online_request(self.grad_fn, self.store, self._cols(),
+                                     sched, self.cfg,
+                                     static_dev=self._static_dev(sched),
+                                     seg_grad_fn=self._seg_grad_fn,
+                                     commit=False)
             jax.block_until_ready(out[0])
         self.compile_time_s = time.perf_counter() - t0
 
@@ -262,15 +277,14 @@ class OnlineEngine:
         sched = self._schedule(op, rows)
 
         if self.impl == "scan":
-            params, self.W, self.G, rstat = run_online_request(
-                self.grad_fn, self.history, self.W, self.G,
-                self._cols(), sched, self.cfg,
-                static_dev=self._static_dev(sched))
-            # flush per request (O(1) pointer swap for stacked/device
-            # storage) so dataset bookkeeping and the rewritten cache never
-            # diverge even if a later request dies mid-stream
-            self.history.replace_from_stacked(self.W, self.G,
-                                              final_params=params)
+            # the store commits the rewrites into the history per request
+            # (O(1) pointer swap for resident storage, codec write-back for
+            # streamed tiers) so dataset bookkeeping and the rewritten
+            # cache never diverge even if a later request dies mid-stream
+            params, rstat = run_online_request(
+                self.grad_fn, self.store, self._cols(), sched, self.cfg,
+                static_dev=self._static_dev(sched),
+                seg_grad_fn=self._seg_grad_fn)
         else:
             params, rstat = _online_request_python(
                 self.grad_fn, self.history, self.ds, sched, self.cfg)
@@ -332,6 +346,7 @@ def online_deltagrad(
     cfg: DeltaGradConfig,
     mode: str = "delete",
     warmup: bool = False,
+    placement: Optional[PlacementPolicy] = None,
 ) -> Tuple[Any, OnlineStats]:
     """Process deletion/addition requests sequentially, rewriting history.
 
@@ -350,7 +365,7 @@ def online_deltagrad(
     n_adds = ops.count("add")
     engine = OnlineEngine(objective, history, ds, cfg,
                           warmup=sorted(set(ops)) if warmup else False,
-                          add_capacity=n_adds)
+                          add_capacity=n_adds, placement=placement)
     stats = OnlineStats(compile_time_s=engine.compile_time_s)
     t_start = time.perf_counter()
     for r in requests:

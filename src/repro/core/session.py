@@ -68,6 +68,7 @@ from repro.core.deltagrad import (DeltaGradConfig, Objective, RetrainStats,
                                   baseline_retrain, sgd_train_with_cache)
 from repro.core.history import HistoryMeta, TrainingHistory
 from repro.core.online import OnlineEngine, OnlineStats
+from repro.core.store import PlacementPolicy
 from repro.data.dataset import Dataset
 from repro.train import checkpoint as ckpt
 
@@ -85,9 +86,22 @@ class UnlearnerConfig:
     # or to "host" — the codec-honoring offload tier — when history_codec is
     # not "f32" (stacked storage is uncompressed by construction).  An
     # EXPLICIT "stacked" + lossy codec is rejected by TrainingHistory.
+    # host/disk tiers are served to the compiled scan by
+    # core.store.SegmentStreamer (device holds ~2 windows, never the path).
     history_tier: Optional[str] = None
     history_codec: str = "f32"
     spill_dir: Optional[str] = None
+    # mesh placement for the cached path + replay (core.store.PlacementPolicy
+    # — plain data, so save()/restore() round-trips it and the restoring
+    # host rebuilds the mesh lazily); None = single-device
+    placement: Optional["PlacementPolicy"] = None
+    # auto-flush policy: bound how long a submitted request can sit pending
+    # under continuous load.  max_pending: flush when that many requests are
+    # queued (the coalescing planner then serves them as one burst);
+    # max_delay_s: flush when the OLDEST pending request has waited this
+    # long (checked at submit and via session.poll()).  None disables.
+    max_pending: Optional[int] = None
+    max_delay_s: Optional[float] = None
 
 
 @dataclass
@@ -213,6 +227,11 @@ class UnlearnerSession:
         # this, the oldest resolve to a clear "evicted" error instead of
         # leaking device memory on fire-and-forget submitters
         self.max_responses = 256
+        # auto-flush bookkeeping (config.max_pending / max_delay_s)
+        self._oldest_pending_ts: Optional[float] = None
+        self.autoflush_count = 0
+        self.autoflush_reasons: Dict[str, int] = {"max_pending": 0,
+                                                  "max_delay_s": 0}
 
     # -- phase 1: training with path caching --------------------------------
 
@@ -241,6 +260,7 @@ class UnlearnerSession:
             tier=tier,
             codec=c.history_codec,
             spill_dir=c.spill_dir,
+            window=c.deltagrad.stream_window,
         )
         self._engine = None
         return self._trained_params
@@ -251,14 +271,26 @@ class UnlearnerSession:
 
     # -- engine / current model ---------------------------------------------
 
-    def engine(self) -> OnlineEngine:
+    def engine(self, placement: Optional[PlacementPolicy] = None
+               ) -> OnlineEngine:
         """The session's ONE online engine (created lazily; owns liveness,
-        added-row join columns, and the rewritten cached path)."""
+        added-row join columns, and the rewritten cached path — served
+        through a `core.store.HistoryStore`).
+
+        `placement` overrides ``config.placement`` for the engine's store
+        on FIRST creation (mesh-sharded resident replay); after that the
+        engine — and its placement — is fixed for the session's life."""
         self._require_fit()
         if self._engine is None:
             self._engine = OnlineEngine(
                 self.objective, self.history, self.dataset,
-                self.config.deltagrad)
+                self.config.deltagrad,
+                placement=placement or self.config.placement)
+        elif placement is not None:
+            raise RuntimeError(
+                "the session's engine already exists; placement must be "
+                "chosen before the first request (pass it to the first "
+                "engine() call or set config.placement)")
         return self._engine
 
     def warmup(self, specs=("delete",)) -> float:
@@ -332,8 +364,49 @@ class UnlearnerSession:
                                      "pending add)")
         ticket = self._tickets
         self._tickets += 1
+        if not self._pending:
+            self._oldest_pending_ts = time.monotonic()
         self._pending.append((ticket, request))
-        return RequestHandle(self, ticket, request)
+        handle = RequestHandle(self, ticket, request)
+        self._maybe_autoflush()
+        return handle
+
+    # -- deadline/size-triggered auto-flush ---------------------------------
+
+    def _maybe_autoflush(self) -> bool:
+        """Flush when the pending queue trips the configured size or
+        staleness bound.  Size is checked on every submit; the deadline is
+        checked at submit time AND via `poll()` (call it between arrivals
+        — e.g. from the serving loop's idle tick) so a lull after a burst
+        cannot park requests past ``max_delay_s``."""
+        c = self.config
+        reason = None
+        if (c.max_pending is not None and c.max_pending > 0
+                and len(self._pending) >= c.max_pending):
+            reason = "max_pending"
+        elif (c.max_delay_s is not None and self._pending
+              and time.monotonic() - self._oldest_pending_ts
+              >= c.max_delay_s):
+            reason = "max_delay_s"
+        if reason is None:
+            return False
+        self.autoflush_count += 1
+        self.autoflush_reasons[reason] += 1
+        self.flush()
+        return True
+
+    def poll(self) -> bool:
+        """Deadline tick for continuous-load serving: flushes (returning
+        True) iff pending work has outstayed ``config.max_delay_s``."""
+        return self._maybe_autoflush()
+
+    @property
+    def pending_age_s(self) -> float:
+        """Seconds the OLDEST pending request has been waiting (0 if none):
+        the staleness the auto-flush policy bounds."""
+        if not self._pending or self._oldest_pending_ts is None:
+            return 0.0
+        return time.monotonic() - self._oldest_pending_ts
 
     def delete(self, rows: Sequence[int], coalesce: bool = True
                ) -> RequestHandle:
@@ -373,6 +446,7 @@ class UnlearnerSession:
             return []
         engine = self.engine()
         pending, self._pending = self._pending, []
+        ts0, self._oldest_pending_ts = self._oldest_pending_ts, None
         # size the add-column block for the whole plan once so the padded
         # schedule width (and every compiled shape) stays put across it
         n_adds = sum(len(q.rows) for _, q in pending if q.op == "add")
@@ -397,6 +471,11 @@ class UnlearnerSession:
                     self._failed[ticket] = e
                 self._pending = [tr for g in groups[gi + 1:] for tr in g] \
                     + self._pending
+                if self._pending:
+                    # keep the ORIGINAL enqueue clock: requeued requests
+                    # were already waiting, and restarting the clock would
+                    # let them silently outstay max_delay_s
+                    self._oldest_pending_ts = ts0 or time.monotonic()
                 raise
             dispatch_s = time.perf_counter() - t0
             for ticket, req in group:

@@ -1,0 +1,618 @@
+"""HistoryStore — where history bytes live and how they reach the scan.
+
+DeltaGrad's replay is bottlenecked by the cached optimization path, not the
+model: the stacked tier burns ``O(T * |params|)`` HBM per host, and the
+paper-faithful offload tiers (host/disk) used to abandon the compiled
+``lax.scan`` engine for the per-step python loop.  This module owns the
+placement/transport layer between `TrainingHistory` and the engines:
+
+  * ``ResidentStore`` — stacked/device tiers.  The whole (T, ...) cache is
+    one device pytree; with a `PlacementPolicy` each leaf is placed by
+    `dist.sharding.stacked_spec_for_leaf` (time axis never sharded), so the
+    cache shards across the mesh exactly like the live parameters and the
+    per-host HBM share drops by the mesh factor.  The engines' segment
+    scans then run under ``shard_map`` (built here by `ShardedReplay`):
+    the minibatch schedule is batch-sharded over the mesh's data axis,
+    per-example gradients are ``psum``-reduced with the global weight sum
+    (`make_psum_grad_fn` — bit-compatible with the single-device weighted
+    mean up to reduction order), sharded history leaves are all-gathered
+    one step at a time inside the scan body, and the fused-update kernel
+    is routed per shard over the flattened parameter vector.
+
+  * ``SegmentStreamer`` — host/disk tiers.  History entries stay encoded on
+    host (or spilled .npz); the replay scan is served device-resident
+    WINDOWS of ``window`` steps, assembled + uploaded by a single worker
+    thread with double buffering: while the scan for window *s* computes,
+    the host stacks and ships window *s+1* (prefetch), so the compiled
+    path never blocks on the offload tier and device high-water stays at
+    ~2 windows instead of the whole path.  Online-request rewrites are
+    committed back through the codec per window.
+
+Both stores expose one engine-facing API: ``window(a, b) -> (W, G, off)``
+(leaves indexed ``W[t - off]`` inside the scan), ``entry(t)`` for host-driven
+explicit steps, and ``commit(...)`` for the online engine's end-of-request
+rewrite flush.  `core.engine` and `core.online` consume it; `core.session`
+chooses the policy.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.history import TrainingHistory
+
+
+def auto_window(steps: int, window: int = 0) -> int:
+    """Steps per device-resident window on the offload tiers — ONE knob
+    shared by the recorder (`core.engine.run_training`) and the read path
+    (`SegmentStreamer`): large enough to amortize dispatch, small enough
+    that two buffered windows stay far below the full path."""
+    return int(window) if window else max(1, min(steps, 32))
+
+
+def tree_nbytes(tree) -> int:
+    """Logical bytes of a pytree, without forcing any device transfer."""
+    return sum(int(np.prod(x.shape, dtype=np.int64))
+               * np.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))
+
+
+# --------------------------------------------------------------------------
+# Placement policy (picklable mesh descriptor — session save/restore needs
+# to round-trip it, and jax Mesh objects hold live Device handles)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class PlacementPolicy:
+    """Describes the replay mesh; builds the live `jax.sharding.Mesh` lazily.
+
+    ``mesh_shape``/``axis_names`` feed `jax.make_mesh`; ``data_axis`` names
+    the axis per-example gradients reduce over (batch sharding).  The
+    descriptor is plain data so `UnlearnerSession.save()` can round-trip it
+    through a checkpoint and rebuild the mesh on the restoring host."""
+
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...] = ("data", "model")
+    data_axis: str = "data"
+    model_cfg: Any = None  # optional ModelConfig for the MoE spec rules
+
+    def __post_init__(self):
+        self.mesh_shape = tuple(int(s) for s in self.mesh_shape)
+        self.axis_names = tuple(self.axis_names)
+        self._mesh = None
+
+    @classmethod
+    def from_mesh(cls, mesh, data_axis: str = "data",
+                  model_cfg=None) -> "PlacementPolicy":
+        pol = cls(mesh_shape=tuple(mesh.devices.shape),
+                  axis_names=tuple(mesh.axis_names), data_axis=data_axis,
+                  model_cfg=model_cfg)
+        pol._mesh = mesh
+        return pol
+
+    @classmethod
+    def local(cls, data: Optional[int] = None) -> "PlacementPolicy":
+        """1-D data mesh over the local devices (the CPU-mesh test shape)."""
+        n = jax.local_device_count() if data is None else int(data)
+        return cls(mesh_shape=(n,), axis_names=("data",))
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            self._mesh = jax.make_mesh(self.mesh_shape, self.axis_names)
+        return self._mesh
+
+    @property
+    def data_size(self) -> int:
+        if self.data_axis not in self.axis_names:
+            return 1
+        return self.mesh_shape[self.axis_names.index(self.data_axis)]
+
+    def plan(self):
+        from repro.dist.sharding import ShardingPlan
+        return ShardingPlan(mesh=self.mesh, cfg=self.model_cfg)
+
+    # -- pickling (drop the live mesh; rebuilt lazily on the other side) ----
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["_mesh"] = None
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+
+    def describe(self) -> Dict[str, Any]:
+        return {"mesh_shape": list(self.mesh_shape),
+                "axis_names": list(self.axis_names),
+                "data_axis": self.data_axis}
+
+    @classmethod
+    def from_describe(cls, d: Optional[Dict[str, Any]]
+                      ) -> Optional["PlacementPolicy"]:
+        if d is None:
+            return None
+        return cls(mesh_shape=tuple(d["mesh_shape"]),
+                   axis_names=tuple(d["axis_names"]),
+                   data_axis=d["data_axis"])
+
+
+# --------------------------------------------------------------------------
+# Data-parallel gradients: the weighted mean as a psum (shard_map bodies)
+# --------------------------------------------------------------------------
+
+
+def make_psum_grad_fn(objective, axis: str):
+    """`Objective.make_grad_fn` semantics under batch sharding.
+
+    Each mesh member evaluates the weighted-SUM gradient over its rows; the
+    sum and the weight total ``psum`` over `axis`, and the l2 term is added
+    once after the reduction — algebraically identical to the single-device
+    weighted mean ``(sum_i w_i grad_i) / max(sum_i w_i, 1) + l2*params``,
+    differing only in float reduction order.  Cached per (objective, axis)
+    so repeated segment calls reuse the traced closure."""
+    cache = getattr(objective, "_psum_grad_fns", None)
+    if cache is None:
+        cache = objective._psum_grad_fns = {}
+    if axis not in cache:
+        gsum = jax.grad(
+            lambda p, b, w: jnp.sum(objective.per_example_loss(p, b) * w))
+
+        def grad_fn(params, batch, weights):
+            g = gsum(params, batch, weights)
+            den = jnp.maximum(jax.lax.psum(jnp.sum(weights), axis), 1.0)
+            g = jax.tree.map(lambda x: jax.lax.psum(x, axis) / den, g)
+            if objective.l2:
+                g = jax.tree.map(lambda x, p: x + objective.l2 * p, g,
+                                 params)
+            return g
+
+        cache[axis] = grad_fn
+    return cache[axis]
+
+
+# --------------------------------------------------------------------------
+# HistoryStore
+# --------------------------------------------------------------------------
+
+
+class HistoryStore:
+    """Engine-facing storage/placement layer over one `TrainingHistory`."""
+
+    kind = "abstract"
+
+    @staticmethod
+    def create(history: TrainingHistory,
+               placement: Optional[PlacementPolicy] = None,
+               window: int = 0) -> "HistoryStore":
+        """Pick the store for the history's tier: stacked/device →
+        `ResidentStore` (optionally mesh-placed), host/disk →
+        `SegmentStreamer` (``window`` steps per device-resident segment,
+        0 → auto)."""
+        if history.tier in ("host", "disk"):
+            if placement is not None and placement.data_size > 1:
+                raise NotImplementedError(
+                    "sharded streaming (mesh placement over a host/disk-tier "
+                    "history) is not implemented yet — shard a "
+                    "stacked/device tier, or stream single-device "
+                    "(ROADMAP follow-on)")
+            return SegmentStreamer(history, window=window)
+        return ResidentStore(history, placement=placement)
+
+    # engine-facing API ------------------------------------------------------
+
+    @property
+    def meta(self):
+        return self.history.meta
+
+    @property
+    def T(self) -> int:
+        return self.history.meta.steps
+
+    def span_end(self, t: int, t2: int) -> int:
+        """Largest b <= t2 such that [t, b) fits one `window()` fetch."""
+        raise NotImplementedError
+
+    def window(self, a: int, b: int):
+        """(W, G, off) device pytrees covering steps [a, b); scan bodies
+        index ``W[t - off]``."""
+        raise NotImplementedError
+
+    def entry(self, t: int):
+        raise NotImplementedError
+
+    def params0(self):
+        return self.entry(0)[0]
+
+    def commit(self, regions, final_params) -> None:
+        """Land an online request's deferred rewrites (see
+        `core.engine.run_online_request` for the region format) and
+        finalize `final_params` into the history."""
+        raise NotImplementedError
+
+    def sharded_replay(self) -> Optional["ShardedReplay"]:
+        """The shard_map program builder when this store is mesh-placed."""
+        return None
+
+    def hbm_high_water(self) -> int:
+        """Max device-resident history bytes this store ever held per
+        device."""
+        raise NotImplementedError
+
+
+def _chunk_lift(p, kind):
+    """Stack an explicit-step run into a (len, ...) chunk; scanned segments
+    are already stacked."""
+    if kind == "run":
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *p)
+    return p
+
+
+@jax.jit
+def _scatter_chunk(W, G, t0, w_cat, g_cat):
+    upd = partial(jax.lax.dynamic_update_slice_in_dim, axis=0)
+    return (jax.tree.map(lambda x, u: upd(x, u.astype(x.dtype), t0), W, w_cat),
+            jax.tree.map(lambda x, u: upd(x, u.astype(x.dtype), t0), G, g_cat))
+
+
+@partial(jax.jit, static_argnames=("kinds",))
+def _assemble_chunk(parts_w, parts_g, *, kinds):
+    """One contiguous rewrite region as a single stacked (len, ...) pair."""
+    ws = [_chunk_lift(p, k) for p, k in zip(parts_w, kinds)]
+    gs = [_chunk_lift(p, k) for p, k in zip(parts_g, kinds)]
+    return (jax.tree.map(lambda *xs: jnp.concatenate(xs), *ws),
+            jax.tree.map(lambda *xs: jnp.concatenate(xs), *gs))
+
+
+def _freeze_parts(parts):
+    return tuple(tuple(p) if isinstance(p, list) else p for p in parts)
+
+
+@jax.jit
+def _entry_slices(W, G, t):
+    """(w_t, g_t) as ONE jitted program — a host-driven explicit step costs
+    one dispatch here, not 2 * n_leaves eager slice ops."""
+    return (jax.tree.map(lambda x: x[t], W),
+            jax.tree.map(lambda x: x[t], G))
+
+
+class ResidentStore(HistoryStore):
+    """Whole-path device residency (stacked/device tiers), optionally
+    sharded across a mesh by `dist.sharding.stacked_spec_for_leaf`."""
+
+    kind = "resident"
+
+    def __init__(self, history: TrainingHistory,
+                 placement: Optional[PlacementPolicy] = None):
+        self.history = history
+        self.placement = placement
+        W, G = history.stacked_view()
+        self._specs = None
+        self._flat_specs_w: Optional[List[Any]] = None
+        if placement is not None:
+            from repro.dist.sharding import history_shardings
+            plan = placement.plan()
+            shard_w = history_shardings(plan, W)
+            shard_g = history_shardings(plan, G)
+            W = jax.tree.map(jax.device_put, W, shard_w)
+            G = jax.tree.map(jax.device_put, G, shard_g)
+            self._specs = (jax.tree.map(lambda s: s.spec, shard_w),
+                           jax.tree.map(lambda s: s.spec, shard_g))
+            self._flat_specs_w = [s.spec for s in jax.tree.leaves(shard_w)]
+        self.W, self.G = W, G
+        self._sharded: Optional["ShardedReplay"] = None
+        self._hbm = self._per_device_bytes()
+
+    def _per_device_bytes(self) -> int:
+        """History bytes resident on ONE device — the number sharding is
+        supposed to shrink (nbytes / mesh factor for sharded leaves)."""
+        total = 0
+        for leaf in jax.tree.leaves((self.W, self.G)):
+            sh = getattr(leaf, "sharding", None)
+            shape = sh.shard_shape(leaf.shape) if sh is not None \
+                else leaf.shape
+            total += (int(np.prod(shape, dtype=np.int64))
+                      * np.dtype(leaf.dtype).itemsize)
+        return total
+
+    @property
+    def specs(self):
+        """Per-leaf (W, G) PartitionSpec trees when placed on a mesh."""
+        return self._specs
+
+    def span_end(self, t: int, t2: int) -> int:
+        return t2  # the whole path is resident; never split a segment
+
+    def window(self, a: int, b: int):
+        return self.W, self.G, 0
+
+    def entry(self, t: int):
+        return _entry_slices(self.W, self.G, t)
+
+    def commit(self, regions, final_params) -> None:
+        for t0, kinds, pw, pg in regions:
+            w_cat, g_cat = _assemble_chunk(_freeze_parts(pw),
+                                           _freeze_parts(pg),
+                                           kinds=tuple(kinds))
+            self.W, self.G = _scatter_chunk(self.W, self.G, jnp.int32(t0),
+                                            w_cat, g_cat)
+        # O(1) pointer swap for stacked/device storage
+        self.history.replace_from_stacked(self.W, self.G,
+                                          final_params=final_params)
+
+    def sharded_replay(self) -> Optional["ShardedReplay"]:
+        if self.placement is None:
+            return None
+        if self._sharded is None:
+            self._sharded = ShardedReplay(self)
+        return self._sharded
+
+    def hbm_high_water(self) -> int:
+        return self._hbm
+
+
+class SegmentStreamer(HistoryStore):
+    """Serve a host/disk-tier history to the compiled scan in device-resident
+    segment windows with double-buffered async host→device copies."""
+
+    kind = "streamed"
+    placement = None
+
+    def __init__(self, history: TrainingHistory, window: int = 0,
+                 prefetch: bool = True):
+        assert history.tier in ("host", "disk"), history.tier
+        self.history = history
+        self.window_len = auto_window(history.meta.steps, window)
+        self.prefetch = prefetch
+        self._pool = ThreadPoolExecutor(max_workers=1) if prefetch else None
+        self._buf: Dict[int, Tuple[Any, Any]] = {}
+        self._inflight: Dict[int, Future] = {}
+        self._hbm_now = 0
+        self._hbm_high = 0
+        self._enc_bytes = 0  # ENCODED bytes of the last staged window (the
+        # in-flight prefetch copy is pre-decode, so lossy codecs stage at
+        # 1/2 or 1/4 of the decoded f32 size)
+        self.windows_fetched = 0
+        self.prefetch_hits = 0
+        self.host_wait_s = 0.0
+
+    # -- window plumbing -----------------------------------------------------
+
+    def _wid(self, t: int) -> int:
+        return t // self.window_len
+
+    def _bounds(self, wid: int) -> Tuple[int, int]:
+        a = wid * self.window_len
+        return a, min(self.T, a + self.window_len)
+
+    def span_end(self, t: int, t2: int) -> int:
+        return min(t2, self._bounds(self._wid(t))[1])
+
+    def _stack_host(self, wid: int):
+        """Host side of a fetch: stack the window's ENCODED entries per leaf
+        and ship them with `jax.device_put` (async dispatch).  Runs on the
+        worker thread for prefetches; no tracing happens here."""
+        a, b = self._bounds(wid)
+        enc_p, enc_g = [], []
+        for t in range(a, b):
+            p, g = self.history.encoded_entry(t)
+            enc_p.append(p)
+            enc_g.append(g)
+        stack = lambda *xs: np.stack([np.asarray(x) for x in xs])
+        Wh = jax.tree.map(stack, *enc_p) if len(enc_p) > 1 else \
+            jax.tree.map(lambda x: np.asarray(x)[None], enc_p[0])
+        Gh = jax.tree.map(stack, *enc_g) if len(enc_g) > 1 else \
+            jax.tree.map(lambda x: np.asarray(x)[None], enc_g[0])
+        return jax.device_put((Wh, Gh))
+
+    def _decode(self, staged):
+        Wh, Gh = staged
+        codec = self.history.codec
+        return codec.decode_stacked(Wh), codec.decode_stacked(Gh)
+
+    def _fetch(self, wid: int):
+        if wid in self._buf:
+            return self._buf[wid]
+        fut = self._inflight.pop(wid, None)
+        if fut is not None:
+            t0 = time.perf_counter()
+            staged = fut.result()
+            self.host_wait_s += time.perf_counter() - t0
+            self.prefetch_hits += 1
+        else:
+            t0 = time.perf_counter()
+            staged = self._stack_host(wid)
+            self.host_wait_s += time.perf_counter() - t0
+        self._enc_bytes = tree_nbytes(staged)
+        W, G = self._decode(staged)
+        self._buf[wid] = (W, G)
+        self._hbm_now += tree_nbytes(W) + tree_nbytes(G)
+        self._hbm_high = max(self._hbm_high, self._hbm_now)
+        self.windows_fetched += 1
+        return W, G
+
+    def _evict_before(self, wid: int) -> None:
+        for old in [w for w in self._buf if w < wid]:
+            W, G = self._buf.pop(old)
+            self._hbm_now -= tree_nbytes(W) + tree_nbytes(G)
+        for old in [w for w in self._inflight if w < wid]:
+            self._inflight.pop(old)
+
+    def _prefetch(self, wid: int) -> None:
+        if (self._pool is None or wid in self._buf or wid in self._inflight
+                or wid * self.window_len >= self.T):
+            return
+        self._inflight[wid] = self._pool.submit(self._stack_host, wid)
+
+    def window(self, a: int, b: int):
+        wid = self._wid(a)
+        assert b <= self._bounds(wid)[1], (a, b, self.window_len)
+        self._evict_before(wid)
+        W, G = self._fetch(wid)
+        # double buffering: ship window s+1 while the scan for s computes
+        self._prefetch(wid + 1)
+        # the in-flight staged copy is device-resident too — that is the
+        # double-buffer cost the high-water must report (at its ENCODED
+        # size: decode happens on the consuming fetch)
+        self._hbm_high = max(self._hbm_high,
+                             self._hbm_now
+                             + len(self._inflight) * self._enc_bytes)
+        return W, G, wid * self.window_len
+
+    def entry(self, t: int):
+        wid = self._wid(t)
+        if wid in self._buf:
+            W, G = self._buf[wid]
+            return _entry_slices(W, G, t - wid * self.window_len)
+        return self.history.entry(t)
+
+    # -- online rewrite commit ----------------------------------------------
+
+    def commit(self, regions, final_params) -> None:
+        # drain in-flight prefetches first: a worker mid-read of the same
+        # entries we are about to overwrite is a read/write race on the
+        # disk tier's .npz files
+        for fut in self._inflight.values():
+            try:
+                fut.result()
+            except Exception:
+                pass  # a failed prefetch of soon-stale data is harmless
+        for t0, kinds, pw, pg in regions:
+            w_cat, g_cat = _assemble_chunk(_freeze_parts(pw),
+                                           _freeze_parts(pg),
+                                           kinds=tuple(kinds))
+            w_host = jax.device_get(w_cat)
+            g_host = jax.device_get(g_cat)
+            span = jax.tree.leaves(w_host)[0].shape[0]
+            for i in range(span):
+                self.history.overwrite(
+                    t0 + i, jax.tree.map(lambda x: x[i], w_host),
+                    jax.tree.map(lambda x: x[i], g_host))
+        self.history.finalize(final_params)
+        # buffered windows hold pre-request values — drop them
+        self._buf.clear()
+        self._inflight.clear()
+        self._hbm_now = 0
+
+    def hbm_high_water(self) -> int:
+        return self._hbm_high
+
+
+# --------------------------------------------------------------------------
+# Sharded replay: shard_map construction for the engines' segment scans
+# --------------------------------------------------------------------------
+
+
+class ShardedReplay:
+    """Builds (and caches) the shard_map-wrapped segment programs for a
+    `ResidentStore` placed on a mesh.
+
+    The engines hand their segment *impl* functions (plain, un-jitted,
+    with every static argument already bound) to `wrap`; the minibatch
+    schedule arrives batch-sharded over the data axis, parameters and
+    L-BFGS pairs replicate, and history leaves keep their storage
+    placement — sharded leaves are all-gathered ONE STEP at a time inside
+    the scan body (`gather_info`), so no device ever materializes the
+    whole stacked path."""
+
+    def __init__(self, store: ResidentStore):
+        assert store.placement is not None
+        self.store = store
+        self._cache: Dict[Any, Any] = {}
+
+    @property
+    def placement(self) -> PlacementPolicy:
+        return self.store.placement
+
+    def gather_info(self) -> Tuple[Tuple[Tuple[int, str], ...], ...]:
+        """Per-leaf ((dim, axis_name), ...) all-gather plan for one history
+        ENTRY (the per-step leaf, after the time axis is sliced away),
+        aligned with ``jax.tree.leaves(W)``; () means replicated."""
+        out = []
+        for spec in self.store._flat_specs_w:
+            gathers = []
+            for dim, ax in enumerate(tuple(spec)[1:]):  # drop time axis
+                if ax is None:
+                    continue
+                for name in ((ax,) if isinstance(ax, str) else tuple(ax)):
+                    gathers.append((dim, name))
+            out.append(tuple(gathers))
+        return tuple(out)
+
+    def _schedule_specs(self):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.engine import DeviceSchedule
+        d = self.placement.data_axis
+        return DeviceSchedule(idx=P(None, d), kept_w=P(None, d),
+                              changed_idx=P(None, d), changed_w=P(None, d),
+                              dB=P(), kept=P(), lr=P())
+
+    def wrap(self, impl_fn, key, n_outputs: int):
+        """shard_map + jit for ``impl_fn(params, vel, t0, off, W, G, cols,
+        sd, *rest)`` with `n_outputs` replicated outputs; cached by `key`
+        (span/sign/momentum/... — everything that changes the program)."""
+        if key in self._cache:
+            return self._cache[key]
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        specs_w, specs_g = self.store.specs
+        rep = P()
+        lead = (rep, rep, rep, rep, specs_w, specs_g, rep,
+                self._schedule_specs())
+        out_specs = (rep,) * n_outputs if n_outputs > 1 else rep
+        mesh = self.placement.mesh
+
+        def call(*args):
+            in_specs = lead + (rep,) * (len(args) - len(lead))
+            return shard_map(impl_fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)(*args)
+
+        jitted = jax.jit(call)
+        self._cache[key] = jitted
+        return jitted
+
+
+def entry_at(W, t, off, gather=None):
+    """Slice one step out of stacked history leaves, all-gathering sharded
+    leaves per the ShardedReplay gather plan (no-op when gather is None)."""
+    leaves, tdef = jax.tree.flatten(W)
+    if gather is None:
+        return jax.tree.unflatten(tdef, [x[t - off] for x in leaves])
+    out = []
+    for leaf, plan in zip(leaves, gather):
+        x = leaf[t - off]
+        for dim, ax in plan:
+            x = jax.lax.all_gather(x, ax, axis=dim, tiled=True)
+        out.append(x)
+    return jax.tree.unflatten(tdef, out)
+
+
+def pad_schedule_batch(sched_dev, multiple: int):
+    """Pad the device schedule's batch-shaped dims (axis 1) to a multiple of
+    the data-axis size with weight-0 rows, so batch sharding divides evenly.
+    Zero-weight rows gather row 0 and contribute nothing to any gradient."""
+    if multiple <= 1:
+        return sched_dev
+
+    def pad(x, fill=0):
+        b = x.shape[1]
+        want = -(-b // multiple) * multiple
+        if want == b:
+            return x
+        return jnp.pad(x, ((0, 0), (0, want - b)), constant_values=fill)
+
+    return sched_dev._replace(
+        idx=pad(sched_dev.idx), kept_w=pad(sched_dev.kept_w),
+        changed_idx=pad(sched_dev.changed_idx),
+        changed_w=pad(sched_dev.changed_w))

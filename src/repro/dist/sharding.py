@@ -114,6 +114,33 @@ def spec_for_leaf(plan: ShardingPlan, path: str, shape: Tuple[int, ...]) -> P:
     return done((None,) * len(dims))
 
 
+def stacked_spec_for_leaf(plan: ShardingPlan, path: str,
+                          shape: Tuple[int, ...]) -> P:
+    """PartitionSpec for a HISTORY leaf: a per-step parameter leaf stacked
+    along a leading time axis ``(T, ...)`` (core/history's stacked tier).
+
+    The TIME axis is never sharded — the replay scan iterates it step by
+    step, and splitting it would serialize every `lax.dynamic_slice` into a
+    cross-host fetch.  The per-step dims inherit the live parameter's
+    placement from `spec_for_leaf`, so the cached path shards exactly like
+    the model it caches and per-host HBM drops by the mesh factor."""
+    per_step = spec_for_leaf(plan, path, tuple(shape[1:]))
+    return P(None, *tuple(per_step))
+
+
+def history_shardings(plan: ShardingPlan, stacked_tree):
+    """NamedSharding pytree for a stacked (T, ...) history pytree."""
+    import jax
+    from jax.sharding import NamedSharding
+
+    def one(key_path, leaf):
+        spec = stacked_spec_for_leaf(plan, _path_str(key_path),
+                                     tuple(leaf.shape))
+        return NamedSharding(plan.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, stacked_tree)
+
+
 def batch_pspec(plan: ShardingPlan, shape: Tuple[int, ...]) -> P:
     """Inputs: batch-dim data parallelism when the global batch divides the
     data axis (batch-1 decode shapes replicate)."""

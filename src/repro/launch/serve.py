@@ -72,6 +72,14 @@ def unlearn_main(argv) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--burst", type=int, default=8,
                     help="K for the coalesced-vs-serial delete burst")
+    ap.add_argument("--max-pending", type=int, default=4,
+                    help="auto-flush: serve whenever this many requests are "
+                         "queued (0 disables the auto-flush section)")
+    ap.add_argument("--max-delay-ms", type=float, default=25.0,
+                    help="auto-flush: serve when the oldest pending request "
+                         "has waited this long (0 disables)")
+    ap.add_argument("--arrival-ms", type=float, default=2.0,
+                    help="inter-arrival gap for the auto-flush load loop")
     ap.add_argument("--bench-out", default="BENCH_serve.json",
                     help="machine-readable results path ('' disables)")
     args = ap.parse_args(argv)
@@ -191,6 +199,57 @@ def unlearn_main(argv) -> None:
               f"coalesced {t_coal / K * 1e3:.1f} ms/req "
               f"(x{t_serial / max(t_coal, 1e-9):.1f}); parity vs python "
               f"{parity:.2e}; serial-vs-coalesced dist {drift:.2e}")
+
+    # -- auto-flush under continuous load: submit WITHOUT forcing handles and
+    # let the max_pending/max_delay_s policy decide when to serve — the
+    # planner coalesces each flushed batch, and staleness (how long the
+    # oldest submit waited) stays bounded by the policy
+    if args.max_pending or args.max_delay_ms:
+        sess_f, ds_f = build_session()
+        sess_f.config.max_pending = args.max_pending or None
+        sess_f.config.max_delay_s = (args.max_delay_ms / 1e3
+                                     if args.max_delay_ms else None)
+        warm_k = [("delete", 1)]
+        if args.max_pending:
+            warm_k.append(("delete", args.max_pending))
+        sess_f.warmup(warm_k)
+        engine_f = sess_f.engine()
+        rng_f = np.random.default_rng(args.seed + 3)
+        staleness_ms = []
+        submitted: set = set()  # engine liveness lags until a flush lands
+        t0 = time.perf_counter()
+        for i in range(args.requests):
+            live = np.flatnonzero(engine_f.live[:args.n])
+            live = live[~np.isin(live, list(submitted))]
+            staleness_ms.append(sess_f.pending_age_s * 1e3)
+            row = int(rng_f.choice(live))
+            submitted.add(row)
+            sess_f.submit(op="delete", rows=[row])
+            if args.arrival_ms:
+                time.sleep(args.arrival_ms / 1e3)
+            staleness_ms.append(sess_f.pending_age_s * 1e3)
+            sess_f.poll()  # idle tick drives the deadline trigger
+        staleness_ms.append(sess_f.pending_age_s * 1e3)
+        sess_f.flush()  # drain the tail below the policy thresholds
+        jax.block_until_ready(sess_f.engine().params)
+        t_total = time.perf_counter() - t0
+        group_rows = [len(e["rows"]) for e in sess_f.log]
+        results["autoflush"] = {
+            "max_pending": args.max_pending,
+            "max_delay_ms": args.max_delay_ms,
+            "arrival_ms": args.arrival_ms,
+            "autoflushes": sess_f.autoflush_count,
+            "reasons": dict(sess_f.autoflush_reasons),
+            "max_staleness_ms": float(max(staleness_ms)),
+            "mean_group_rows": float(np.mean(group_rows)),
+            "wall_ms_per_req": t_total / args.requests * 1e3,
+        }
+        print(f"auto-flush: {sess_f.autoflush_count} policy flushes "
+              f"({sess_f.autoflush_reasons}), max staleness "
+              f"{max(staleness_ms):.1f} ms (bound "
+              f"{args.max_delay_ms:.0f} ms), mean coalesced group "
+              f"{np.mean(group_rows):.1f} rows, "
+              f"{t_total / args.requests * 1e3:.1f} ms/req")
 
     if args.bench_out:
         with open(args.bench_out, "w") as f:

@@ -1,0 +1,257 @@
+"""HistoryStore / SegmentStreamer: offload tiers on the compiled scan path.
+
+The contract under test: host/disk-tier histories are served to the SAME
+`lax.scan` engine as the stacked tier through device-resident segment
+windows (no python-loop fallback), with numerics identical to both the
+resident path and the per-step python oracle, bounded device high-water,
+and online rewrites committed back through the codec.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.deltagrad import (DeltaGradConfig, deltagrad_retrain,
+                                  sgd_train_with_cache)
+from repro.core.history import HistoryMeta, TrainingHistory
+from repro.core.online import online_deltagrad
+from repro.core.store import HistoryStore, SegmentStreamer, tree_nbytes
+from repro.data.synthetic import binary_classification
+from repro.models.simple import logreg_init, logreg_objective
+from repro.utils.tree import tree_norm, tree_sub
+
+TOL = 1.5e-7
+CFG = DeltaGradConfig(period=5, burn_in=10, history_size=2)
+META = dict(n=200, batch_size=64, seed=0, steps=30,
+            lr_schedule=((0, 0.2),), l2=1e-3)
+
+
+def _problem():
+    ds = binary_classification(n=META["n"], d=16, seed=0)
+    obj = logreg_objective(l2=META["l2"])
+    return ds, obj, HistoryMeta(**META), logreg_init(16, seed=1)
+
+
+def _dist(a, b):
+    return float(tree_norm(tree_sub(a, b)))
+
+
+class TestStreamedReplay:
+    def test_host_tier_runs_compiled_scan_not_python(self):
+        ds, obj, meta, p0 = _problem()
+        _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host")
+        w, st = deltagrad_retrain(obj, h, ds, np.arange(6), CFG)
+        assert st.extra["impl"] == "scan"
+        assert st.extra["store"] == "streamed"
+        assert st.extra["windows"] >= 1
+
+    @pytest.mark.parametrize("tier", ["host", "disk"])
+    def test_streamed_matches_resident_and_oracle(self, tier, tmp_path):
+        ds, obj, meta, p0 = _problem()
+        changed = np.arange(6)
+        _, h_res = sgd_train_with_cache(obj, p0, ds, meta, tier="stacked")
+        w_res, _ = deltagrad_retrain(obj, h_res, ds, changed, CFG)
+        _, h = sgd_train_with_cache(obj, p0, ds, meta, tier=tier,
+                                    spill_dir=str(tmp_path))
+        cfg = dataclasses.replace(CFG, stream_window=8)
+        w_str, st = deltagrad_retrain(obj, h, ds, changed, cfg)
+        assert st.extra["windows"] > 1  # actually split into windows
+        assert _dist(w_str, w_res) <= TOL
+        w_py, _ = deltagrad_retrain(obj, h, ds, changed,
+                                    dataclasses.replace(CFG, impl="python"))
+        assert _dist(w_str, w_py) <= TOL
+
+    def test_recording_scan_matches_python_recorder(self):
+        """Host-tier RECORD also runs compiled (windowed scan), bit-equal
+        to the per-step python recorder."""
+        ds, obj, meta, p0 = _problem()
+        w_s, h_s = sgd_train_with_cache(obj, p0, ds, meta, tier="host")
+        w_p, h_p = sgd_train_with_cache(obj, p0, ds, meta, tier="host",
+                                        impl="python")
+        assert _dist(w_s, w_p) <= TOL
+        for t in (0, 13, meta.steps - 1):
+            assert _dist(h_s.entry(t)[0], h_p.entry(t)[0]) <= TOL
+            assert _dist(h_s.entry(t)[1], h_p.entry(t)[1]) <= TOL
+
+    @pytest.mark.parametrize("codec", ["bf16", "int8"])
+    def test_codec_window_decode_matches_per_entry(self, codec):
+        """decode_stacked (the streamer's one-upload window read) must agree
+        with per-entry decode for every codec."""
+        ds, obj, meta, p0 = _problem()
+        _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host",
+                                    codec=codec)
+        store = SegmentStreamer(h, window=7)
+        W, G, off = store.window(7, 14)
+        assert off == 7
+        for t in (7, 10, 13):
+            w_ref, g_ref = h.entry(t)
+            w_win = __import__("jax").tree.map(lambda x: x[t - off], W)
+            g_win = __import__("jax").tree.map(lambda x: x[t - off], G)
+            assert _dist(w_win, w_ref) == 0.0
+            assert _dist(g_win, g_ref) == 0.0
+
+    def test_hbm_high_water_bounded_by_two_windows(self):
+        ds, obj, meta, p0 = _problem()
+        _, h_res = sgd_train_with_cache(obj, p0, ds, meta, tier="stacked")
+        resident_bytes = tree_nbytes(h_res.stacked_view())
+        _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host")
+        cfg = dataclasses.replace(CFG, stream_window=5)
+        _, st = deltagrad_retrain(obj, h, ds, np.arange(6), cfg)
+        high = st.extra["hbm_high_water"]
+        per_window = resident_bytes * 5 / meta.steps
+        assert high <= 2 * per_window * 1.01
+        assert high < resident_bytes / 2
+
+    def test_prefetch_overlap_served_from_buffer(self):
+        ds, obj, meta, p0 = _problem()
+        _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host")
+        store = SegmentStreamer(h, window=8)
+        store.window(0, 8)
+        store.window(8, 16)  # sequential: must hit the prefetched copy
+        assert store.prefetch_hits >= 1
+
+
+class TestStreamedOnline:
+    def _mk(self, tier, tmp_path=None, codec="f32"):
+        ds, obj, meta, p0 = _problem()
+        _, h = sgd_train_with_cache(
+            obj, p0, ds, meta, tier=tier, codec=codec,
+            spill_dir=str(tmp_path) if tmp_path else None)
+        return ds, obj, h
+
+    def test_online_host_tier_scan_matches_oracle(self):
+        reqs = [("delete", 3), ("delete", 17), ("delete", 40)]
+        ds1, obj1, h1 = self._mk("host")
+        cfg = dataclasses.replace(CFG, stream_window=8)
+        w_s, st_s = online_deltagrad(obj1, h1, ds1, reqs, cfg)
+        assert st_s.per_request[0].extra["store"] == "streamed"
+        ds2, obj2, h2 = self._mk("host")
+        w_p, st_p = online_deltagrad(obj2, h2, ds2, reqs,
+                                     dataclasses.replace(CFG, impl="python"))
+        assert _dist(w_s, w_p) <= TOL
+        for a, b in zip(st_s.per_request, st_p.per_request):
+            assert (a.approx_steps, a.explicit_steps, a.grad_examples) == \
+                (b.approx_steps, b.explicit_steps, b.grad_examples)
+
+    def test_online_rewrites_committed_through_codec(self):
+        """After a streamed online request the HISTORY (not just the device
+        copy) holds the rewritten path: a second engine built fresh from it
+        serves the next request like the uninterrupted stream."""
+        reqs_all = [("delete", 3), ("delete", 17)]
+        ds1, obj1, h1 = self._mk("host")
+        w_ref, _ = online_deltagrad(obj1, h1, ds1, reqs_all, CFG)
+        ds2, obj2, h2 = self._mk("host")
+        online_deltagrad(obj2, h2, ds2, reqs_all[:1], CFG)
+        ds2.removed[3] = True  # mirror the first request's bookkeeping
+        w_resume, _ = online_deltagrad(obj2, h2, ds2, reqs_all[1:], CFG)
+        assert _dist(w_resume, w_ref) <= TOL
+
+    def test_online_mixed_stream_disk_tier(self, tmp_path):
+        ds1, obj1, h1 = self._mk("disk", tmp_path)
+        add_rows = ds1.append({k: v[:2] for k, v in ds1.columns.items()})
+        reqs = [("delete", 3), ("add", int(add_rows[0])),
+                ("add", int(add_rows[1])), ("delete", int(add_rows[0]))]
+        w_s, st = online_deltagrad(obj1, h1, ds1, reqs, CFG)
+        assert all(r.extra["store"] == "streamed" for r in st.per_request)
+
+        ds2, obj2, h2 = self._mk("disk", tmp_path / "py")
+        ds2.append({k: v[:2] for k, v in ds2.columns.items()})
+        w_p, _ = online_deltagrad(obj2, h2, ds2, reqs,
+                                  dataclasses.replace(CFG, impl="python"))
+        assert _dist(w_s, w_p) <= TOL
+
+
+class TestTierErgonomics:
+    def test_disk_without_spill_dir_is_actionable(self):
+        with pytest.raises(ValueError, match="spill_dir='auto'"):
+            TrainingHistory(HistoryMeta(**META), tier="disk")
+
+    def test_disk_auto_tempdir(self):
+        import os
+        h = TrainingHistory(HistoryMeta(**META), tier="disk",
+                            spill_dir="auto")
+        assert h.spill_dir and os.path.isdir(h.spill_dir)
+
+    def test_unknown_tier_lists_options(self):
+        with pytest.raises(ValueError, match="stacked.*device.*host.*disk"):
+            TrainingHistory(HistoryMeta(**META), tier="gpu")
+
+    def test_lossy_codec_on_stacked_suggests_host(self):
+        with pytest.raises(ValueError, match="tier='host'"):
+            TrainingHistory(HistoryMeta(**META), tier="stacked",
+                            codec="bf16")
+
+    def test_unknown_codec(self):
+        with pytest.raises(ValueError, match="int8"):
+            TrainingHistory(HistoryMeta(**META), tier="host", codec="fp4")
+
+    def test_sharded_streaming_not_silently_wrong(self):
+        from repro.core.store import PlacementPolicy
+        ds, obj, meta, p0 = _problem()
+        _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host")
+        with pytest.raises(NotImplementedError, match="sharded streaming"):
+            HistoryStore.create(h, placement=PlacementPolicy(
+                mesh_shape=(8,), axis_names=("data",)))
+
+
+class TestSessionAutoFlush:
+    def _session(self, **kw):
+        from repro.core.session import UnlearnerConfig, UnlearnerSession
+        ds = binary_classification(n=META["n"], d=16, seed=0)
+        obj = logreg_objective(l2=META["l2"])
+        cfg = UnlearnerConfig(steps=META["steps"],
+                              batch_size=META["batch_size"], lr=0.2,
+                              seed=0, deltagrad=CFG, **kw)
+        sess = UnlearnerSession(obj, logreg_init(16, seed=1), ds, cfg)
+        sess.fit()
+        return sess
+
+    def test_max_pending_triggers_flush(self):
+        sess = self._session(max_pending=3)
+        h = [sess.submit(op="delete", rows=[i]) for i in range(4)]
+        assert sess.autoflush_count == 1
+        assert sess.autoflush_reasons["max_pending"] == 1
+        assert h[0].done and h[2].done and not h[3].done
+        # the policy-flushed burst was coalesced into one group replay
+        assert h[0].result(block=False).group_size == 3
+
+    def test_max_delay_via_poll(self):
+        import time
+        sess = self._session(max_delay_s=0.02)
+        h = sess.submit(op="delete", rows=[1])
+        assert not h.done and not sess.poll()
+        time.sleep(0.03)
+        assert sess.pending_age_s >= 0.02
+        assert sess.poll() and h.done
+        assert sess.autoflush_reasons["max_delay_s"] == 1
+        assert sess.pending_age_s == 0.0
+
+    def test_no_policy_no_autoflush(self):
+        sess = self._session()
+        for i in range(5):
+            sess.submit(op="delete", rows=[i])
+        assert sess.autoflush_count == 0 and len(sess._pending) == 5
+        sess.flush()
+
+
+class TestSessionStreamedTier:
+    def test_save_restore_streamed_host_tier(self, tmp_path):
+        from repro.core.session import UnlearnerConfig, UnlearnerSession
+        obj = logreg_objective(l2=META["l2"])
+        cfg = UnlearnerConfig(steps=META["steps"],
+                              batch_size=META["batch_size"], lr=0.2, seed=0,
+                              history_tier="host",
+                              deltagrad=dataclasses.replace(
+                                  CFG, stream_window=8))
+        ds = binary_classification(n=META["n"], d=16, seed=0)
+        sess = UnlearnerSession(obj, logreg_init(16, seed=1), ds, cfg)
+        sess.fit()
+        sess.delete([3, 17]).result()
+        assert sess.engine().store.kind == "streamed"
+        sess.save(str(tmp_path))
+        restored = UnlearnerSession.restore(str(tmp_path), obj)
+        assert restored.engine().store.kind == "streamed"
+        a = sess.delete([40]).params
+        b = restored.delete([40]).params
+        assert _dist(a, b) == 0.0
