@@ -1,6 +1,6 @@
 """HistoryStore placement benchmark → BENCH_shard.json.
 
-Compares the three ways `core.store` can serve the cached optimization
+Compares the four ways `core.store` can serve the cached optimization
 path to the compiled replay scan, on the same problem:
 
   * ``resident``   — stacked tier, single device (the baseline fast path);
@@ -9,13 +9,24 @@ path to the compiled replay scan, on the same problem:
   * ``mesh``       — stacked tier sharded over an N-device CPU mesh
                      (`PlacementPolicy` + shard_map replay).  Runs in a
                      SUBPROCESS with ``--xla_force_host_platform_device_count``
-                     so the forced device count never pollutes the caller.
+                     so the forced device count never pollutes the caller;
+  * ``sharded_streamed`` — host tier placed on the same mesh
+                     (`ShardedStreamer`): per-shard encoded window
+                     segments, the only configuration that serves
+                     histories too big for any single host's HBM and any
+                     single device.  Also subprocess-isolated.
 
 Reported per variant: total replay wall, per-segment wall, history HBM
-high-water per device, and parity vs the resident baseline.  The MLP
+high-water per device, per-host host-RAM footprint (encoded path +
+staged window slices), and parity vs the resident baseline (plus, for
+``sharded_streamed``, exact parity vs the mesh-resident run).  The MLP
 problem is sized so its (d, hidden) leaves actually shard on the data
 axis — the HBM column is the point of the mesh variant, the window
-column is the point of the streamed one.
+column is the point of the streamed one, and the composed variant's
+high-water is ~2 windows of the SHARD (`sharded_streamed_shard_windows`
+in the output).  The derived ratios at the bottom of the JSON are what
+`tools/check_bench.py` gates CI on — machine-robust relatives, not
+absolute walls.
 
     PYTHONPATH=src python benchmarks/bench_shard.py [--quick]
 """
@@ -63,10 +74,11 @@ def run_variant(args, variant: str):
     ds, obj, meta, p0, changed = build_problem(args)
     cfg = DeltaGradConfig(period=args.period, burn_in=args.burn_in,
                           history_size=2, stream_window=args.window)
-    tier = "host" if variant == "streamed" else "stacked"
+    streamed = variant in ("streamed", "sharded_streamed")
+    tier = "host" if streamed else "stacked"
     _, hist = sgd_train_with_cache(obj, p0, ds, meta, tier=tier)
-    placement = PlacementPolicy.local(args.devices) if variant == "mesh" \
-        else None
+    placement = PlacementPolicy.local(args.devices) \
+        if variant in ("mesh", "sharded_streamed") else None
     # ONE store across reps: the sharded variant's compiled shard_map
     # programs are cached on the store, so the timed runs measure replay,
     # not retrace/compile (cf. deltagrad_retrain's store= docstring)
@@ -74,15 +86,20 @@ def run_variant(args, variant: str):
                                 window=args.window)
 
     # reference for parity: the single-device RESIDENT replay (for the
-    # streamed variant that means a separate stacked-tier recording — the
+    # streamed variants that means a separate stacked-tier recording — the
     # two recorders are bit-identical, see tests/test_store.py)
-    w_ref = None
+    w_ref = w_mesh = None
     if variant != "resident":
         ref_hist = hist
         if tier != "stacked":
             _, ref_hist = sgd_train_with_cache(obj, p0, ds, meta,
                                                tier="stacked")
         w_ref, _ = deltagrad_retrain(obj, ref_hist, ds, changed, cfg)
+        if variant == "sharded_streamed":
+            # the composed store's defining invariant: EXACT parity with
+            # the sharded-resident replay on the same mesh
+            w_mesh, _ = deltagrad_retrain(obj, ref_hist, ds, changed, cfg,
+                                          placement=placement)
 
     run = lambda: deltagrad_retrain(obj, hist, ds, changed, cfg,
                                     store=store)
@@ -94,16 +111,23 @@ def run_variant(args, variant: str):
         jax.block_until_ready(w)
         walls.append(time.perf_counter() - t0)
     segs = max(1, st.extra.get("segments", 1))
+    host_ram = 0
+    if streamed:
+        # per-host RAM: the encoded path (host/disk storage) plus the
+        # staged per-shard window slices in flight
+        host_ram = int(hist.nbytes() + store.host_stage_high)
     out = {
         "variant": variant,
-        "devices": args.devices if variant == "mesh" else 1,
+        "devices": args.devices if placement is not None else 1,
         "store": st.extra["store"],
         "wall_s": float(np.median(walls)),
         "per_segment_ms": float(np.median(walls)) / segs * 1e3,
         "segments": segs,
         "hbm_high_water_bytes": int(st.extra["hbm_high_water"]),
+        "host_ram_bytes": host_ram,
         "windows": int(st.extra.get("windows", 0)),
         "host_wait_s": float(st.extra.get("host_wait_s", 0.0)),
+        "prefetch_depth": int(st.extra.get("prefetch_depth", 0)),
         "approx_steps": st.approx_steps,
         "explicit_steps": st.explicit_steps,
     }
@@ -111,6 +135,9 @@ def run_variant(args, variant: str):
         rel = float(tree_norm(tree_sub(w, w_ref))) \
             / max(1e-12, float(tree_norm(w_ref)))
         out["parity_vs_resident"] = rel
+    if w_mesh is not None:
+        out["parity_vs_mesh_resident"] = float(
+            tree_norm(tree_sub(w, w_mesh)))
     return out
 
 
@@ -146,11 +173,11 @@ def main(argv=None):
     flags = [f"--{k.replace('_', '-')}={v}" for k, v in vars(args).items()
              if k not in ("role", "variant", "quick", "out")]
     rows = []
-    for variant in ("resident", "streamed", "mesh"):
-        # every variant runs in its own subprocess so the mesh one can
+    for variant in ("resident", "streamed", "mesh", "sharded_streamed"):
+        # every variant runs in its own subprocess so the mesh ones can
         # force the host-platform device count before jax initializes
         env = dict(os.environ, PYTHONPATH="src")
-        if variant == "mesh":
+        if variant in ("mesh", "sharded_streamed"):
             env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
                                 " --xla_force_host_platform_device_count="
                                 f"{args.devices}").strip()
@@ -166,23 +193,39 @@ def main(argv=None):
         row = json.loads(proc.stdout.strip().splitlines()[-1])
         rows.append(row)
         par = row.get("parity_vs_resident")
-        print(f"{variant:9s} dev={row['devices']} "
+        print(f"{variant:16s} dev={row['devices']} "
               f"wall {row['wall_s'] * 1e3:8.1f} ms  "
               f"per-seg {row['per_segment_ms']:7.2f} ms  "
               f"hbm {row['hbm_high_water_bytes'] / 1e6:8.3f} MB"
               + (f"  parity {par:.2e}" if par is not None else ""))
 
-    base = next(r for r in rows if r["variant"] == "resident")
+    def pick(variant, key):
+        return next(r[key] for r in rows if r["variant"] == variant)
+
+    base_hbm = pick("resident", "hbm_high_water_bytes")
+    base_wall = pick("resident", "wall_s")
+    mesh_hbm = pick("mesh", "hbm_high_water_bytes")
+    ss_hbm = pick("sharded_streamed", "hbm_high_water_bytes")
+    # per-device high-water of the composed store, in units of one SHARD
+    # window (mesh-resident full path scaled to window/steps) — the
+    # "~2 windows of the shard, not the full leaf" invariant as a number
+    shard_window = max(1, mesh_hbm) * args.window / max(1, args.steps)
     results = {
         "config": {k: v for k, v in vars(args).items()
                    if k not in ("role", "variant", "out")},
         "variants": rows,
-        "hbm_reduction_mesh": base["hbm_high_water_bytes"]
-        / max(1, next(r["hbm_high_water_bytes"] for r in rows
-                      if r["variant"] == "mesh")),
-        "hbm_reduction_streamed": base["hbm_high_water_bytes"]
-        / max(1, next(r["hbm_high_water_bytes"] for r in rows
-                      if r["variant"] == "streamed")),
+        "hbm_reduction_mesh": base_hbm / max(1, mesh_hbm),
+        "hbm_reduction_streamed": base_hbm
+        / max(1, pick("streamed", "hbm_high_water_bytes")),
+        "hbm_reduction_sharded_streamed": base_hbm / max(1, ss_hbm),
+        "sharded_streamed_shard_windows": ss_hbm / shard_window,
+        # machine-robust relatives for the CI regression gate
+        # (tools/check_bench.py): absolute walls vary across runners,
+        # the cost of each placement relative to resident far less
+        "wall_ratio_streamed": pick("streamed", "wall_s") / base_wall,
+        "wall_ratio_mesh": pick("mesh", "wall_s") / base_wall,
+        "wall_ratio_sharded_streamed":
+            pick("sharded_streamed", "wall_s") / base_wall,
     }
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)

@@ -64,7 +64,11 @@ Where the history bytes live is `core.store`'s concern: stacked/device
 tiers replay fully resident (optionally sharded across a mesh, with the
 segment scans run under ``shard_map`` and per-example gradients
 psum-reduced), host/disk tiers stream double-buffered segment windows to
-the same compiled scans.  Execution backends: ``impl="scan"`` (this
+the same compiled scans — and the two COMPOSE: a mesh-placed host/disk
+tier streams per-shard encoded window segments (`ShardedStreamer`), the
+scans consuming them under shard_map exactly like the resident sharded
+path (window-granular gather source, same per-step all-gather plan).
+Execution backends: ``impl="scan"`` (this
 module's compiled path, all tiers) and ``impl="python"`` (the pre-refactor
 per-step loop, kept as the parity oracle).  Numerics and counters
 are identical between the two backends, guard ON or OFF.  The two
@@ -88,7 +92,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -763,6 +767,8 @@ def run_replay(
     if getattr(store, "windows_fetched", 0):
         stats.extra["windows"] = store.windows_fetched
         stats.extra["host_wait_s"] = store.host_wait_s
+        stats.extra["prefetch_depth"] = store.depth_used
+        stats.extra["host_stage_high"] = store.host_stage_high
     if runner is not None:
         stats.extra["mesh"] = runner.placement.describe()
     return params, stats
@@ -1301,6 +1307,7 @@ def run_online_request(
     stats.extra["hbm_high_water"] = store.hbm_high_water()
     if getattr(store, "windows_fetched", 0):
         stats.extra["windows"] = store.windows_fetched
+        stats.extra["prefetch_depth"] = store.depth_used
     if runner is not None:
         stats.extra["mesh"] = runner.placement.describe()
     # the end-of-request pair ring, for session snapshots (the ring is

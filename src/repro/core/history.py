@@ -54,10 +54,24 @@ bytes (f32 params) and ``T`` recorded steps:
                                       `core.store.SegmentStreamer`
                                       (host RAM pays ``2*T*P / ratio``,
                                       codec ratio 1/2/4 for f32/bf16/int8)
+  host       ``~2*L*P / mesh``        the COMPOSED tier
+  + mesh     (shard window)           (`core.store.ShardedStreamer`) — the
+                                      only fit when the path exceeds any
+                                      single host's HBM *and* any single
+                                      device: each mesh shard streams only
+                                      its `stacked_spec_for_leaf` slice of
+                                      every window, so per-DEVICE bytes
+                                      are ~2 windows of the shard and
+                                      per-HOST RAM is the encoded path
+                                      (``2*T*P / ratio``) plus one window
+                                      of staged slices; the shard_map
+                                      scan all-gathers one step at a time
   disk       ``~2*L*P`` (window)      longest runs; host RAM ~0, entries
                                       spill to ``spill_dir`` .npz
                                       (``spill_dir="auto"`` → a fresh
-                                      tempdir, removed with the process)
+                                      tempdir, removed with the process);
+                                      also composes with a mesh placement
+                                      exactly like host + mesh
   =========  =======================  ==================================
 
 Codecs apply to host/disk (re-encoded per entry); ``stacked`` rejects

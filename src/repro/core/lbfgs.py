@@ -34,7 +34,7 @@ from typing import List, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.utils.tree import tree_axpy, tree_lincomb, tree_scale, tree_vdot
+from repro.utils.tree import tree_lincomb, tree_scale, tree_vdot
 
 
 class CompactCoeffs(NamedTuple):

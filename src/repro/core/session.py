@@ -57,6 +57,7 @@ Design:
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -146,6 +147,49 @@ class UnlearnResponse:
     params: Any = None
 
 
+class AutoFlushTimer:
+    """Daemon timer that drives a session's ``max_delay_s`` deadline with
+    ZERO arrivals: `poll()` only runs when somebody calls it, so a lone
+    request submitted right before a lull would otherwise sit past its
+    deadline until the next submit.  The timer calls ``session.poll()``
+    every ``interval_s`` (default: a quarter of the deadline) from a
+    daemon thread; session mutation is serialized by the session's lock,
+    so the timer is safe next to a submitting foreground thread.
+
+    A flush that raises (a failing request group) records the error on
+    ``last_error`` and keeps ticking — the failing handles already resolve
+    to the error through the session's usual path."""
+
+    def __init__(self, session: "UnlearnerSession",
+                 interval_s: Optional[float] = None):
+        deadline = session.config.max_delay_s
+        # staleness is bounded by max_delay_s + one timer interval (the
+        # deadline can expire right after a tick), so default to a small
+        # fraction of the deadline
+        if interval_s is None:
+            interval_s = (deadline / 8.0) if deadline else 0.05
+        self.interval_s = max(1e-3, float(interval_s))
+        self.ticks = 0
+        self.last_error: Optional[Exception] = None
+        self._session = session
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="unlearner-autoflush")
+        self._thread.start()
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            self.ticks += 1
+            try:
+                self._session.poll()
+            except Exception as e:  # noqa: BLE001 — keep the timer alive
+                self.last_error = e
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+
+
 class RequestHandle:
     """Lazy handle returned by `UnlearnerSession.submit`.
 
@@ -227,8 +271,12 @@ class UnlearnerSession:
         # this, the oldest resolve to a clear "evicted" error instead of
         # leaking device memory on fire-and-forget submitters
         self.max_responses = 256
-        # auto-flush bookkeeping (config.max_pending / max_delay_s)
+        # auto-flush bookkeeping (config.max_pending / max_delay_s); the
+        # lock serializes submit/flush/poll so an `AutoFlushTimer` thread
+        # can drive the deadline next to a submitting foreground thread
+        self._lock = threading.RLock()
         self._oldest_pending_ts: Optional[float] = None
+        self._autoflush_timer: Optional[AutoFlushTimer] = None
         self.autoflush_count = 0
         self.autoflush_reasons: Dict[str, int] = {"max_pending": 0,
                                                   "max_delay_s": 0}
@@ -322,7 +370,15 @@ class UnlearnerSession:
 
         Nothing executes until the session flushes.  Add payloads (`data`)
         ARE appended to the dataset here, so their row ids are assigned at
-        submission time and later requests may delete them."""
+        submission time and later requests may delete them.  Serialized
+        against `flush()`/`poll()` (and so against an `AutoFlushTimer`)
+        by the session lock."""
+        with self._lock:
+            return self._submit_locked(request, op=op, rows=rows,
+                                       data=data, coalesce=coalesce)
+
+    def _submit_locked(self, request, *, op, rows, data,
+                       coalesce) -> RequestHandle:
         self._require_fit()
         if request is None:
             request = UnlearnRequest(op=op, rows=rows, data=data,
@@ -392,13 +448,40 @@ class UnlearnerSession:
             return False
         self.autoflush_count += 1
         self.autoflush_reasons[reason] += 1
-        self.flush()
+        try:
+            self.flush()
+        except Exception:
+            # a POLICY-triggered flush must not propagate a failing
+            # group's error out of submit() — the caller would lose the
+            # handle for the request it just enqueued.  flush() already
+            # recorded the failing tickets in _failed (their handles
+            # resolve to the error) and requeued the groups behind them.
+            pass
         return True
 
     def poll(self) -> bool:
         """Deadline tick for continuous-load serving: flushes (returning
-        True) iff pending work has outstayed ``config.max_delay_s``."""
-        return self._maybe_autoflush()
+        True) iff pending work has outstayed ``config.max_delay_s``.
+        Call it from the load loop's idle tick, or let
+        `start_autoflush_timer()` drive it from a daemon thread."""
+        with self._lock:
+            return self._maybe_autoflush()
+
+    def start_autoflush_timer(self, interval_s: Optional[float] = None
+                              ) -> AutoFlushTimer:
+        """Drive the ``max_delay_s`` deadline from a daemon timer thread so
+        it holds even with ZERO further arrivals (the ROADMAP serve-path
+        item: `poll()` alone only fires when the load loop spins).  Returns
+        the timer; `stop()` it when the session retires.  Starting a new
+        timer stops the previous one."""
+        if self.config.max_delay_s is None:
+            raise ValueError(
+                "start_autoflush_timer() needs config.max_delay_s — there "
+                "is no deadline for the timer to enforce")
+        if self._autoflush_timer is not None:
+            self._autoflush_timer.stop()
+        self._autoflush_timer = AutoFlushTimer(self, interval_s=interval_s)
+        return self._autoflush_timer
 
     @property
     def pending_age_s(self) -> float:
@@ -442,6 +525,10 @@ class UnlearnerSession:
         Replays are DISPATCHED, not synced: device work queues up and
         `dispatch_s` measures host time only; blocking happens when a
         handle (or `.params`) is forced."""
+        with self._lock:
+            return self._flush_locked()
+
+    def _flush_locked(self) -> List[UnlearnResponse]:
         if not self._pending:
             return []
         engine = self.engine()
@@ -536,7 +623,14 @@ class UnlearnerSession:
         ride as the checkpoint's sharded pytree; `TrainingHistory` (any
         tier), the dataset (columns + deletion mask), and the engine's
         stream state (liveness, added-row order, capacities, last L-BFGS
-        pair ring) ride in the extra payload.  Returns the step dir."""
+        pair ring) ride in the extra payload.  Returns the step dir.
+        Holds the session lock for the whole write so a concurrent
+        submitter or `AutoFlushTimer` cannot mutate state between the
+        flush and the state_dict reads."""
+        with self._lock:
+            return self._save_locked(directory, step)
+
+    def _save_locked(self, directory: str, step: Optional[int]) -> str:
         self._require_fit()
         self.flush()
         params = self._engine.params if self._engine is not None \

@@ -25,10 +25,26 @@ placement/transport layer between `TrainingHistory` and the engines:
     thread with double buffering: while the scan for window *s* computes,
     the host stacks and ships window *s+1* (prefetch), so the compiled
     path never blocks on the offload tier and device high-water stays at
-    ~2 windows instead of the whole path.  Online-request rewrites are
-    committed back through the codec per window.
+    ~2 windows instead of the whole path.  When measured host stacking is
+    SLOWER than the scan (small windows on the disk tier), the prefetch
+    depth adapts: up to ``max_prefetch`` windows stage ahead so the scan
+    never starves (`stats.extra["prefetch_depth"]` reports the depth
+    used).  Online-request rewrites are committed back through the codec
+    per window.
 
-Both stores expose one engine-facing API: ``window(a, b) -> (W, G, off)``
+  * ``ShardedStreamer`` — host/disk tiers placed on a mesh: the
+    composition of the two.  Each staged window's leaves are split into
+    PER-SHARD encoded segments along the same `stacked_spec_for_leaf`
+    axes as `ResidentStore` (time axis never sharded); the worker threads
+    stack and upload ONLY each mesh shard's slice of each leaf
+    (`jax.make_array_from_single_device_arrays` assembles the global
+    window), the codec decodes shard-local on device, and the engines'
+    ``shard_map`` scans all-gather the decoded window one step at a time
+    exactly as the resident path does.  Device high-water is ~2 windows
+    of the SHARD; per-host RAM holds the encoded path (/codec ratio) plus
+    one window of staged slices.
+
+Every store exposes one engine-facing API: ``window(a, b) -> (W, G, off)``
 (leaves indexed ``W[t - off]`` inside the scan), ``entry(t)`` for host-driven
 explicit steps, and ``commit(...)`` for the online engine's end-of-request
 rewrite flush.  `core.engine` and `core.online` consume it; `core.session`
@@ -63,6 +79,19 @@ def tree_nbytes(tree) -> int:
     return sum(int(np.prod(x.shape, dtype=np.int64))
                * np.dtype(x.dtype).itemsize
                for x in jax.tree.leaves(tree))
+
+
+def tree_device_nbytes(tree) -> int:
+    """Bytes a pytree holds on ONE device: sharded leaves count a single
+    shard, so a mesh-placed window reports the per-device cost the sharding
+    is supposed to buy.  Equals `tree_nbytes` for unsharded arrays."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        sh = getattr(x, "sharding", None)
+        shape = sh.shard_shape(x.shape) if sh is not None else x.shape
+        total += (int(np.prod(shape, dtype=np.int64))
+                  * np.dtype(x.dtype).itemsize)
+    return total
 
 
 # --------------------------------------------------------------------------
@@ -132,18 +161,12 @@ class PlacementPolicy:
         self.__dict__.update(state)
 
     def describe(self) -> Dict[str, Any]:
+        """DISPLAY-only summary (stats.extra["mesh"]).  Not a round-trip:
+        session save/restore pickles the policy object itself, which is
+        what preserves ``model_cfg`` (the MoE spec rules)."""
         return {"mesh_shape": list(self.mesh_shape),
                 "axis_names": list(self.axis_names),
                 "data_axis": self.data_axis}
-
-    @classmethod
-    def from_describe(cls, d: Optional[Dict[str, Any]]
-                      ) -> Optional["PlacementPolicy"]:
-        if d is None:
-            return None
-        return cls(mesh_shape=tuple(d["mesh_shape"]),
-                   axis_names=tuple(d["axis_names"]),
-                   data_axis=d["data_axis"])
 
 
 # --------------------------------------------------------------------------
@@ -195,16 +218,14 @@ class HistoryStore:
                placement: Optional[PlacementPolicy] = None,
                window: int = 0) -> "HistoryStore":
         """Pick the store for the history's tier: stacked/device →
-        `ResidentStore` (optionally mesh-placed), host/disk →
+        `ResidentStore` (optionally mesh-placed); host/disk →
         `SegmentStreamer` (``window`` steps per device-resident segment,
-        0 → auto)."""
+        0 → auto), or `ShardedStreamer` when a multi-device placement is
+        given (each mesh shard streams only its slice of every window)."""
         if history.tier in ("host", "disk"):
-            if placement is not None and placement.data_size > 1:
-                raise NotImplementedError(
-                    "sharded streaming (mesh placement over a host/disk-tier "
-                    "history) is not implemented yet — shard a "
-                    "stacked/device tier, or stream single-device "
-                    "(ROADMAP follow-on)")
+            if placement is not None \
+                    and int(np.prod(placement.mesh_shape)) > 1:
+                return ShardedStreamer(history, placement, window=window)
             return SegmentStreamer(history, window=window)
         return ResidentStore(history, placement=placement)
 
@@ -315,14 +336,7 @@ class ResidentStore(HistoryStore):
     def _per_device_bytes(self) -> int:
         """History bytes resident on ONE device — the number sharding is
         supposed to shrink (nbytes / mesh factor for sharded leaves)."""
-        total = 0
-        for leaf in jax.tree.leaves((self.W, self.G)):
-            sh = getattr(leaf, "sharding", None)
-            shape = sh.shard_shape(leaf.shape) if sh is not None \
-                else leaf.shape
-            total += (int(np.prod(shape, dtype=np.int64))
-                      * np.dtype(leaf.dtype).itemsize)
-        return total
+        return tree_device_nbytes((self.W, self.G))
 
     @property
     def specs(self):
@@ -362,28 +376,62 @@ class ResidentStore(HistoryStore):
 
 class SegmentStreamer(HistoryStore):
     """Serve a host/disk-tier history to the compiled scan in device-resident
-    segment windows with double-buffered async host→device copies."""
+    segment windows with double-buffered async host→device copies.
+
+    Prefetch depth is ADAPTIVE: it starts at 1 (classic double buffering)
+    and, when the measured host stacking time of a window exceeds the scan
+    time the device spends consuming one, grows to
+    ``ceil(stack / scan)`` windows (capped at ``max_prefetch``) so the
+    compiled path never starves on the offload tier.  The depth actually
+    used is reported via `stats.extra["prefetch_depth"]`; device
+    high-water grows by one ENCODED window per extra depth step."""
 
     kind = "streamed"
     placement = None
 
     def __init__(self, history: TrainingHistory, window: int = 0,
-                 prefetch: bool = True):
+                 prefetch: bool = True, max_prefetch: int = 4,
+                 stage_threads: Optional[int] = None):
         assert history.tier in ("host", "disk"), history.tier
         self.history = history
         self.window_len = auto_window(history.meta.steps, window)
         self.prefetch = prefetch
-        self._pool = ThreadPoolExecutor(max_workers=1) if prefetch else None
+        # depth > 1 only pays when that many windows can STAGE concurrently
+        # — a queued future behind one busy worker adds device bytes, not
+        # throughput — so the depth cap IS the worker count (default: spare
+        # cores; 1 on small hosts → classic double buffering, ~2-window
+        # high-water)
+        import os as _os
+        workers = stage_threads if stage_threads is not None \
+            else (_os.cpu_count() or 2) - 1
+        self.max_prefetch = max(1, min(int(max_prefetch), int(workers)))
+        self._pool = ThreadPoolExecutor(max_workers=self.max_prefetch) \
+            if prefetch else None
         self._buf: Dict[int, Tuple[Any, Any]] = {}
         self._inflight: Dict[int, Future] = {}
         self._hbm_now = 0
         self._hbm_high = 0
-        self._enc_bytes = 0  # ENCODED bytes of the last staged window (the
-        # in-flight prefetch copy is pre-decode, so lossy codecs stage at
-        # 1/2 or 1/4 of the decoded f32 size)
+        self._enc_bytes = 0  # ENCODED per-device bytes of the last staged
+        # window (the in-flight prefetch copy is pre-decode, so lossy codecs
+        # stage at 1/2 or 1/4 of the decoded f32 size)
         self.windows_fetched = 0
         self.prefetch_hits = 0
         self.host_wait_s = 0.0
+        # adaptive prefetch state: EMAs of host stacking time vs the scan
+        # time between consecutive window() calls (both in seconds)
+        self.prefetch_depth = 1  # depth chosen for the NEXT windows
+        self.depth_used = 1  # high-water of chosen depths (stats.extra)
+        # host RAM of staged windows: host_stage_high is the largest
+        # SINGLE window's staged bytes (depth k stages up to k windows
+        # concurrently); guarded by a lock because staging runs on pool
+        # threads once the depth exceeds 1
+        import threading
+        self._meter_lock = threading.Lock()
+        self.host_stage_bytes = 0
+        self.host_stage_high = 0
+        self._stack_ema = 0.0
+        self._scan_ema = 0.0
+        self._last_return_ts: Optional[float] = None
 
     # -- window plumbing -----------------------------------------------------
 
@@ -397,7 +445,7 @@ class SegmentStreamer(HistoryStore):
     def span_end(self, t: int, t2: int) -> int:
         return min(t2, self._bounds(self._wid(t))[1])
 
-    def _stack_host(self, wid: int):
+    def _stage_window(self, wid: int):
         """Host side of a fetch: stack the window's ENCODED entries per leaf
         and ship them with `jax.device_put` (async dispatch).  Runs on the
         worker thread for prefetches; no tracing happens here."""
@@ -412,7 +460,23 @@ class SegmentStreamer(HistoryStore):
             jax.tree.map(lambda x: np.asarray(x)[None], enc_p[0])
         Gh = jax.tree.map(stack, *enc_g) if len(enc_g) > 1 else \
             jax.tree.map(lambda x: np.asarray(x)[None], enc_g[0])
+        self._note_stage_bytes(tree_nbytes((Wh, Gh)))
         return jax.device_put((Wh, Gh))
+
+    def _stack_host(self, wid: int):
+        """`_stage_window` + the stacking-time EMA the adaptive prefetch
+        depth feeds on (updated from whichever thread runs the stage)."""
+        t0 = time.perf_counter()
+        staged = self._stage_window(wid)
+        dt = time.perf_counter() - t0
+        self._stack_ema = dt if self._stack_ema == 0.0 \
+            else 0.5 * self._stack_ema + 0.5 * dt
+        return staged
+
+    def _note_stage_bytes(self, nbytes: int) -> None:
+        with self._meter_lock:
+            self.host_stage_bytes = int(nbytes)
+            self.host_stage_high = max(self.host_stage_high, int(nbytes))
 
     def _decode(self, staged):
         Wh, Gh = staged
@@ -432,10 +496,10 @@ class SegmentStreamer(HistoryStore):
             t0 = time.perf_counter()
             staged = self._stack_host(wid)
             self.host_wait_s += time.perf_counter() - t0
-        self._enc_bytes = tree_nbytes(staged)
+        self._enc_bytes = tree_device_nbytes(staged)
         W, G = self._decode(staged)
         self._buf[wid] = (W, G)
-        self._hbm_now += tree_nbytes(W) + tree_nbytes(G)
+        self._hbm_now += tree_device_nbytes(W) + tree_device_nbytes(G)
         self._hbm_high = max(self._hbm_high, self._hbm_now)
         self.windows_fetched += 1
         return W, G
@@ -443,7 +507,7 @@ class SegmentStreamer(HistoryStore):
     def _evict_before(self, wid: int) -> None:
         for old in [w for w in self._buf if w < wid]:
             W, G = self._buf.pop(old)
-            self._hbm_now -= tree_nbytes(W) + tree_nbytes(G)
+            self._hbm_now -= tree_device_nbytes(W) + tree_device_nbytes(G)
         for old in [w for w in self._inflight if w < wid]:
             self._inflight.pop(old)
 
@@ -453,19 +517,45 @@ class SegmentStreamer(HistoryStore):
             return
         self._inflight[wid] = self._pool.submit(self._stack_host, wid)
 
+    def _choose_depth(self) -> int:
+        """Prefetch depth for the next windows: 1 while the host keeps up,
+        ceil(stack / scan) once stacking is MEASURABLY slower than the
+        scan that consumes a window (ROADMAP adaptive-depth item).  The
+        1 ms floor keeps microsecond-scale timing noise from buying extra
+        device-resident windows that cannot possibly pay for themselves."""
+        if (self._scan_ema <= 0.0 or self._stack_ema <= 1e-3
+                or self._stack_ema <= self._scan_ema):
+            return 1
+        depth = min(self.max_prefetch,
+                    int(np.ceil(self._stack_ema / self._scan_ema)))
+        return max(1, depth)
+
     def window(self, a: int, b: int):
+        now = time.perf_counter()
+        if self._last_return_ts is not None:
+            # time since the previous window was handed out ≈ the scan
+            # time that consumed it (the denominator of the depth rule)
+            dt = now - self._last_return_ts
+            self._scan_ema = dt if self._scan_ema == 0.0 \
+                else 0.5 * self._scan_ema + 0.5 * dt
         wid = self._wid(a)
         assert b <= self._bounds(wid)[1], (a, b, self.window_len)
         self._evict_before(wid)
         W, G = self._fetch(wid)
-        # double buffering: ship window s+1 while the scan for s computes
-        self._prefetch(wid + 1)
-        # the in-flight staged copy is device-resident too — that is the
-        # double-buffer cost the high-water must report (at its ENCODED
-        # size: decode happens on the consuming fetch)
+        # double buffering (depth 1), or deeper when the host is the
+        # bottleneck: ship windows s+1..s+k while the scan for s computes
+        depth = self._choose_depth()
+        self.prefetch_depth = depth
+        self.depth_used = max(self.depth_used, depth)
+        for ahead in range(1, depth + 1):
+            self._prefetch(wid + ahead)
+        # in-flight staged copies are device-resident too — that is the
+        # buffering cost the high-water must report (at ENCODED size:
+        # decode happens on the consuming fetch)
         self._hbm_high = max(self._hbm_high,
                              self._hbm_now
                              + len(self._inflight) * self._enc_bytes)
+        self._last_return_ts = time.perf_counter()
         return W, G, wid * self.window_len
 
     def entry(self, t: int):
@@ -507,6 +597,177 @@ class SegmentStreamer(HistoryStore):
         return self._hbm_high
 
 
+def _is_enc_leaf(x) -> bool:
+    """Codec-dict leaves (int8's {"q", "scale"}) in an ENCODED entry."""
+    return isinstance(x, dict) and "q" in x
+
+
+class ShardedStreamer(SegmentStreamer):
+    """Host/disk-tier history sharded across a mesh AND streamed per window
+    — the composition `HistoryStore.create` used to refuse.
+
+    Placement: every staged window takes the same
+    `dist.sharding.stacked_spec_for_leaf` placements a `ResidentStore`
+    would give the full (T, ...) leaves (time axis never sharded —
+    `stacked_entry_shardings`).  The staging path is PER-SHARD end to end:
+    for each leaf, each mesh shard's worker thread stacks only its slice
+    of the window's encoded entries (host RAM stages one window of
+    slices, never a full stacked leaf) and uploads it to its own device;
+    `jax.make_array_from_single_device_arrays` assembles the global
+    window without any device ever holding a whole leaf.  The codec
+    decodes shard-local on device (`out_shardings` pins the decoded
+    window to the same placement), and `sharded_replay()` hands the
+    engines the same `ShardedReplay` program builder the resident path
+    uses — the shard_map scan body all-gathers the decoded window one
+    step at a time, so `run_replay` / `run_online_request` run unchanged.
+
+    Online rewrites commit exactly like `SegmentStreamer`: the request's
+    (replicated) rewrite chunks land back in the owning history entries
+    through the codec — the per-shard segments are staging artifacts,
+    re-sliced from the rewritten entries on the next fetch.
+
+    Per-device high-water: ~2 windows of the SHARD (decoded window +
+    in-flight encoded window), i.e. ``2 * L * 2P / (mesh * ratio-ish)``
+    instead of the full path — see the tier guide in `core.history`."""
+
+    kind = "sharded_streamed"
+
+    def __init__(self, history: TrainingHistory,
+                 placement: PlacementPolicy, window: int = 0,
+                 prefetch: bool = True, max_prefetch: int = 4,
+                 stage_threads: Optional[int] = None,
+                 stage_workers: int = 4):
+        assert placement is not None
+        need = int(np.prod(np.asarray(placement.mesh_shape, dtype=np.int64)))
+        have = jax.device_count()
+        if need > have:
+            raise ValueError(
+                f"sharded streaming asks for a {placement.mesh_shape} mesh "
+                f"({need} shards) but only {have} device(s) are visible — "
+                "the shard count must match the mesh the process can "
+                "build (e.g. XLA_FLAGS=--xla_force_host_platform_device_"
+                "count=N for CPU tests), or drop the placement to stream "
+                "single-device")
+        self.placement = placement
+        super().__init__(history, window=window, prefetch=prefetch,
+                         max_prefetch=max_prefetch,
+                         stage_threads=stage_threads)
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        plan = placement.plan()
+        from repro.dist.sharding import stacked_entry_shardings
+        w0, g0 = history.entry(0)  # per-step template (paths + shapes)
+        self._shard_w = stacked_entry_shardings(plan, w0)
+        self._shard_g = stacked_entry_shardings(plan, g0)
+        self._specs = (jax.tree.map(lambda s: s.spec, self._shard_w),
+                       jax.tree.map(lambda s: s.spec, self._shard_g))
+        self._flat_specs_w = [s.spec
+                              for s in jax.tree.leaves(self._shard_w)]
+        self._rep_sharding = NamedSharding(placement.mesh, PartitionSpec())
+        self._stage_pool = ThreadPoolExecutor(
+            max_workers=max(1, min(int(stage_workers), need)))
+        self._decode_fn = None
+        self._sharded: Optional["ShardedReplay"] = None
+
+    @property
+    def specs(self):
+        """Per-leaf (W, G) PartitionSpec trees (same contract as a
+        mesh-placed `ResidentStore`)."""
+        return self._specs
+
+    # -- per-shard staging ---------------------------------------------------
+
+    def _stage_leaf(self, sharding, column, meter: List[int]):
+        """One leaf of one window: stack PER-SHARD host slices of the
+        ``len(column)`` encoded entries and upload each to its owning
+        device — the per-shard encoded segment.  Fanned out over the
+        stage pool so shards stack/ship concurrently; each shard appends
+        its slice bytes to `meter` (list.append is atomic, and the meter
+        is local to ONE window's stage, so concurrent windows under
+        adaptive depth never clobber each other's sums)."""
+        gshape = (len(column),) + tuple(np.shape(column[0]))
+        idx_map = sharding.addressable_devices_indices_map(gshape)
+
+        def one_shard(dev, index):
+            per_entry = index[1:]  # the time axis is never sharded
+            buf = np.stack([np.asarray(e)[per_entry] for e in column])
+            meter.append(buf.nbytes)
+            return jax.device_put(buf, dev)
+
+        futs = [self._stage_pool.submit(one_shard, d, ix)
+                for d, ix in idx_map.items()]
+        return jax.make_array_from_single_device_arrays(
+            gshape, sharding, [f.result() for f in futs])
+
+    def _stage_tree(self, entries, shardings, meter: List[int]):
+        """Stack one window of encoded per-step pytrees into globally
+        sharded (L, ...) leaves.  Codec-dict leaves shard their payload
+        ("q") like the decoded leaf; per-entry scales stack to a
+        replicated (L,) vector."""
+        flat0, tdef = jax.tree.flatten(entries[0], is_leaf=_is_enc_leaf)
+        cols = list(zip(*(jax.tree.leaves(e, is_leaf=_is_enc_leaf)
+                          for e in entries)))
+        out = []
+        for proto, sh, col in zip(flat0, jax.tree.leaves(shardings), cols):
+            if _is_enc_leaf(proto):
+                out.append({
+                    "q": self._stage_leaf(sh, [c["q"] for c in col],
+                                          meter),
+                    "scale": self._stage_leaf(self._rep_sharding,
+                                              [c["scale"] for c in col],
+                                              meter),
+                })
+            else:
+                out.append(self._stage_leaf(sh, col, meter))
+        return jax.tree.unflatten(tdef, out)
+
+    def _stage_window(self, wid: int):
+        a, b = self._bounds(wid)
+        enc_p, enc_g = [], []
+        for t in range(a, b):
+            p, g = self.history.encoded_entry(t)
+            enc_p.append(p)
+            enc_g.append(g)
+        # per-shard staging: this window's host footprint is the SUM of
+        # its staged slices (incl. replicated leaves once per device)
+        meter: List[int] = []
+        staged = (self._stage_tree(enc_p, self._shard_w, meter),
+                  self._stage_tree(enc_g, self._shard_g, meter))
+        self._note_stage_bytes(sum(meter))
+        return staged
+
+    def _decode(self, staged):
+        """Decode the staged (encoded, sharded) window ON DEVICE, with
+        `out_shardings` pinning every decoded leaf to its resident-path
+        placement — shard-local work, no gather."""
+        if self._decode_fn is None:
+            codec = self.history.codec
+            self._decode_fn = jax.jit(
+                lambda Wh, Gh: (codec.decode_stacked(Wh),
+                                codec.decode_stacked(Gh)),
+                out_shardings=(self._shard_w, self._shard_g))
+        return self._decode_fn(*staged)
+
+    def entry(self, t: int):
+        """Explicit steps read per-step slices of the OWNING window, kept
+        sharded exactly like the resident path's entries — fetching the
+        window on demand keeps the sharded-streamed and sharded-resident
+        explicit-step programs (and so their float reduction orders)
+        identical, which is what makes mesh streamed-vs-resident parity
+        exact."""
+        wid = self._wid(t)
+        if wid not in self._buf:
+            self._evict_before(wid)
+            self._fetch(wid)
+        W, G = self._buf[wid]
+        return _entry_slices(W, G, t - wid * self.window_len)
+
+    def sharded_replay(self) -> Optional["ShardedReplay"]:
+        if self._sharded is None:
+            self._sharded = ShardedReplay(self)
+        return self._sharded
+
+
 # --------------------------------------------------------------------------
 # Sharded replay: shard_map construction for the engines' segment scans
 # --------------------------------------------------------------------------
@@ -514,7 +775,7 @@ class SegmentStreamer(HistoryStore):
 
 class ShardedReplay:
     """Builds (and caches) the shard_map-wrapped segment programs for a
-    `ResidentStore` placed on a mesh.
+    mesh-placed store (`ResidentStore` or `ShardedStreamer`).
 
     The engines hand their segment *impl* functions (plain, un-jitted,
     with every static argument already bound) to `wrap`; the minibatch
@@ -522,10 +783,13 @@ class ShardedReplay:
     L-BFGS pairs replicate, and history leaves keep their storage
     placement — sharded leaves are all-gathered ONE STEP at a time inside
     the scan body (`gather_info`), so no device ever materializes the
-    whole stacked path."""
+    whole stacked path (for a streamed store, not even a whole window).
+    The same per-leaf gather plan serves full-path and windowed sources:
+    a window is just a shorter, offset time axis, and the time axis is
+    never sharded."""
 
-    def __init__(self, store: ResidentStore):
-        assert store.placement is not None
+    def __init__(self, store: HistoryStore):
+        assert store.placement is not None and store.specs is not None
         self.store = store
         self._cache: Dict[Any, Any] = {}
 

@@ -141,6 +141,28 @@ def history_shardings(plan: ShardingPlan, stacked_tree):
     return jax.tree_util.tree_map_with_path(one, stacked_tree)
 
 
+def stacked_entry_shardings(plan: ShardingPlan, entry_tree):
+    """NamedSharding pytree for stacked (L, ...) WINDOWS of one history
+    entry (a per-step (w, g)-shaped pytree — shapes WITHOUT the time axis).
+
+    This is `core.store.ShardedStreamer`'s placement driver: every window a
+    host/disk-tier shard streams takes exactly the `stacked_spec_for_leaf`
+    placement a `ResidentStore` would give the full (T, ...) leaf — the
+    window length rides the (never sharded) leading time axis, so the
+    per-shard encoded segments the streamer stages line up with the
+    resident store's shards and the same per-step all-gather plan serves
+    both."""
+    import jax
+    from jax.sharding import NamedSharding
+
+    def one(key_path, leaf):
+        spec = stacked_spec_for_leaf(plan, _path_str(key_path),
+                                     (1,) + tuple(leaf.shape))
+        return NamedSharding(plan.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, entry_tree)
+
+
 def batch_pspec(plan: ShardingPlan, shape: Tuple[int, ...]) -> P:
     """Inputs: batch-dim data parallelism when the global batch divides the
     data axis (batch-1 decode shapes replicate)."""

@@ -31,7 +31,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.models.registry import build, count_params
 from repro.roofline.analysis import roofline_from_compiled
 from repro.roofline.model import analytic_cost
-from repro.utils.tree import tree_all_finite, tree_norm, tree_sub
+from repro.utils.tree import tree_sub
 
 M_HISTORY = 2  # paper default
 # removed sequences present in this step's minibatch, padded UP to the

@@ -203,7 +203,10 @@ def unlearn_main(argv) -> None:
     # -- auto-flush under continuous load: submit WITHOUT forcing handles and
     # let the max_pending/max_delay_s policy decide when to serve — the
     # planner coalesces each flushed batch, and staleness (how long the
-    # oldest submit waited) stays bounded by the policy
+    # oldest submit waited) stays bounded by the policy.  The deadline is
+    # driven by the session's daemon TIMER thread (`start_autoflush_timer`),
+    # so max_delay_s holds even when the load loop stops arriving — the
+    # final lone request below proves it with zero further submits/polls.
     if args.max_pending or args.max_delay_ms:
         sess_f, ds_f = build_session()
         sess_f.config.max_pending = args.max_pending or None
@@ -214,6 +217,8 @@ def unlearn_main(argv) -> None:
             warm_k.append(("delete", args.max_pending))
         sess_f.warmup(warm_k)
         engine_f = sess_f.engine()
+        timer = (sess_f.start_autoflush_timer()
+                 if sess_f.config.max_delay_s else None)
         rng_f = np.random.default_rng(args.seed + 3)
         staleness_ms = []
         submitted: set = set()  # engine liveness lags until a flush lands
@@ -228,11 +233,24 @@ def unlearn_main(argv) -> None:
             if args.arrival_ms:
                 time.sleep(args.arrival_ms / 1e3)
             staleness_ms.append(sess_f.pending_age_s * 1e3)
-            sess_f.poll()  # idle tick drives the deadline trigger
-        staleness_ms.append(sess_f.pending_age_s * 1e3)
-        sess_f.flush()  # drain the tail below the policy thresholds
+        # LONE TAIL request, then silence: only the timer can flush it
+        lone_deadline_ok = None
+        if timer is not None:
+            live = np.flatnonzero(engine_f.live[:args.n])
+            live = live[~np.isin(live, list(submitted))]
+            h_lone = sess_f.submit(op="delete", rows=[int(rng_f.choice(live))])
+            t_lone = time.perf_counter()
+            while not h_lone.done and \
+                    time.perf_counter() - t_lone < 10.0:
+                time.sleep(sess_f.config.max_delay_s / 10)
+            lone_wait_ms = (time.perf_counter() - t_lone) * 1e3
+            lone_deadline_ok = bool(h_lone.done)
+            staleness_ms.append(lone_wait_ms)
+        sess_f.flush()  # drain anything below the policy thresholds
         jax.block_until_ready(sess_f.engine().params)
         t_total = time.perf_counter() - t0
+        if timer is not None:
+            timer.stop()
         group_rows = [len(e["rows"]) for e in sess_f.log]
         results["autoflush"] = {
             "max_pending": args.max_pending,
@@ -242,14 +260,19 @@ def unlearn_main(argv) -> None:
             "reasons": dict(sess_f.autoflush_reasons),
             "max_staleness_ms": float(max(staleness_ms)),
             "mean_group_rows": float(np.mean(group_rows)),
-            "wall_ms_per_req": t_total / args.requests * 1e3,
+            "wall_ms_per_req": t_total / max(1, args.requests) * 1e3,
+            "timer_interval_ms": (timer.interval_s * 1e3
+                                  if timer is not None else None),
+            "lone_request_flushed_by_timer": lone_deadline_ok,
         }
         print(f"auto-flush: {sess_f.autoflush_count} policy flushes "
               f"({sess_f.autoflush_reasons}), max staleness "
               f"{max(staleness_ms):.1f} ms (bound "
               f"{args.max_delay_ms:.0f} ms), mean coalesced group "
               f"{np.mean(group_rows):.1f} rows, "
-              f"{t_total / args.requests * 1e3:.1f} ms/req")
+              f"{t_total / max(1, args.requests) * 1e3:.1f} ms/req"
+              + (f"; lone tail request flushed by timer: "
+                 f"{lone_deadline_ok}" if timer is not None else ""))
 
     if args.bench_out:
         with open(args.bench_out, "w") as f:

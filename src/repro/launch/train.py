@@ -30,7 +30,7 @@ from repro.optim.optimizers import adamw
 from repro.optim.schedules import warmup_cosine
 from repro.train import checkpoint as ckpt
 from repro.train.loop import make_train_step
-from repro.train.state import TrainState, init_state
+from repro.train.state import init_state
 from repro.train.straggler import StepTimer
 
 

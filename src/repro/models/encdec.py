@@ -9,7 +9,7 @@ encoder memory (computed once at prefill, reused every step).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ post-up-projection (mLSTM, pf=2) and post-cell gated MLP (sLSTM, pf=4/3).
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

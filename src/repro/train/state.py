@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

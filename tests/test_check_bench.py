@@ -1,0 +1,163 @@
+"""tools/check_bench.py — the CI bench-regression gate.
+
+The contract under test (and the PR's acceptance criterion): CI FAILS —
+nonzero exit — when a bench metric regresses past its ratio threshold or
+a parity field changes, passes when the run matches its committed
+baseline, and writes the per-metric comparison table to
+$GITHUB_STEP_SUMMARY.
+"""
+
+import copy
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOOL = os.path.join(REPO, "tools", "check_bench.py")
+
+
+def shard_doc():
+    """A minimal-but-complete shard bench JSON covering every gated path."""
+    return {
+        "config": {"n": 800, "steps": 48, "window": 16, "devices": 8},
+        "variants": [
+            {"variant": "resident", "wall_s": 0.03,
+             "hbm_high_water_bytes": 1_600_000,
+             "approx_steps": 33, "explicit_steps": 15},
+            {"variant": "streamed", "wall_s": 0.05,
+             "hbm_high_water_bytes": 800_000,
+             "approx_steps": 33, "explicit_steps": 15,
+             "parity_vs_resident": 0.0},
+            {"variant": "mesh", "wall_s": 0.4,
+             "hbm_high_water_bytes": 228_000,
+             "approx_steps": 33, "explicit_steps": 15,
+             "parity_vs_resident": 2.6e-08},
+            {"variant": "sharded_streamed", "wall_s": 0.8,
+             "hbm_high_water_bytes": 228_000,
+             "approx_steps": 33, "explicit_steps": 15,
+             "parity_vs_resident": 2.6e-08,
+             "parity_vs_mesh_resident": 0.0},
+        ],
+        "hbm_reduction_mesh": 7.0,
+        "hbm_reduction_streamed": 2.0,
+        "hbm_reduction_sharded_streamed": 7.0,
+        "sharded_streamed_shard_windows": 3.0,
+        "wall_ratio_streamed": 1.7,
+        "wall_ratio_mesh": 13.0,
+        "wall_ratio_sharded_streamed": 27.0,
+    }
+
+
+def run_gate(tmp_path, current, baseline, env_extra=None):
+    cur = tmp_path / "current.json"
+    base = tmp_path / "baseline.json"
+    cur.write_text(json.dumps(current))
+    base.write_text(json.dumps(baseline))
+    env = dict(os.environ)
+    env.pop("GITHUB_STEP_SUMMARY", None)
+    if env_extra:
+        env.update(env_extra)
+    return subprocess.run(
+        [sys.executable, TOOL, "--suite", "shard", "--current", str(cur),
+         "--baseline", str(base)],
+        capture_output=True, text=True, env=env, cwd=REPO)
+
+
+class TestCheckBenchGate:
+    def test_identical_run_passes(self, tmp_path):
+        doc = shard_doc()
+        proc = run_gate(tmp_path, doc, doc)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "PASS" in proc.stdout
+
+    def test_wall_regression_past_threshold_fails(self, tmp_path):
+        base = shard_doc()
+        cur = copy.deepcopy(base)
+        cur["wall_ratio_streamed"] = base["wall_ratio_streamed"] * 5
+        proc = run_gate(tmp_path, cur, base)
+        assert proc.returncode == 1
+        assert "wall_ratio_streamed" in proc.stderr
+
+    def test_wobble_within_threshold_passes(self, tmp_path):
+        base = shard_doc()
+        cur = copy.deepcopy(base)
+        cur["wall_ratio_streamed"] = base["wall_ratio_streamed"] * 1.5
+        cur["hbm_reduction_streamed"] = base["hbm_reduction_streamed"] * 0.9
+        proc = run_gate(tmp_path, cur, base)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_exact_parity_field_change_fails(self, tmp_path):
+        """A 0.0 parity baseline is an invariant, not a measurement: ANY
+        nonzero value fails, however small."""
+        base = shard_doc()
+        cur = copy.deepcopy(base)
+        cur["variants"][1]["parity_vs_resident"] = 1e-9  # streamed
+        proc = run_gate(tmp_path, cur, base)
+        assert proc.returncode == 1
+        assert "parity_vs_resident" in proc.stderr
+
+    def test_nonzero_parity_may_wobble_not_drift(self, tmp_path):
+        base = shard_doc()
+        cur = copy.deepcopy(base)
+        cur["variants"][2]["parity_vs_resident"] = 5e-08  # < 1.5e-7 floor
+        assert run_gate(tmp_path, cur, base).returncode == 0
+        cur["variants"][2]["parity_vs_resident"] = 5e-06  # real drift
+        assert run_gate(tmp_path, cur, base).returncode == 1
+
+    def test_counter_change_fails(self, tmp_path):
+        base = shard_doc()
+        cur = copy.deepcopy(base)
+        cur["variants"][3]["approx_steps"] += 1
+        proc = run_gate(tmp_path, cur, base)
+        assert proc.returncode == 1
+
+    def test_config_mismatch_demands_new_baseline(self, tmp_path):
+        base = shard_doc()
+        cur = copy.deepcopy(base)
+        cur["config"]["steps"] = 96
+        proc = run_gate(tmp_path, cur, base)
+        assert proc.returncode == 1
+        assert "commit the new baseline" in proc.stdout
+
+    def test_missing_metric_fails(self, tmp_path):
+        base = shard_doc()
+        cur = copy.deepcopy(base)
+        del cur["sharded_streamed_shard_windows"]
+        proc = run_gate(tmp_path, cur, base)
+        assert proc.returncode == 1
+        assert "disappeared" in proc.stdout
+
+    def test_step_summary_table_written(self, tmp_path):
+        doc = shard_doc()
+        summary = tmp_path / "summary.md"
+        proc = run_gate(tmp_path, doc, doc,
+                        env_extra={"GITHUB_STEP_SUMMARY": str(summary)})
+        assert proc.returncode == 0
+        text = summary.read_text()
+        assert "| metric | baseline | current |" in text
+        assert "sharded_streamed_shard_windows" in text
+
+    def test_committed_shard_baseline_passes_against_itself(self):
+        """The committed CI baseline must satisfy its own gate — otherwise
+        the first CI run after merge is red by construction."""
+        path = os.path.join(REPO, "benchmarks", "baselines",
+                            "BENCH_shard.ci.json")
+        proc = subprocess.run(
+            [sys.executable, TOOL, "--suite", "shard", "--current", path,
+             "--baseline", path],
+            capture_output=True, text=True,
+            env={k: v for k, v in os.environ.items()
+                 if k != "GITHUB_STEP_SUMMARY"}, cwd=REPO)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_committed_serve_baseline_passes_against_itself(self):
+        path = os.path.join(REPO, "benchmarks", "baselines",
+                            "BENCH_serve.ci.json")
+        proc = subprocess.run(
+            [sys.executable, TOOL, "--suite", "serve", "--current", path,
+             "--baseline", path],
+            capture_output=True, text=True,
+            env={k: v for k, v in os.environ.items()
+                 if k != "GITHUB_STEP_SUMMARY"}, cwd=REPO)
+        assert proc.returncode == 0, proc.stdout + proc.stderr

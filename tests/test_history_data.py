@@ -10,7 +10,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.history import CODECS, HistoryMeta, TrainingHistory
+from repro.core.history import HistoryMeta, TrainingHistory
 from repro.data.dataset import Dataset
 from repro.data.sampler import addition_mask, batch_indices
 

@@ -142,6 +142,166 @@ class TestShardedOnlineMesh:
 
 
 @multi
+class TestShardedStreamedMesh:
+    """The composed store: host/disk tier + mesh placement
+    (`core.store.ShardedStreamer`) — the configuration `HistoryStore.create`
+    used to refuse."""
+
+    def _mlp_problem(self):
+        from repro.core.history import HistoryMeta
+        from repro.data.synthetic import binary_classification
+        from repro.models.simple import mlp_init, mlp_objective
+        ds = binary_classification(n=240, d=32, seed=0)
+        ds.columns["y"] = ds.columns["y"].astype(np.int32)
+        obj = mlp_objective(l2=1e-3)
+        meta = HistoryMeta(n=240, batch_size=80, seed=0, steps=24,
+                           lr_schedule=((0, 0.1),), l2=1e-3)
+        return ds, obj, meta, mlp_init(32, 24, 2, seed=1)
+
+    def test_replay_parity_and_shard_window_hbm(self, tmp_path):
+        """Host-tier sharded-streamed replay: ≤ TOL vs the single-device
+        resident run, EXACTLY 0.0 vs the sharded-resident run (identical
+        shard_map programs step for step), and per-device high-water
+        bounded by ~2 windows of the SHARD, not the full leaf."""
+        import dataclasses
+
+        from repro.core.deltagrad import (deltagrad_retrain,
+                                          sgd_train_with_cache)
+        from repro.core.store import PlacementPolicy
+        from repro.utils.tree import tree_norm
+        ds, obj, meta, p0 = self._mlp_problem()
+        window = 8
+        cfg = dataclasses.replace(_cfg(), stream_window=window)
+        pol = PlacementPolicy.local(N_DEV)
+        changed = np.arange(5)
+        _, h_res = sgd_train_with_cache(obj, p0, ds, meta, tier="stacked")
+        w1, s1 = deltagrad_retrain(obj, h_res, ds, changed, cfg)
+        w8r, s8r = deltagrad_retrain(obj, h_res, ds, changed, cfg,
+                                     placement=pol)
+        _, h_host = sgd_train_with_cache(obj, p0, ds, meta, tier="host")
+        w8s, s8s = deltagrad_retrain(obj, h_host, ds, changed, cfg,
+                                     placement=pol)
+        assert s8s.extra["store"] == "sharded_streamed"
+        assert _dist(w8s, w8r) == 0.0
+        rel = _dist(w8s, w1) / max(1e-12, float(tree_norm(w1)))
+        assert rel <= TOL
+        assert (s1.approx_steps, s1.explicit_steps, s1.grad_examples) == \
+            (s8s.approx_steps, s8s.explicit_steps, s8s.grad_examples)
+        # per-device high-water: ≤ ~2 windows of the SHARD (decoded window
+        # + one in-flight encoded window), far below the full sharded path
+        shard_window = s8r.extra["hbm_high_water"] * window / meta.steps
+        assert s8s.extra["hbm_high_water"] <= 3.1 * shard_window
+        assert s8s.extra["hbm_high_water"] < s1.extra["hbm_high_water"] / 6
+
+    def test_guard_on_disk_tier_parity(self, tmp_path):
+        import dataclasses
+
+        from repro.core.deltagrad import (deltagrad_retrain,
+                                          sgd_train_with_cache)
+        from repro.core.store import PlacementPolicy
+        ds, obj, meta, p0 = self._mlp_problem()
+        cfg = dataclasses.replace(_cfg(guard=True, curvature_eps=1e-8),
+                                  stream_window=8)
+        pol = PlacementPolicy.local(N_DEV)
+        _, h_res = sgd_train_with_cache(obj, p0, ds, meta, tier="stacked")
+        w8r, s8r = deltagrad_retrain(obj, h_res, ds, np.arange(5), cfg,
+                                     placement=pol)
+        _, h_disk = sgd_train_with_cache(obj, p0, ds, meta, tier="disk",
+                                         spill_dir=str(tmp_path))
+        w8s, s8s = deltagrad_retrain(obj, h_disk, ds, np.arange(5), cfg,
+                                     placement=pol)
+        assert _dist(w8s, w8r) == 0.0
+        assert s8s.guard_fallbacks == s8r.guard_fallbacks
+
+    def test_online_mixed_stream_parity_vs_oracle(self):
+        import dataclasses
+
+        from repro.core.deltagrad import sgd_train_with_cache
+        from repro.core.online import online_deltagrad
+        from repro.core.store import PlacementPolicy
+
+        def run(cfg, placement=None):
+            ds, obj, meta, p0 = _problem()
+            _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host")
+            add = ds.append({k: v[:1] for k, v in ds.columns.items()})
+            reqs = [("delete", 3), ("add", int(add[0])), ("delete", 17)]
+            return online_deltagrad(obj, h, ds, reqs, cfg,
+                                    placement=placement)
+
+        cfg = dataclasses.replace(_cfg(), stream_window=8)
+        w8, s8 = run(cfg, PlacementPolicy.local(N_DEV))
+        assert s8.per_request[0].extra["store"] == "sharded_streamed"
+        w_py, s_py = run(dataclasses.replace(cfg, impl="python"))
+        assert _dist(w8, w_py) <= TOL
+        for a, b in zip(s8.per_request, s_py.per_request):
+            assert (a.approx_steps, a.explicit_steps, a.grad_examples,
+                    a.skipped_steps) == \
+                (b.approx_steps, b.explicit_steps, b.grad_examples,
+                 b.skipped_steps)
+
+    def test_lossy_codec_write_back_sharded_stream(self):
+        """int8 rewrites on the composed store land through the codec into
+        the owning HISTORY entries (not just the device windows): a fresh
+        sharded engine rebuilt from the rewritten history serves the next
+        request exactly like the uninterrupted sharded stream."""
+        import dataclasses
+
+        from repro.core.deltagrad import sgd_train_with_cache
+        from repro.core.online import online_deltagrad
+        from repro.core.store import PlacementPolicy
+
+        cfg = dataclasses.replace(_cfg(), stream_window=8)
+        pol = PlacementPolicy.local(N_DEV)
+        reqs_all = [("delete", 3), ("delete", 17), ("delete", 40)]
+
+        def mk():
+            ds, obj, meta, p0 = _problem()
+            _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host",
+                                        codec="int8")
+            return ds, obj, h
+
+        ds1, obj1, h1 = mk()
+        w_ref, st = online_deltagrad(obj1, h1, ds1, reqs_all, cfg,
+                                     placement=pol)
+        assert st.per_request[0].extra["store"] == "sharded_streamed"
+        ds2, obj2, h2 = mk()
+        online_deltagrad(obj2, h2, ds2, reqs_all[:2], cfg, placement=pol)
+        # a NEW engine decodes the committed entries back off the host tier
+        w_resume, _ = online_deltagrad(obj2, h2, ds2, reqs_all[2:], cfg,
+                                       placement=pol)
+        assert _dist(w_resume, w_ref) == 0.0
+
+    def test_session_save_restore_composed_descriptor(self, tmp_path):
+        """save()/restore() round-trips the COMPOSED placement: host tier +
+        mesh descriptor + stream window rebuild a `ShardedStreamer`."""
+        import dataclasses
+
+        from repro.core.session import UnlearnerConfig, UnlearnerSession
+        from repro.core.store import PlacementPolicy
+        from repro.data.synthetic import binary_classification
+        from repro.models.simple import logreg_init, logreg_objective
+        obj = logreg_objective(l2=1e-3)
+        cfg = UnlearnerConfig(steps=30, batch_size=64, lr=0.2, seed=0,
+                              history_tier="host",
+                              deltagrad=dataclasses.replace(
+                                  _cfg(), stream_window=8),
+                              placement=PlacementPolicy.local(N_DEV))
+        ds = binary_classification(n=200, d=16, seed=0)
+        sess = UnlearnerSession(obj, logreg_init(16, seed=1), ds, cfg)
+        sess.fit()
+        sess.delete([3, 17]).result()
+        assert sess.engine().store.kind == "sharded_streamed"
+        sess.save(str(tmp_path))
+        restored = UnlearnerSession.restore(str(tmp_path), obj)
+        assert restored.config.placement.mesh_shape == (N_DEV,)
+        assert restored.config.history_tier == "host"
+        assert restored.engine().store.kind == "sharded_streamed"
+        a = sess.delete([40]).params
+        b = restored.delete([40]).params
+        assert _dist(a, b) == 0.0
+
+
+@multi
 class TestShardedSession:
     def test_save_restore_under_sharded_placement(self, tmp_path):
         from repro.core.session import UnlearnerConfig, UnlearnerSession
@@ -206,3 +366,51 @@ def test_sharded_parity_subprocess_smoke():
                               os.path.abspath(__file__))))
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "SHARD_OK" in proc.stdout
+
+
+def test_sharded_streamed_subprocess_smoke():
+    """Always-on tier-1 coverage for the COMPOSED store: a host-tier
+    history placed on an 8-way forced-host mesh must stream per-shard
+    windows and match the sharded-RESIDENT replay exactly."""
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+            " --xla_force_host_platform_device_count={N_DEV}")
+        import dataclasses
+        import numpy as np, jax
+        assert jax.local_device_count() == {N_DEV}
+        from repro.core.deltagrad import (DeltaGradConfig,
+            deltagrad_retrain, sgd_train_with_cache)
+        from repro.core.history import HistoryMeta
+        from repro.core.store import PlacementPolicy
+        from repro.data.synthetic import binary_classification
+        from repro.models.simple import logreg_init, logreg_objective
+        from repro.utils.tree import tree_norm, tree_sub
+        ds = binary_classification(n=120, d=16, seed=0)
+        obj = logreg_objective(l2=1e-3)
+        meta = HistoryMeta(n=120, batch_size=48, seed=0, steps=18,
+                           lr_schedule=((0, 0.2),), l2=1e-3)
+        p0 = logreg_init(16, seed=1)
+        cfg = DeltaGradConfig(period=5, burn_in=6, history_size=2,
+                              stream_window=6)
+        pol = PlacementPolicy.local({N_DEV})
+        _, h_res = sgd_train_with_cache(obj, p0, ds, meta, tier="stacked")
+        w_res, _ = deltagrad_retrain(obj, h_res, ds, np.arange(4), cfg,
+                                     placement=pol)
+        _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host")
+        w_str, st = deltagrad_retrain(obj, h, ds, np.arange(4), cfg,
+                                      placement=pol)
+        assert st.extra["store"] == "sharded_streamed", st.extra["store"]
+        assert st.extra["windows"] > 1, st.extra
+        d = float(tree_norm(tree_sub(w_str, w_res)))
+        assert d == 0.0, d
+        print("SHARD_STREAM_OK", d)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], text=True,
+                          capture_output=True, env=env,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "SHARD_STREAM_OK" in proc.stdout

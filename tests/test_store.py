@@ -186,13 +186,77 @@ class TestTierErgonomics:
         with pytest.raises(ValueError, match="int8"):
             TrainingHistory(HistoryMeta(**META), tier="host", codec="fp4")
 
-    def test_sharded_streaming_not_silently_wrong(self):
+    def test_sharded_streaming_mesh_vs_devices_mismatch(self):
+        """Composed-store failure mode: a shard count the process cannot
+        build a mesh for fails with an actionable ValueError, not a jax
+        internals error (this tier-1 process has 1 device)."""
+        import jax
         from repro.core.store import PlacementPolicy
         ds, obj, meta, p0 = _problem()
         _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host")
-        with pytest.raises(NotImplementedError, match="sharded streaming"):
+        want = jax.device_count() * 8
+        with pytest.raises(ValueError, match="mesh"):
             HistoryStore.create(h, placement=PlacementPolicy(
-                mesh_shape=(8,), axis_names=("data",)))
+                mesh_shape=(want,), axis_names=("data",)))
+
+    def test_sharded_disk_tier_without_spill_dir(self):
+        """Composed-store failure mode: disk tier under a sharded placement
+        still surfaces the spill_dir requirement at history construction."""
+        from repro.core.session import UnlearnerConfig, UnlearnerSession
+        from repro.core.store import PlacementPolicy
+        ds = binary_classification(n=META["n"], d=16, seed=0)
+        cfg = UnlearnerConfig(steps=META["steps"],
+                              batch_size=META["batch_size"], lr=0.2, seed=0,
+                              history_tier="disk",
+                              placement=PlacementPolicy(
+                                  mesh_shape=(8,), axis_names=("data",)),
+                              deltagrad=CFG)
+        sess = UnlearnerSession(logreg_objective(l2=META["l2"]),
+                                logreg_init(16, seed=1), ds, cfg)
+        with pytest.raises(ValueError, match="spill_dir"):
+            sess.fit()
+
+
+class TestAdaptivePrefetch:
+    def _store(self, window=5, **kw):
+        ds, obj, meta, p0 = _problem()
+        _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host")
+        return SegmentStreamer(h, window=window, **kw)
+
+    def test_depth_stays_one_when_host_keeps_up(self):
+        import time as _time
+        store = self._store(window=8)
+        for a in range(0, META["steps"], 8):
+            store.window(a, min(META["steps"], a + 8))
+            _time.sleep(0.01)  # a consumer slower than sub-ms host stacking
+        assert store.depth_used == 1
+
+    def test_depth_grows_when_stacking_slower_than_scan(self):
+        import time as _time
+        # explicit stage_threads: the depth cap is the worker count, and
+        # this box may have too few spare cores for the default to move
+        store = self._store(window=5, stage_threads=4)
+        stage = store._stage_window
+
+        def slow_stage(wid):
+            _time.sleep(0.05)
+            return stage(wid)
+
+        store._stage_window = slow_stage
+        for a in range(0, META["steps"], 5):
+            store.window(a, min(META["steps"], a + 5))
+            # a fast consumer: the scan "finishes" immediately, so host
+            # stacking (50 ms) dominates and the depth rule must kick in
+        assert store.depth_used > 1
+        assert store.depth_used <= store.max_prefetch
+
+    def test_prefetch_depth_reported_in_stats(self):
+        ds, obj, meta, p0 = _problem()
+        _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host")
+        cfg = dataclasses.replace(CFG, stream_window=8)
+        _, st = deltagrad_retrain(obj, h, ds, np.arange(6), cfg)
+        assert st.extra["prefetch_depth"] >= 1
+        assert st.extra["host_stage_high"] > 0
 
 
 class TestSessionAutoFlush:
@@ -226,6 +290,29 @@ class TestSessionAutoFlush:
         assert sess.poll() and h.done
         assert sess.autoflush_reasons["max_delay_s"] == 1
         assert sess.pending_age_s == 0.0
+
+    def test_timer_thread_holds_deadline_with_zero_arrivals(self):
+        """ROADMAP serve-path item: with the daemon timer running, a LONE
+        pending request flushes within max_delay_s even though nothing
+        ever calls poll() or submits again."""
+        import time
+        sess = self._session(max_delay_s=0.05)
+        timer = sess.start_autoflush_timer()
+        try:
+            h = sess.submit(op="delete", rows=[1])
+            deadline = time.monotonic() + 2.0  # generous CI budget
+            while not h.done and time.monotonic() < deadline:
+                time.sleep(0.005)
+            assert h.done
+            assert sess.autoflush_reasons["max_delay_s"] == 1
+            assert timer.ticks >= 1
+        finally:
+            timer.stop()
+
+    def test_timer_without_deadline_rejected(self):
+        sess = self._session()
+        with pytest.raises(ValueError, match="max_delay_s"):
+            sess.start_autoflush_timer()
 
     def test_no_policy_no_autoflush(self):
         sess = self._session()

@@ -1,0 +1,241 @@
+"""CI bench-regression gate over the committed BENCH_*.json baselines.
+
+The repo's perf story lives in machine-readable bench JSONs
+(`BENCH_serve.json`, `BENCH_shard.json`, ...).  CI reproduces reduced
+versions of those runs on every push; this tool makes CI *enforce* the
+trajectory instead of merely uploading artifacts: it compares the
+CI-produced JSON against a committed baseline metric by metric and fails
+the job when one regresses.
+
+Rules (per metric, declared in `SUITES` below):
+
+  * ``ratio_max`` — current must be <= baseline * threshold (lower is
+    better; used for walls/latency, with LOOSE thresholds because absolute
+    times vary across runners — the tight gates are the relatives the
+    benches emit, e.g. ``wall_ratio_streamed``);
+  * ``ratio_min`` — current must be >= baseline * threshold (higher is
+    better; HBM reductions, speedups, accuracy);
+  * ``parity``    — parity fields are gated EXACTLY: a baseline of 0.0
+    must stay 0.0 (the streamed-vs-resident and sharded-streamed-vs-mesh
+    invariants), a nonzero baseline may not drift past
+    ``max(4 * baseline, 1.5e-7)``;
+  * ``exact``     — value must equal the baseline (step counters, flags).
+
+The current/baseline ``config`` sections must match — a config change
+invalidates every comparison, so it fails with "update the baseline"
+rather than comparing apples to oranges.  Baselines for the CI-sized runs
+live under ``benchmarks/baselines/``; refresh them deliberately (rerun
+the bench with the CI flags and commit) when a change legitimately moves
+a gated metric.
+
+A per-metric markdown table is appended to ``$GITHUB_STEP_SUMMARY`` when
+set (and always printed to stdout).
+
+    python tools/check_bench.py --suite serve \
+        --current BENCH_serve.ci.json \
+        --baseline benchmarks/baselines/BENCH_serve.ci.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+from typing import Any, List, Optional, Tuple
+
+PARITY_ABS_FLOOR = 1.5e-7  # the repo-wide float32 parity tolerance
+PARITY_REL_SLACK = 4.0  # nonzero parity may wobble, not drift
+
+# metric: (json path, mode, threshold, note).  Paths use dots for keys and
+# [key=value] to select a dict out of a list, e.g.
+# "variants[variant=mesh].parity_vs_resident".
+SUITES = {
+    "serve": [
+        ("latency_ms.dispatch.p50", "ratio_max", 25.0,
+         "per-request dispatch latency (cross-runner slack)"),
+        ("latency_ms.blocked.p50", "ratio_max", 25.0,
+         "per-request blocked latency"),
+        ("compile_s", "ratio_max", 25.0, "first-request compile"),
+        ("accuracy", "ratio_min", 0.95, "post-stream model accuracy"),
+        ("coalesce.per_request_speedup", "ratio_min", 0.2,
+         "coalesced burst vs serial"),
+        ("coalesce.parity_vs_python", "parity", None,
+         "coalesced scan vs python oracle"),
+        ("coalesce.serial_vs_coalesced_dist", "ratio_max", 50.0,
+         "group-vs-serial semantic drift"),
+        ("autoflush.max_staleness_ms", "ratio_max", 20.0,
+         "pending-request staleness bound"),
+        ("autoflush.lone_request_flushed_by_timer", "exact", None,
+         "timer thread enforces max_delay_s with zero arrivals"),
+    ],
+    "shard": [
+        ("variants[variant=streamed].parity_vs_resident", "parity", None,
+         "streamed vs resident (exactly 0.0)"),
+        ("variants[variant=mesh].parity_vs_resident", "parity", None,
+         "8-way mesh vs single device"),
+        ("variants[variant=sharded_streamed].parity_vs_mesh_resident",
+         "parity", None, "sharded-streamed vs sharded-resident (0.0)"),
+        ("variants[variant=sharded_streamed].parity_vs_resident", "parity",
+         None, "sharded-streamed vs single device"),
+        ("variants[variant=sharded_streamed].approx_steps", "exact", None,
+         "replay step plan"),
+        ("variants[variant=sharded_streamed].explicit_steps", "exact", None,
+         "replay step plan"),
+        ("hbm_reduction_mesh", "ratio_min", 0.9,
+         "per-device HBM cut by sharding"),
+        ("hbm_reduction_streamed", "ratio_min", 0.7,
+         "per-device HBM cut by streaming (prefetch-depth jitter)"),
+        ("hbm_reduction_sharded_streamed", "ratio_min", 0.7,
+         "per-device HBM cut by the composed store"),
+        ("sharded_streamed_shard_windows", "ratio_max", 2.0,
+         "high-water in shard-window units (~2, never the full leaf)"),
+        # mesh walls on 2-core CI runners carry large scheduling jitter
+        # (8 virtual devices share 2 cores); these thresholds catch
+        # fell-off-the-compiled-path regressions, not jitter
+        ("wall_ratio_streamed", "ratio_max", 3.0,
+         "streaming overhead vs resident"),
+        ("wall_ratio_mesh", "ratio_max", 5.0,
+         "mesh overhead vs resident"),
+        ("wall_ratio_sharded_streamed", "ratio_max", 5.0,
+         "composed-store overhead vs resident"),
+    ],
+}
+
+_SEG = re.compile(r"^(?P<key>[^\[\]]+)(\[(?P<sel>[^=\]]+)=(?P<val>[^\]]+)\])?$")
+
+
+def resolve(doc: Any, path: str):
+    """Walk `doc` by a dotted path; [k=v] selects a dict from a list."""
+    cur = doc
+    for part in path.split("."):
+        m = _SEG.match(part)
+        if m is None:
+            raise KeyError(path)
+        cur = cur[m.group("key")]
+        if m.group("sel") is not None:
+            want = m.group("val")
+            cur = next(d for d in cur
+                       if str(d.get(m.group("sel"))) == want)
+    return cur
+
+
+def check_metric(mode: str, threshold: Optional[float], base, cur
+                 ) -> Tuple[bool, str]:
+    """(ok, rule-as-text) for one metric."""
+    if mode == "exact":
+        return cur == base, "== baseline"
+    if mode == "parity":
+        if base == 0.0:
+            return cur == 0.0, "exactly 0.0"
+        bound = max(PARITY_REL_SLACK * float(base), PARITY_ABS_FLOOR)
+        return float(cur) <= bound, f"<= {bound:.3g}"
+    if mode == "ratio_max":
+        return float(cur) <= float(base) * threshold, f"<= {threshold}x"
+    if mode == "ratio_min":
+        return float(cur) >= float(base) * threshold, f">= {threshold}x"
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def compare(suite: str, current: dict, baseline: dict
+            ) -> Tuple[List[dict], bool]:
+    rows: List[dict] = []
+    ok_all = True
+
+    cfg_cur = {k: v for k, v in current.get("config", {}).items()
+               if k != "out"}
+    cfg_base = {k: v for k, v in baseline.get("config", {}).items()
+                if k != "out"}
+    if cfg_cur != cfg_base:
+        drift = sorted(k for k in set(cfg_cur) | set(cfg_base)
+                       if cfg_cur.get(k) != cfg_base.get(k))
+        rows.append({"metric": "config", "baseline": "(committed)",
+                     "current": f"differs: {', '.join(drift)}",
+                     "rule": "must match", "ok": False,
+                     "note": "config changed — rerun the bench with the CI "
+                             "flags and commit the new baseline"})
+        return rows, False
+
+    for path, mode, threshold, note in SUITES[suite]:
+        try:
+            base = resolve(baseline, path)
+        except (KeyError, StopIteration):
+            rows.append({"metric": path, "baseline": "MISSING",
+                         "current": "-", "rule": mode, "ok": False,
+                         "note": "metric absent from baseline — refresh it"})
+            ok_all = False
+            continue
+        try:
+            cur = resolve(current, path)
+        except (KeyError, StopIteration):
+            rows.append({"metric": path, "baseline": _fmt(base),
+                         "current": "MISSING", "rule": mode, "ok": False,
+                         "note": "metric disappeared from the bench output"})
+            ok_all = False
+            continue
+        ok, rule = check_metric(mode, threshold, base, cur)
+        rows.append({"metric": path, "baseline": _fmt(base),
+                     "current": _fmt(cur), "rule": rule, "ok": ok,
+                     "note": note})
+        ok_all = ok_all and ok
+    return rows, ok_all
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return str(v)
+    if isinstance(v, int):
+        return str(v)
+    return f"{v:.6g}"
+
+
+def render_table(suite: str, rows: List[dict], ok_all: bool) -> str:
+    head = (f"## Bench regression gate — {suite} "
+            f"({'PASS' if ok_all else 'FAIL'})\n\n"
+            "| metric | baseline | current | rule | status |\n"
+            "|---|---|---|---|---|\n")
+    body = "".join(
+        f"| {r['metric']} | {r['baseline']} | {r['current']} | {r['rule']} "
+        f"| {'✅' if r['ok'] else '❌ ' + r['note']} |\n"
+        for r in rows)
+    return head + body
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--suite", required=True, choices=sorted(SUITES))
+    ap.add_argument("--current", required=True,
+                    help="bench JSON produced by THIS run")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON")
+    ap.add_argument("--summary", default=None,
+                    help="markdown summary path (default: "
+                         "$GITHUB_STEP_SUMMARY when set)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    rows, ok_all = compare(args.suite, current, baseline)
+    table = render_table(args.suite, rows, ok_all)
+    print(table)
+
+    summary = args.summary or os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(table + "\n")
+
+    if not ok_all:
+        bad = [r["metric"] for r in rows if not r["ok"]]
+        print(f"FAIL: {len(bad)} metric(s) regressed past threshold: "
+              f"{', '.join(bad)}", file=sys.stderr)
+        return 1
+    print(f"OK: all {len(rows)} {args.suite} metrics within thresholds")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
