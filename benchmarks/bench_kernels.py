@@ -46,6 +46,46 @@ def main():
              "hbm_model_fused_mb": f"{fused_reads/1e6:.0f}",
              "traffic_reduction": f"{naive_reads/fused_reads:.2f}x"}))
 
+    # fused dequant + DeltaGrad update (decode-in-kernel streamed
+    # histories) vs the two-pass chain that materializes the decoded f32
+    # entry first.  CPU walls are near-parity (XLA fuses both); the model
+    # columns carry the claim: int8 history reads 1 B/param + f32 keyframe
+    # amortized over key_interval=16, vs 4 B/param for f32 — and a history
+    # step stores TWO trees (params + grads), so 2.5 vs 8 B/param/step.
+    from repro.kernels.dequant_update.ref import dequant_update_ref
+
+    def dequant_two_pass(w, q, bv, gc, lr, n, dB, sign, scale, base):
+        g = (q.astype(jnp.float32) * scale + base).astype(jnp.float32)
+        denom = jnp.maximum(n - sign * dB, 1.0)
+        num = n * (g + bv) - sign * dB * gc
+        return w - lr * num / denom
+
+    for p in (1 << 20, 1 << 23):
+        x = rng.normal(size=(p,)).astype(np.float32)
+        scale = np.float32(np.abs(x).max() / 127.0)
+        q = jnp.asarray(np.clip(np.round(x / scale), -127, 127)
+                        .astype(np.int8))
+        base = jnp.asarray(rng.normal(size=(p,)).astype(np.float32))
+        w, bv, gc = (jnp.asarray(rng.normal(size=(p,)).astype(np.float32))
+                     for _ in range(3))
+        sargs = (jnp.float32(0.1), jnp.float32(512.0), jnp.float32(3.0),
+                 jnp.float32(1.0), jnp.float32(scale))
+        ff = jax.jit(dequant_update_ref)
+        ft = jax.jit(dequant_two_pass)
+        tf = timeit(lambda: jax.block_until_ready(
+            ff(w, q, bv, gc, *sargs, base)))
+        tt = timeit(lambda: jax.block_until_ready(
+            ft(w, q, bv, gc, *sargs, base)))
+        f32_bps, delta_bps = 8.0, 2 * (1 + 4 / 16)
+        rows.append(emit(
+            f"dequant_update_p{p}", tf,
+            {"two_pass_us": f"{tt*1e6:.0f}",
+             "fused_us": f"{tf*1e6:.0f}",
+             "cpu_gbps": f"{(p * (1 + 4 * 4))/tf/1e9:.2f}",
+             "f32_bytes_per_param_step": f"{f32_bps:.1f}",
+             "delta_int8_bytes_per_param_step": f"{delta_bps:.1f}",
+             "history_bytes_reduction": f"{f32_bps/delta_bps:.2f}x"}))
+
     # attention: blockwise (flash-pattern) vs dense materialization
     from repro.models.layers import blockwise_attention
 

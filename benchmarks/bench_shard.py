@@ -14,7 +14,17 @@ path to the compiled replay scan, on the same problem:
                      (`ShardedStreamer`): per-shard encoded window
                      segments, the only configuration that serves
                      histories too big for any single host's HBM and any
-                     single device.  Also subprocess-isolated.
+                     single device.  Also subprocess-isolated;
+  * ``delta_streamed`` / ``delta_sharded_streamed`` — the same two
+                     streamed placements under the ``delta_int8`` codec:
+                     int8 residuals against per-key-window keyframes kept
+                     ENCODED on device and dequantized inside the scan
+                     (``stream_decode="auto"`` → kernel).  These rows feed
+                     the ``delta_int8`` derived section: per-host RAM and
+                     windowed-spill disk bytes vs the f32 streamed rows,
+                     wall ratio vs ``sharded_streamed``, kernel-vs-fetch
+                     decode parity (exactly 0.0), and parity vs the
+                     per-step python oracle.
 
 Reported per variant: total replay wall, per-segment wall, history HBM
 high-water per device, per-host host-RAM footprint (encoded path +
@@ -74,11 +84,15 @@ def run_variant(args, variant: str):
     ds, obj, meta, p0, changed = build_problem(args)
     cfg = DeltaGradConfig(period=args.period, burn_in=args.burn_in,
                           history_size=2, stream_window=args.window)
-    streamed = variant in ("streamed", "sharded_streamed")
+    delta = variant.startswith("delta_")
+    base_variant = variant[len("delta_"):] if delta else variant
+    codec = "delta_int8" if delta else "f32"
+    streamed = base_variant in ("streamed", "sharded_streamed")
     tier = "host" if streamed else "stacked"
-    _, hist = sgd_train_with_cache(obj, p0, ds, meta, tier=tier)
+    _, hist = sgd_train_with_cache(obj, p0, ds, meta, tier=tier,
+                                   codec=codec)
     placement = PlacementPolicy.local(args.devices) \
-        if variant in ("mesh", "sharded_streamed") else None
+        if base_variant in ("mesh", "sharded_streamed") else None
     # ONE store across reps: the sharded variant's compiled shard_map
     # programs are cached on the store, so the timed runs measure replay,
     # not retrace/compile (cf. deltagrad_retrain's store= docstring)
@@ -89,7 +103,7 @@ def run_variant(args, variant: str):
     # streamed variants that means a separate stacked-tier recording — the
     # two recorders are bit-identical, see tests/test_store.py)
     w_ref = w_mesh = None
-    if variant != "resident":
+    if variant != "resident" and not delta:
         ref_hist = hist
         if tier != "stacked":
             _, ref_hist = sgd_train_with_cache(obj, p0, ds, meta,
@@ -138,6 +152,43 @@ def run_variant(args, variant: str):
     if w_mesh is not None:
         out["parity_vs_mesh_resident"] = float(
             tree_norm(tree_sub(w, w_mesh)))
+    if delta:
+        import dataclasses
+        import tempfile
+        out["compression_ratio"] = float(store.compression_ratio)
+        out["encoded_bytes_high"] = int(store.enc_bytes_high)
+        # decode parity: keeping windows encoded and dequantizing in-scan
+        # must be BITWISE identical to decode-on-fetch
+        store_f = HistoryStore.create(hist, placement=placement,
+                                      window=args.window, decode="fetch")
+        w_f, _ = deltagrad_retrain(obj, hist, ds, changed, cfg,
+                                   store=store_f)
+        out["kernel_vs_fetch"] = float(tree_norm(tree_sub(w, w_f)))
+        if base_variant == "streamed":
+            # correctness envelope vs the per-step python oracle (same
+            # encoded history, eager decode)
+            w_py, _ = deltagrad_retrain(
+                obj, hist, ds, changed,
+                dataclasses.replace(cfg, impl="python"))
+            out["parity_vs_python"] = float(tree_norm(tree_sub(w, w_py))) \
+                / max(1e-12, float(tree_norm(w_py)))
+            # disk tier: windowed spill (one .npz per stream window),
+            # f32 vs delta_int8 bytes on disk for the same run
+            for name, cdc in (("f32", "f32"), ("delta", "delta_int8")):
+                with tempfile.TemporaryDirectory() as td:
+                    _, hd = sgd_train_with_cache(obj, p0, ds, meta,
+                                                 tier="disk", codec=cdc,
+                                                 spill_dir=td)
+                    out[f"disk_bytes_{name}"] = int(hd.disk_nbytes())
+                    if cdc == "delta_int8":
+                        out["spill_io_write_s"] = float(hd.io_write_s)
+        else:
+            # the composed store vs the single-device streamed replay of
+            # the SAME encoded history (mesh reduction reassociation only)
+            w_1, _ = deltagrad_retrain(obj, hist, ds, changed, cfg)
+            out["sharded_vs_streamed"] = float(
+                tree_norm(tree_sub(w, w_1))) \
+                / max(1e-12, float(tree_norm(w_1)))
     return out
 
 
@@ -173,11 +224,13 @@ def main(argv=None):
     flags = [f"--{k.replace('_', '-')}={v}" for k, v in vars(args).items()
              if k not in ("role", "variant", "quick", "out")]
     rows = []
-    for variant in ("resident", "streamed", "mesh", "sharded_streamed"):
+    for variant in ("resident", "streamed", "mesh", "sharded_streamed",
+                    "delta_streamed", "delta_sharded_streamed"):
         # every variant runs in its own subprocess so the mesh ones can
         # force the host-platform device count before jax initializes
         env = dict(os.environ, PYTHONPATH="src")
-        if variant in ("mesh", "sharded_streamed"):
+        if variant in ("mesh", "sharded_streamed",
+                       "delta_sharded_streamed"):
             env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
                                 " --xla_force_host_platform_device_count="
                                 f"{args.devices}").strip()
@@ -226,6 +279,37 @@ def main(argv=None):
         "wall_ratio_mesh": pick("mesh", "wall_s") / base_wall,
         "wall_ratio_sharded_streamed":
             pick("sharded_streamed", "wall_s") / base_wall,
+        # decode-in-kernel compressed histories: the delta_int8 rows vs
+        # the f32 streamed placements they supersede.  host_ram_reduction
+        # and disk_bytes_reduction are THE capacity claims (per-host RAM
+        # and windowed-spill bytes); wall_ratio_vs_sharded_streamed is
+        # the cost of serving them; the parity fields are the decode
+        # correctness story (kernel_vs_fetch exactly 0.0).
+        "delta_int8": {
+            "host_ram_reduction":
+                pick("sharded_streamed", "host_ram_bytes")
+                / max(1, pick("delta_sharded_streamed", "host_ram_bytes")),
+            "host_ram_reduction_streamed":
+                pick("streamed", "host_ram_bytes")
+                / max(1, pick("delta_streamed", "host_ram_bytes")),
+            "disk_bytes_reduction":
+                pick("delta_streamed", "disk_bytes_f32")
+                / max(1, pick("delta_streamed", "disk_bytes_delta")),
+            "hbm_reduction_vs_sharded_streamed":
+                ss_hbm / max(1, pick("delta_sharded_streamed",
+                                     "hbm_high_water_bytes")),
+            "wall_ratio_vs_sharded_streamed":
+                pick("delta_sharded_streamed", "wall_s")
+                / pick("sharded_streamed", "wall_s"),
+            "compression_ratio":
+                pick("delta_streamed", "compression_ratio"),
+            "parity_vs_python": pick("delta_streamed", "parity_vs_python"),
+            "kernel_vs_fetch":
+                max(pick("delta_streamed", "kernel_vs_fetch"),
+                    pick("delta_sharded_streamed", "kernel_vs_fetch")),
+            "sharded_vs_streamed":
+                pick("delta_sharded_streamed", "sharded_vs_streamed"),
+        },
     }
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)

@@ -100,10 +100,12 @@ def sgd_train_with_cache(
     spill_dir: Optional[str] = None,
     impl: str = "scan",
     window: int = 0,
+    spill_window: Optional[int] = None,
 ) -> Tuple[Any, TrainingHistory]:
     """Train w_t by plain SGD (the paper's optimizer), caching (w_t, g_t)."""
     return run_training(objective, params0, ds, meta, tier=tier, codec=codec,
-                        spill_dir=spill_dir, impl=impl, window=window)
+                        spill_dir=spill_dir, impl=impl, window=window,
+                        spill_window=spill_window)
 
 
 def baseline_retrain(

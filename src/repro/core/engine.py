@@ -101,8 +101,9 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core.history import HistoryMeta, TrainingHistory
 from repro.core.lbfgs import LbfgsBuffer, lbfgs_hvp_stacked_pytree
-from repro.core.store import (HistoryStore, entry_at, make_psum_grad_fn,
-                              pad_schedule_batch)
+from repro.core.store import (EncodedLeaf, HistoryStore, auto_window,
+                              entry_at, is_encoded_window,
+                              make_psum_grad_fn, pad_schedule_batch)
 from repro.data.dataset import Dataset
 from repro.data.sampler import (ReplaySchedule, addition_mask,
                                 batch_indices, batch_indices_all,
@@ -130,6 +131,10 @@ class DeltaGradConfig:
     # steps per device-resident window when the history lives on an offload
     # tier (served by core.store.SegmentStreamer); 0 → auto
     stream_window: int = 0
+    # streamed-window read path: "kernel" keeps windows ENCODED on device
+    # and the scan dequantizes per step, "fetch" decodes each window to
+    # f32 on arrival, "auto" → kernel for every non-f32 codec
+    stream_decode: str = "auto"
 
     def is_explicit(self, t: int) -> bool:
         if t <= self.burn_in:
@@ -297,6 +302,54 @@ def _flat_fused_update(params, g_t, bv, g_changed, lr, B, dB, sign: int,
     return unravel(out)
 
 
+def _enc_slice_args(leaf: EncodedLeaf, i):
+    """(q, scale, base) of step ``i`` of one encoded window leaf, flattened
+    for the `kernels.dequant_update` ops (scale is per (leaf, step), which
+    is why the fused dequant kernels route PER LEAF)."""
+    q = leaf.q[i].reshape(-1)
+    scale = leaf.scale[i] if leaf.scale is not None else jnp.float32(1.0)
+    base = None if leaf.base is None \
+        else leaf.base[leaf.kidx[i]].reshape(-1)
+    return q, scale, base
+
+
+def _dequant_sub_tree(params, W, i, fused: str):
+    """``v = params - w_t`` with the cached parameter operand consumed
+    ENCODED — the `dequant_sub` Pallas kernel dequantizes in registers, so
+    no f32 copy of w_t is ever materialized."""
+    from repro.kernels.dequant_update.ops import dequant_sub
+
+    def one(p, leaf):
+        if not isinstance(leaf, EncodedLeaf):
+            return p - leaf[i]
+        q, scale, base = _enc_slice_args(leaf, i)
+        out = dequant_sub(p.reshape(-1), q, scale, base,
+                          interpret=fused == "interpret")
+        return out.reshape(p.shape)
+
+    return jax.tree.map(one, params, W)
+
+
+def _dequant_fused_update(params, G, i, bv, g_changed, lr, B, dB, sign: int,
+                          fused: str):
+    """The non-momentum approx update with the cached gradient operand
+    consumed ENCODED — `dequant_update` fuses the dequant with the
+    leave-r-out step, per leaf (per-leaf scales)."""
+    from repro.kernels.dequant_update.ops import dequant_update
+
+    def one(p, leaf, b, c):
+        if not isinstance(leaf, EncodedLeaf):
+            denom = jnp.maximum(B - sign * dB, 1.0)
+            return p - lr * (B * (leaf[i] + b) - sign * dB * c) / denom
+        q, scale, base = _enc_slice_args(leaf, i)
+        out = dequant_update(p.reshape(-1), q, b.reshape(-1), c.reshape(-1),
+                             lr, B, dB, sign, scale, base,
+                             interpret=fused == "interpret")
+        return out.reshape(p.shape)
+
+    return jax.tree.map(one, params, G, bv, g_changed)
+
+
 def _approx_math(g_t, bv, g_changed, B, dB, sign: int):
     """The paper's eq. (2)/(S7) leave-r-out (add-r) gradient estimate
     g^a = (B*(g_t + Bv) - sign*dB*g_c) / max(B - sign*dB, 1) — the ONE
@@ -382,17 +435,25 @@ def run_training(
     spill_dir: Optional[str] = None,
     impl: str = "scan",
     window: int = 0,
+    spill_window: Optional[int] = None,
 ) -> Tuple[Any, TrainingHistory]:
     """Train w_t by plain SGD (the paper's optimizer), caching (w_t, g_t).
 
     ``window`` bounds the recorder's device high-water on offload tiers
     (steps scanned per spill; 0 → the same auto default
-    `core.store.SegmentStreamer` uses on the read path)."""
+    `core.store.SegmentStreamer` uses on the read path).  On the disk
+    tier, spills batch ONE .npz per ``spill_window`` steps (None → match
+    the stream window; 1 → the legacy one-file-per-step layout, which
+    stays readable either way)."""
     grad_fn = objective.make_grad_fn()
     momentum = bool(meta.momentum)
     vel = _tree_zeros(params0) if momentum else None
     B = min(meta.batch_size, meta.n)
-    history = TrainingHistory(meta, tier=tier, codec=codec, spill_dir=spill_dir)
+    if spill_window is None:
+        spill_window = auto_window(meta.steps, window) if tier == "disk" \
+            else 0
+    history = TrainingHistory(meta, tier=tier, codec=codec,
+                              spill_dir=spill_dir, spill_window=spill_window)
 
     if impl == "python":
         ones = np.ones(B, dtype=np.float32)
@@ -424,7 +485,6 @@ def run_training(
         # time and spill each window's (Ws, Gs) through the codec — the
         # device never holds more than one window of the path (the read
         # path mirrors this via core.store.SegmentStreamer)
-        from repro.core.store import auto_window
         L = auto_window(meta.steps, window)
         params = params0
         for a in range(0, meta.steps, L):
@@ -569,26 +629,45 @@ def _replay_segment_impl(params, vel, t0, off, W, G, cols,
     Under `core.store.ShardedReplay` this same body runs inside shard_map:
     `grad_fn` is the psum-reducing variant (the schedule arrives
     batch-sharded), `gather` all-gathers sharded history leaves one step
-    at a time, and (`axis`, `n_shards`) route the fused kernel per shard."""
+    at a time, and (`axis`, `n_shards`) route the fused kernel per shard.
+
+    ENCODED windows (`EncodedLeaf` leaves — the streamers' kernel decode
+    mode) dequantize per step inside this scan.  On the default jnp path
+    `entry_at` slice-decodes (XLA fuses the elementwise dequant); the
+    unsharded non-momentum Pallas path instead routes the encoded leaves
+    straight into `kernels.dequant_update` — dequant fused with the
+    subtract (v = w - w_t) and with the approx update in registers, no
+    f32 window copy anywhere."""
+    use_dq = (is_encoded_window(W) and not momentum and axis is None
+              and fused in ("pallas", "interpret"))
 
     def body(carry, t):
         params, vel = carry
-        w_t = entry_at(W, t, off, gather)
-        g_t = entry_at(G, t, off, gather)
         lr, dB, kept = sd.lr[t], sd.dB[t], sd.kept[t]
         has = (dB > 0).astype(jnp.float32)
         g_changed = jax.tree.map(
             lambda x: has * x,
             grad_fn(params, _gather(cols, sd.changed_idx[t]),
                     sd.changed_w[t]))
-        v = tree_sub(params, w_t)
+        if use_dq:
+            v = _dequant_sub_tree(params, W, t - off, fused)
+        else:
+            w_t = entry_at(W, t, off, gather)
+            v = tree_sub(params, w_t)
         bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v)
         guard_ok = tree_norm(bv) <= clip * tree_norm(v)
         if momentum:
+            g_t = entry_at(G, t, off, gather)
             g_est = _approx_math(g_t, bv, g_changed, B, dB, sign)
             ok = jnp.logical_and(tree_all_finite(g_est), guard_ok)
             new_p, new_vel = _momentum_math(params, vel, g_est, lr, mom)
+        elif use_dq:
+            new_p = _dequant_fused_update(params, G, t - off, bv, g_changed,
+                                          lr, B, dB, sign, fused)
+            ok = jnp.logical_and(tree_all_finite(new_p), guard_ok)
+            new_vel = vel
         else:
+            g_t = entry_at(G, t, off, gather)
             new_p = _flat_fused_update(params, g_t, bv, g_changed, lr, B, dB,
                                        sign, fused, axis=axis,
                                        n_shards=n_shards)
@@ -634,7 +713,8 @@ def run_replay(
                                   mode, params0)
     if store is None:
         store = HistoryStore.create(history, placement=placement,
-                                    window=cfg.stream_window)
+                                    window=cfg.stream_window,
+                                    decode=cfg.stream_decode)
 
     meta = history.meta
     changed_idx = np.asarray(changed_idx, dtype=np.int64)
@@ -769,6 +849,14 @@ def run_replay(
         stats.extra["host_wait_s"] = store.host_wait_s
         stats.extra["prefetch_depth"] = store.depth_used
         stats.extra["host_stage_high"] = store.host_stage_high
+        stats.extra["stream_decode"] = store.decode_mode
+        stats.extra["encoded_bytes_high"] = store.enc_bytes_high
+        stats.extra["compression_ratio"] = store.compression_ratio
+    if history.io_read_s or history.io_write_s:
+        # disk-tier spill IO (cumulative; windowed spills batch one .npz
+        # per window — see TrainingHistory)
+        stats.extra["spill_io_read_s"] = history.io_read_s
+        stats.extra["spill_io_write_s"] = history.io_write_s
     if runner is not None:
         stats.extra["mesh"] = runner.placement.describe()
     return params, stats

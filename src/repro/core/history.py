@@ -69,18 +69,64 @@ bytes (f32 params) and ``T`` recorded steps:
   disk       ``~2*L*P`` (window)      longest runs; host RAM ~0, entries
                                       spill to ``spill_dir`` .npz
                                       (``spill_dir="auto"`` → a fresh
-                                      tempdir, removed with the process);
+                                      tempdir, removed with the process;
+                                      ``spill_window=L`` batches one .npz
+                                      per stream window so a window costs
+                                      one IO burst instead of L);
                                       also composes with a mesh placement
                                       exactly like host + mesh
+  host/disk  ``~2*L*P / ratio``       delta+int8 codec (``delta_int8``):
+  + delta    (encoded window)         entry t is stored as an int8
+                                      residual against an immutable
+                                      per-key-window keyframe base, so
+                                      the slowly-drifting path costs
+                                      ~2.5 B/param/step instead of 8
+                                      (f32) or ~2 (plain int8) — and the
+                                      residuals quantize far better
+                                      because DeltaGrad's own premise
+                                      (w_t, g_t change slowly) makes
+                                      them small
+  decode-in  encoded bytes stay       ``stream_decode="kernel"`` (auto
+  -kernel    resident; dequant runs   for lossy codecs): the streamers
+             in registers             ship ENCODED windows to device and
+                                      the replay scan dequantizes per
+                                      step in registers (Pallas
+                                      ``kernels/dequant_update`` on TPU,
+                                      XLA-fused jnp elsewhere) — HBM
+                                      high-water drops by the codec
+                                      ratio and no f32 window copy is
+                                      ever materialized
   =========  =======================  ==================================
+
+Bytes per param per step, both quantities (w_t and g_t) included:
+
+  ==========  ==============================================
+  codec       bytes/param/step (stored form)
+  ==========  ==============================================
+  f32         8
+  bf16        4
+  int8        ~2   (+ one f32 scale per leaf per entry)
+  delta_bf16  ~4   (+ 8/key_interval for keyframe bases)
+  delta_int8  ~2   + 8/key_interval ≈ 2.5 at key_interval=16
+  ==========  ==============================================
 
 Codecs apply to host/disk (re-encoded per entry); ``stacked`` rejects
 lossy codecs by construction (it stores what the engine produced).
+
+Delta encoding (``delta_int8`` / ``delta_bf16``) uses a FIXED per-window
+keyframe base rather than chaining t against t-1: entry ``t`` stores a
+quantized residual against the first entry of its key window
+(``t // key_interval``), captured once and immutable afterwards.  Chained
+deltas would ripple on every online rewrite and lose O(1) random access
+(the replay needs arbitrary entries every explicit step); a fixed base
+keeps windows independently decodable, keeps overwrites local to one
+entry, and still captures the time-axis redundancy DeltaGrad guarantees.
 """
 
 from __future__ import annotations
 
 import os
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -165,7 +211,73 @@ class Int8Codec(Codec):
                             is_leaf=lambda x: isinstance(x, dict) and "q" in x)
 
 
-CODECS = {"f32": F32Codec, "bf16": BF16Codec, "int8": Int8Codec}
+class DeltaCodec(Codec):
+    """Time-axis delta wrapper: store entry t as ``inner(x_t - base)``.
+
+    ``base`` is the f32 keyframe of entry t's key window (the first entry
+    written in window ``t // key_interval``), captured once by
+    `TrainingHistory` and immutable afterwards — overwrites re-encode
+    against the SAME base, so rewrites never ripple and any entry decodes
+    in O(1) from (residual, base).  The decode contract is exactly
+
+        x_t == inner_decode(residual) + base     (elementwise, f32)
+
+    which `core.store` reuses verbatim for stacked windows and in-kernel
+    dequant, so per-entry, windowed, and fused-kernel reads are bitwise
+    identical.  The base lives OUTSIDE the stored entry (the history and
+    the streamers pass it in), so encode/decode without a base raise."""
+
+    inner_cls: type = Int8Codec
+    name = "delta_int8"
+    key_interval = 16
+
+    def __init__(self):
+        self.inner = self.inner_cls()
+
+    def _need_base(self, op):
+        raise ValueError(
+            f"codec {self.name!r} stores residuals against a per-key-window "
+            f"keyframe base; {op} needs the base passed explicitly (use "
+            "encode_delta/decode_delta, or go through TrainingHistory which "
+            "manages the bases)")
+
+    def encode(self, tree):
+        self._need_base("encode()")
+
+    def decode(self, stored):
+        self._need_base("decode()")
+
+    def decode_stacked(self, stored):
+        self._need_base("decode_stacked()")
+
+    def make_base(self, tree):
+        """Immutable f32 host copy used as the key window's keyframe."""
+        tree = jax.device_get(tree)
+        return jax.tree.map(lambda x: np.array(x, dtype=np.float32), tree)
+
+    def encode_delta(self, tree, base):
+        tree = jax.device_get(tree)
+        resid = jax.tree.map(
+            lambda x, b: np.asarray(x, dtype=np.float32) - b, tree, base)
+        return self.inner.encode(resid)
+
+    def decode_delta(self, stored, base):
+        resid = self.inner.decode(stored)
+        return jax.tree.map(lambda r, b: r + jnp.asarray(b), resid, base)
+
+
+class DeltaInt8Codec(DeltaCodec):
+    inner_cls = Int8Codec
+    name = "delta_int8"
+
+
+class DeltaBF16Codec(DeltaCodec):
+    inner_cls = BF16Codec
+    name = "delta_bf16"
+
+
+CODECS = {"f32": F32Codec, "bf16": BF16Codec, "int8": Int8Codec,
+          "delta_int8": DeltaInt8Codec, "delta_bf16": DeltaBF16Codec}
 
 
 # --------------------------------------------------------------------------
@@ -208,6 +320,7 @@ class TrainingHistory:
         codec: str = "f32",
         spill_dir: Optional[str] = None,
         lru_window: int = 64,
+        spill_window: int = 0,
     ):
         if tier not in ("stacked", "device", "host", "disk"):
             raise ValueError(
@@ -262,9 +375,58 @@ class TrainingHistory:
                                 ignore_errors=True)
             os.makedirs(spill_dir, exist_ok=True)
         self.spill_dir = spill_dir
+        # delta codecs: immutable f32 keyframes, kwid -> (base_w, base_g)
+        self._bases: Dict[int, Tuple[Any, Any]] = {}
+        # disk tier, windowed spill: one .npz per spill_window steps
+        self.spill_window = max(0, int(spill_window)) if tier == "disk" else 0
+        self._win_paths: List[str] = []
+        self._spill_buf: List[Tuple[Any, Any]] = []  # not-yet-flushed entries
+        self._spill_flushed = 0  # steps already on disk
+        self._win_cache: Optional[Tuple[int, List[Tuple[Any, Any]]]] = None
+        self._win_dirty = False
+        self.io_read_s = 0.0  # cumulative spill IO wall time
+        self.io_write_s = 0.0
 
     def __len__(self) -> int:
         return self._stacked_len + len(self._params)
+
+    # -- delta-codec keyframe bases ------------------------------------------
+
+    @property
+    def is_delta(self) -> bool:
+        return isinstance(self.codec, DeltaCodec)
+
+    @property
+    def key_interval(self) -> int:
+        return self.codec.key_interval if self.is_delta else 0
+
+    def base_entry(self, kwid: int) -> Tuple[Any, Any]:
+        """(base_w, base_g) f32 keyframes of key window `kwid`."""
+        return self._bases[kwid]
+
+    def _base_for(self, t: int, params=None, grad=None) -> Tuple[Any, Any]:
+        kwid = t // self.codec.key_interval
+        if kwid not in self._bases:
+            if params is None:
+                raise KeyError(
+                    f"no keyframe base for key window {kwid} (entry {t})")
+            self._bases[kwid] = (self.codec.make_base(params),
+                                 self.codec.make_base(grad))
+        return self._bases[kwid]
+
+    def _encode_pair(self, t: int, params, grad):
+        if self.is_delta:
+            bp, bg = self._base_for(t, params, grad)
+            return (self.codec.encode_delta(params, bp),
+                    self.codec.encode_delta(grad, bg))
+        return self.codec.encode(params), self.codec.encode(grad)
+
+    def _decode_pair(self, t: int, enc_p, enc_g):
+        if self.is_delta:
+            bp, bg = self._base_for(t)
+            return (self.codec.decode_delta(enc_p, bp),
+                    self.codec.decode_delta(enc_g, bg))
+        return self.codec.decode(enc_p), self.codec.decode(enc_g)
 
     # -- write path --------------------------------------------------------
 
@@ -279,27 +441,110 @@ class TrainingHistory:
             self._grads.append(grad)
             self._stacked = None
         else:
-            enc_p = self.codec.encode(params)
-            enc_g = self.codec.encode(grad)
+            enc_p, enc_g = self._encode_pair(t, params, grad)
             self._stacked = None
             if self.tier == "host":
                 self._params.append(enc_p)
                 self._grads.append(enc_g)
-            else:  # disk
+            elif self.spill_window > 1:  # disk, one .npz per window
+                flat_p, tdef = jax.tree.flatten(enc_p)
+                self._treedef = tdef
+                self._params.append(None)
+                self._grads.append(None)
+                self._spill_buf.append((enc_p, enc_g))
+                self._flush_spill()  # no-op until a window is complete
+            else:  # disk, legacy one .npz per step
                 path = os.path.join(self.spill_dir, f"step_{t:07d}.npz")
                 flat_p, tdef = jax.tree.flatten(enc_p)
                 flat_g, _ = jax.tree.flatten(enc_g)
+                t0 = time.perf_counter()
                 np.savez(path, n_p=len(flat_p), *flat_p, *flat_g)
+                self.io_write_s += time.perf_counter() - t0
                 self._params.append(None)
                 self._grads.append(None)
                 self._treedef = tdef
                 self._disk_paths.append(path)
+
+    # -- windowed disk spill (one .npz per spill_window steps) ---------------
+
+    def _win_path(self, wid: int) -> str:
+        return os.path.join(self.spill_dir, f"win_{wid:07d}.npz")
+
+    def _write_win(self, wid: int, entries: List[Tuple[Any, Any]]) -> None:
+        per_entry: List[List[Any]] = []
+        n_p = 0
+        for enc_p, enc_g in entries:
+            flat_p, _ = jax.tree.flatten(enc_p)
+            flat_g, _ = jax.tree.flatten(enc_g)
+            n_p = len(flat_p)
+            per_entry.append(flat_p + flat_g)
+        # one member per LEAF stacked over the window's steps, not one per
+        # leaf per step: npz overhead (zip entry + .npy header) is per
+        # member, and encoded trees double the leaf count (q + scale) —
+        # per-step members would cost more than the int8 payload saves
+        stacked = [np.stack([np.asarray(row[i]) for row in per_entry])
+                   for i in range(2 * n_p)]
+        t0 = time.perf_counter()
+        np.savez(self._win_path(wid), n_p=n_p,
+                 t0=wid * self.spill_window, steps=len(entries), *stacked)
+        self.io_write_s += time.perf_counter() - t0
+
+    def _flush_spill(self, everything: bool = False) -> None:
+        """Write buffered appends as window files — complete windows only,
+        unless `everything` (finalize) also flushes the partial tail.  A
+        partial window rewritten later (appends resumed after finalize)
+        merges with the entries already on disk."""
+        W = self.spill_window
+        while self._spill_buf:
+            wid = self._spill_flushed // W
+            off = self._spill_flushed % W
+            take = min(W - off, len(self._spill_buf))
+            if not everything and off + take < W:
+                return  # keep the partial tail buffered
+            entries = (list(self._load_win(wid)) if off else []) \
+                + self._spill_buf[:take]
+            self._write_win(wid, entries)
+            if wid >= len(self._win_paths):
+                self._win_paths.append(self._win_path(wid))
+            self._win_cache = (wid, entries)
+            self._win_dirty = False
+            self._spill_flushed += take
+            self._spill_buf = self._spill_buf[take:]
+
+    def _flush_win_cache(self) -> None:
+        """Write back a dirty cached window (deferred overwrite commit)."""
+        if self._win_cache is not None and self._win_dirty:
+            wid, entries = self._win_cache
+            self._write_win(wid, entries)
+        self._win_dirty = False
+
+    def _load_win(self, wid: int) -> List[Tuple[Any, Any]]:
+        if self._win_cache is not None and self._win_cache[0] == wid:
+            return self._win_cache[1]
+        self._flush_win_cache()
+        t0 = time.perf_counter()
+        with np.load(self._win_paths[wid]) as data:
+            n_p = int(data["n_p"])
+            steps = int(data["steps"])
+            stacked = [data[f"arr_{i}"] for i in range(2 * n_p)]
+        self.io_read_s += time.perf_counter() - t0
+        entries = []
+        for e in range(steps):
+            flat = [s[e] for s in stacked]
+            entries.append((jax.tree.unflatten(self._treedef, flat[:n_p]),
+                            jax.tree.unflatten(self._treedef, flat[n_p:])))
+        self._win_cache = (wid, entries)
+        self._win_dirty = False
+        return entries
 
     def finalize(self, final_params) -> None:
         self.final_params = final_params
         # drain buffered writes (one batched scatter) so the pending dict
         # never outlives the run/request that produced it
         self._merge_pending()
+        if self.spill_window > 1:
+            self._flush_spill(everything=True)
+            self._flush_win_cache()
 
     # -- stacked tier / view -------------------------------------------------
 
@@ -419,9 +664,16 @@ class TrainingHistory:
     # -- read path ----------------------------------------------------------
 
     def _load_disk(self, t: int):
+        if self.spill_window > 1:
+            if t >= self._spill_flushed:  # still buffered, not yet on disk
+                return self._spill_buf[t - self._spill_flushed]
+            wid, off = divmod(t, self.spill_window)
+            return self._load_win(wid)[off]
+        t0 = time.perf_counter()
         with np.load(self._disk_paths[t]) as data:
             n_p = int(data["n_p"])
             arrays = [data[f"arr_{i}"] for i in range(2 * n_p)]
+        self.io_read_s += time.perf_counter() - t0
         p = jax.tree.unflatten(self._treedef, arrays[:n_p])
         g = jax.tree.unflatten(self._treedef, arrays[n_p:])
         return p, g
@@ -441,9 +693,9 @@ class TrainingHistory:
         if self.tier == "device":
             return self._params[t], self._grads[t]
         if self.tier == "host":
-            return self.codec.decode(self._params[t]), self.codec.decode(self._grads[t])
+            return self._decode_pair(t, self._params[t], self._grads[t])
         p, g = self._load_disk(t)
-        return self.codec.decode(p), self.codec.decode(g)
+        return self._decode_pair(t, p, g)
 
     def encoded_entry(self, t: int):
         """(w_t, g_t) in STORED form — no codec decode, no device upload.
@@ -476,19 +728,35 @@ class TrainingHistory:
         if self.tier == "device":
             self._params[t] = params
             self._grads[t] = grad
-        elif self.tier == "host":
-            self._params[t] = self.codec.encode(params)
-            self._grads[t] = self.codec.encode(grad)
-        else:
-            enc_p = self.codec.encode(params)
-            enc_g = self.codec.encode(grad)
-            flat_p, _ = jax.tree.flatten(enc_p)
-            flat_g, _ = jax.tree.flatten(enc_g)
-            np.savez(self._disk_paths[t], n_p=len(flat_p), *flat_p, *flat_g)
+            return
+        if self.tier == "host":
+            self._params[t], self._grads[t] = self._encode_pair(t, params,
+                                                                grad)
+            return
+        # disk: re-encode against the same (immutable) base — a delta
+        # rewrite stays local to this entry, no ripple into neighbours
+        enc_p, enc_g = self._encode_pair(t, params, grad)
+        if self.spill_window > 1:
+            if t >= self._spill_flushed:
+                self._spill_buf[t - self._spill_flushed] = (enc_p, enc_g)
+                return
+            wid, off = divmod(t, self.spill_window)
+            entries = self._load_win(wid)
+            entries[off] = (enc_p, enc_g)
+            self._win_dirty = True  # written back on window change/finalize
+            return
+        flat_p, _ = jax.tree.flatten(enc_p)
+        flat_g, _ = jax.tree.flatten(enc_g)
+        t0 = time.perf_counter()
+        np.savez(self._disk_paths[t], n_p=len(flat_p), *flat_p, *flat_g)
+        self.io_write_s += time.perf_counter() - t0
 
     # -- checkpoint integration ---------------------------------------------
 
     def state_dict(self) -> Dict[str, Any]:
+        if self.spill_window > 1:
+            self._flush_spill(everything=True)
+            self._flush_win_cache()
         state = {
             "meta": self.meta,
             "tier": self.tier,
@@ -498,6 +766,12 @@ class TrainingHistory:
             "final_params": jax.device_get(self.final_params),
             "disk_paths": list(self._disk_paths),
         }
+        if self._bases:
+            state["bases"] = dict(self._bases)
+        if self.spill_window > 1:
+            state["spill_window"] = self.spill_window
+            state["win_paths"] = list(self._win_paths)
+            state["spill_flushed"] = self._spill_flushed
         if self._stacked_is_storage and self._stacked is not None:
             self._merge_pending()
             state["params"], state["grads"] = [], []
@@ -507,15 +781,27 @@ class TrainingHistory:
     @classmethod
     def from_state_dict(cls, state: Dict[str, Any], spill_dir: Optional[str] = None):
         h = cls(state["meta"], tier=state["tier"], codec=state["codec"],
-                spill_dir=spill_dir or "/tmp/repro_history")
+                spill_dir=spill_dir or "/tmp/repro_history",
+                spill_window=state.get("spill_window", 0))
         h._params = state["params"]
         h._grads = state["grads"]
         h._disk_paths = state["disk_paths"]
         h.final_params = state["final_params"]
+        h._bases = dict(state.get("bases", {}))
+        if state.get("spill_window", 0) > 1:
+            h._win_paths = list(state.get("win_paths", []))
+            h._spill_flushed = int(state.get("spill_flushed", 0))
         if state.get("stacked") is not None:
             Ws, Gs = state["stacked"]
             h.set_stacked(jax.tree.map(jnp.asarray, Ws),
                           jax.tree.map(jnp.asarray, Gs))
+        if h.tier == "disk" and state["final_params"] is not None:
+            # disk reads unflatten with the ENCODED treedef (set during
+            # recording); rebuild it from a zero probe shaped like params
+            probe = jax.tree.map(lambda x: np.zeros((), np.float32),
+                                 state["final_params"])
+            inner = h.codec.inner if h.is_delta else h.codec
+            h._treedef = jax.tree.structure(inner.encode(probe))
         return h
 
     def nbytes(self) -> int:
@@ -523,9 +809,16 @@ class TrainingHistory:
         trees = list(self._params) + list(self._grads)
         if self._stacked is not None and self._stacked_is_storage:
             trees += list(self._stacked)
+        for bp, bg in self._bases.values():  # keyframes are host RAM too
+            trees += [bp, bg]
         for tree in trees:
             if tree is None:
                 continue
             for leaf in jax.tree.leaves(tree):
                 total += np.asarray(leaf).nbytes
         return total
+
+    def disk_nbytes(self) -> int:
+        """Bytes currently occupied by the disk spill (0 for other tiers)."""
+        paths = [p for p in self._disk_paths if p] + list(self._win_paths)
+        return sum(os.path.getsize(p) for p in paths if os.path.exists(p))

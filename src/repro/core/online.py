@@ -147,7 +147,8 @@ class OnlineEngine:
         self._seg_grad_fn = None
         if self.impl == "scan":
             self.store = store if store is not None else HistoryStore.create(
-                history, placement=placement, window=cfg.stream_window)
+                history, placement=placement, window=cfg.stream_window,
+                decode=cfg.stream_decode)
             runner = self.store.sharded_replay()
             if runner is not None:
                 self._seg_grad_fn = make_psum_grad_fn(

@@ -44,6 +44,20 @@ placement/transport layer between `TrainingHistory` and the engines:
     of the SHARD; per-host RAM holds the encoded path (/codec ratio) plus
     one window of staged slices.
 
+Both streamers additionally support DECODE-IN-KERNEL reads
+(``decode="kernel"``, the default for lossy codecs): windows stay ENCODED
+on device as `EncodedLeaf` leaves (int8/bf16 payload + per-step scale +
+delta keyframe bases) and the replay scan dequantizes one step at a time
+in registers — `entry_at` slices then decodes (XLA fuses the elementwise
+dequant; `kernels.dequant_update` fuses it with the approx update on
+TPU), so device high-water drops by the codec ratio and no f32 copy of a
+window is ever materialized.  ``decode="fetch"`` restores the
+decode-on-arrival behaviour; both paths share one decode expression (and
+both run it under jit, so XLA contracts the multiply-add identically),
+which keeps delta-codec replays BITWISE identical across the two modes —
+plain int8 may drift by 1 ulp where the lone decode multiply fuses into
+a downstream subtract.
+
 Every store exposes one engine-facing API: ``window(a, b) -> (W, G, off)``
 (leaves indexed ``W[t - off]`` inside the scan), ``entry(t)`` for host-driven
 explicit steps, and ``commit(...)`` for the online engine's end-of-request
@@ -57,13 +71,13 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.history import TrainingHistory
+from repro.core.history import Int8Codec, TrainingHistory
 
 
 def auto_window(steps: int, window: int = 0) -> int:
@@ -91,6 +105,95 @@ def tree_device_nbytes(tree) -> int:
         shape = sh.shard_shape(x.shape) if sh is not None else x.shape
         total += (int(np.prod(shape, dtype=np.int64))
                   * np.dtype(x.dtype).itemsize)
+    return total
+
+
+# --------------------------------------------------------------------------
+# Encoded windows (decode-in-kernel streaming)
+# --------------------------------------------------------------------------
+
+
+class EncodedLeaf(NamedTuple):
+    """One stacked history leaf kept ENCODED on device.
+
+    ``q`` is the (L, ...) quantized payload (int8 residuals with a
+    per-step ``scale`` (L,), or a bf16 residual with no scale); for delta
+    codecs ``base`` stacks the window's f32 keyframes (n_kw, ...) and
+    ``kidx`` (L,) maps each step to its keyframe row, so any
+    stream-window/key-interval combination decodes without alignment
+    constraints.  A NamedTuple is a pytree, so encoded windows flow
+    through jit/scan/shard_map unchanged; every decode site uses the one
+    expression ``q.astype(f32) * scale (+ base)`` — see
+    `kernels.dequant_update.ref.dequant_ref` — which is what keeps
+    kernel-mode and fetch-mode replays bitwise identical (slicing
+    commutes with elementwise decode)."""
+
+    q: Any
+    scale: Optional[Any] = None
+    base: Optional[Any] = None
+    kidx: Optional[Any] = None
+
+
+def _is_window_leaf(x) -> bool:
+    return isinstance(x, EncodedLeaf)
+
+
+def is_encoded_window(tree) -> bool:
+    """True when a window() result carries EncodedLeaf leaves (the scan
+    must decode per step; pytree structure is static under jit)."""
+    found = [False]
+
+    def probe(x):
+        if isinstance(x, EncodedLeaf):
+            found[0] = True
+        return x
+
+    jax.tree.map(probe, tree, is_leaf=_is_window_leaf)
+    return found[0]
+
+
+def _decode_leaf_slice(leaf, i):
+    """Step ``i`` of one window leaf, decoded to f32 when encoded."""
+    if isinstance(leaf, EncodedLeaf):
+        x = leaf.q[i].astype(jnp.float32)
+        if leaf.scale is not None:
+            x = x * leaf.scale[i]
+        if leaf.base is not None:
+            x = x + leaf.base[leaf.kidx[i]]
+        return x
+    return leaf[i]
+
+
+def decode_window_tree(tree):
+    """Whole-window decode of EncodedLeaf leaves to stacked f32 — the
+    fetch-mode read path.  Agrees bitwise, per step, with
+    `_decode_leaf_slice` (elementwise decode commutes with slicing)."""
+
+    def dec(x):
+        if isinstance(x, EncodedLeaf):
+            q = x.q.astype(jnp.float32)
+            if x.scale is not None:
+                q = q * x.scale.reshape((-1,) + (1,) * (q.ndim - 1))
+            if x.base is not None:
+                q = q + x.base[x.kidx]
+            return q
+        return x
+
+    return jax.tree.map(dec, tree, is_leaf=_is_window_leaf)
+
+
+@jax.jit
+def _decode_window_pair(Wh, Gh):
+    return decode_window_tree(Wh), decode_window_tree(Gh)
+
+
+def decoded_window_nbytes(tree) -> int:
+    """Logical f32 bytes the window WOULD occupy decoded (the numerator
+    of the reported compression ratio)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=_is_window_leaf):
+        shape = leaf.q.shape if isinstance(leaf, EncodedLeaf) else leaf.shape
+        total += int(np.prod(shape, dtype=np.int64)) * 4
     return total
 
 
@@ -216,17 +319,24 @@ class HistoryStore:
     @staticmethod
     def create(history: TrainingHistory,
                placement: Optional[PlacementPolicy] = None,
-               window: int = 0) -> "HistoryStore":
+               window: int = 0, decode: str = "auto") -> "HistoryStore":
         """Pick the store for the history's tier: stacked/device →
         `ResidentStore` (optionally mesh-placed); host/disk →
         `SegmentStreamer` (``window`` steps per device-resident segment,
         0 → auto), or `ShardedStreamer` when a multi-device placement is
-        given (each mesh shard streams only its slice of every window)."""
+        given (each mesh shard streams only its slice of every window).
+
+        ``decode`` picks the streamers' read path: "fetch" decodes every
+        window to f32 on arrival (the pre-encoded-window behaviour);
+        "kernel" keeps windows ENCODED on device and the scan dequantizes
+        per step in registers (HBM high-water drops by the codec ratio);
+        "auto" → "kernel" for every non-f32 codec."""
         if history.tier in ("host", "disk"):
             if placement is not None \
                     and int(np.prod(placement.mesh_shape)) > 1:
-                return ShardedStreamer(history, placement, window=window)
-            return SegmentStreamer(history, window=window)
+                return ShardedStreamer(history, placement, window=window,
+                                       decode=decode)
+            return SegmentStreamer(history, window=window, decode=decode)
         return ResidentStore(history, placement=placement)
 
     # engine-facing API ------------------------------------------------------
@@ -301,9 +411,9 @@ def _freeze_parts(parts):
 @jax.jit
 def _entry_slices(W, G, t):
     """(w_t, g_t) as ONE jitted program — a host-driven explicit step costs
-    one dispatch here, not 2 * n_leaves eager slice ops."""
-    return (jax.tree.map(lambda x: x[t], W),
-            jax.tree.map(lambda x: x[t], G))
+    one dispatch here, not 2 * n_leaves eager slice ops.  Encoded windows
+    (kernel decode mode) slice-then-dequant per leaf via `entry_at`."""
+    return entry_at(W, t, 0), entry_at(G, t, 0)
 
 
 class ResidentStore(HistoryStore):
@@ -342,6 +452,10 @@ class ResidentStore(HistoryStore):
     def specs(self):
         """Per-leaf (W, G) PartitionSpec trees when placed on a mesh."""
         return self._specs
+
+    @property
+    def window_specs(self):
+        return self._specs  # resident windows are always decoded leaves
 
     def span_end(self, t: int, t2: int) -> int:
         return t2  # the whole path is resident; never split a segment
@@ -391,9 +505,23 @@ class SegmentStreamer(HistoryStore):
 
     def __init__(self, history: TrainingHistory, window: int = 0,
                  prefetch: bool = True, max_prefetch: int = 4,
-                 stage_threads: Optional[int] = None):
+                 stage_threads: Optional[int] = None,
+                 decode: str = "auto"):
         assert history.tier in ("host", "disk"), history.tier
+        if decode not in ("auto", "kernel", "fetch"):
+            raise ValueError(
+                f"unknown decode mode {decode!r}; pick 'fetch' (decode "
+                "windows to f32 on arrival), 'kernel' (keep windows "
+                "encoded on device, dequantize per step in the scan), or "
+                "'auto' (kernel for every non-f32 codec)")
         self.history = history
+        # f32 windows have nothing to decode — kernel mode degenerates to
+        # fetch (the staged window IS the decoded window)
+        if history.codec.name == "f32":
+            decode = "fetch"
+        elif decode == "auto":
+            decode = "kernel"
+        self.decode_mode = decode
         self.window_len = auto_window(history.meta.steps, window)
         self.prefetch = prefetch
         # depth > 1 only pays when that many windows can STAGE concurrently
@@ -414,6 +542,8 @@ class SegmentStreamer(HistoryStore):
         self._enc_bytes = 0  # ENCODED per-device bytes of the last staged
         # window (the in-flight prefetch copy is pre-decode, so lossy codecs
         # stage at 1/2 or 1/4 of the decoded f32 size)
+        self.enc_bytes_high = 0  # high-water of encoded window bytes
+        self.compression_ratio = 1.0  # decoded f32 bytes / encoded bytes
         self.windows_fetched = 0
         self.prefetch_hits = 0
         self.host_wait_s = 0.0
@@ -445,10 +575,43 @@ class SegmentStreamer(HistoryStore):
     def span_end(self, t: int, t2: int) -> int:
         return min(t2, self._bounds(self._wid(t))[1])
 
+    def _window_bases(self, a: int, b: int):
+        """(kidx, base_w, base_g) for a delta-codec window [a, b): the
+        stacked f32 keyframes of every key window the steps touch, plus
+        the per-step row index into that stack — computed here so ANY
+        stream window works with ANY key interval, aligned or not."""
+        K = self.history.key_interval
+        kw0 = a // K
+        kwids = list(range(kw0, (b - 1) // K + 1))
+        pairs = [self.history.base_entry(k) for k in kwids]
+        stack = lambda *xs: np.stack([np.asarray(x) for x in xs])
+        base_w = jax.tree.map(stack, *(p for p, _ in pairs))
+        base_g = jax.tree.map(stack, *(g for _, g in pairs))
+        kidx = np.asarray([t // K - kw0 for t in range(a, b)], np.int32)
+        return kidx, base_w, base_g
+
+    def _wrap_encoded(self, tree, base_tree, kidx):
+        """Stacked encoded tree → EncodedLeaf leaves (device-ready form)."""
+
+        def wrap(x, b):
+            if _is_enc_leaf(x):  # int8 inner: {"q": (L, ...), "scale": (L,)}
+                return EncodedLeaf(q=x["q"], scale=x["scale"], base=b,
+                                   kidx=None if b is None else kidx)
+            return EncodedLeaf(q=x, scale=None, base=b,
+                               kidx=None if b is None else kidx)
+
+        if base_tree is None:
+            return jax.tree.map(lambda x: wrap(x, None), tree,
+                                is_leaf=_is_enc_leaf)
+        return jax.tree.map(wrap, tree, base_tree, is_leaf=_is_enc_leaf)
+
     def _stage_window(self, wid: int):
         """Host side of a fetch: stack the window's ENCODED entries per leaf
         and ship them with `jax.device_put` (async dispatch).  Runs on the
-        worker thread for prefetches; no tracing happens here."""
+        worker thread for prefetches; no tracing happens here.  Non-f32
+        codecs stage EncodedLeaf leaves (decoded on fetch or consumed
+        encoded by the scan, per `decode_mode`); delta codecs ride their
+        key windows' keyframe bases along."""
         a, b = self._bounds(wid)
         enc_p, enc_g = [], []
         for t in range(a, b):
@@ -460,6 +623,13 @@ class SegmentStreamer(HistoryStore):
             jax.tree.map(lambda x: np.asarray(x)[None], enc_p[0])
         Gh = jax.tree.map(stack, *enc_g) if len(enc_g) > 1 else \
             jax.tree.map(lambda x: np.asarray(x)[None], enc_g[0])
+        if self.history.codec.name != "f32":
+            if self.history.is_delta:
+                kidx, base_w, base_g = self._window_bases(a, b)
+            else:
+                kidx = base_w = base_g = None
+            Wh = self._wrap_encoded(Wh, base_w, kidx)
+            Gh = self._wrap_encoded(Gh, base_g, kidx)
         self._note_stage_bytes(tree_nbytes((Wh, Gh)))
         return jax.device_put((Wh, Gh))
 
@@ -479,7 +649,18 @@ class SegmentStreamer(HistoryStore):
             self.host_stage_high = max(self.host_stage_high, int(nbytes))
 
     def _decode(self, staged):
+        """Read path: fetch mode decodes the whole window to f32 on
+        arrival; kernel mode hands the ENCODED window straight to the
+        scan (per-step dequant in `entry_at` / the Pallas kernels).
+        Encoded windows decode under jit so XLA contracts the
+        multiply-add exactly like the in-scan slice decode does — that
+        (plus the shared decode expression) is what makes fetch-mode and
+        kernel-mode replays bitwise identical."""
+        if self.decode_mode == "kernel":
+            return staged
         Wh, Gh = staged
+        if is_encoded_window(Wh) or is_encoded_window(Gh):
+            return _decode_window_pair(Wh, Gh)
         codec = self.history.codec
         return codec.decode_stacked(Wh), codec.decode_stacked(Gh)
 
@@ -497,6 +678,10 @@ class SegmentStreamer(HistoryStore):
             staged = self._stack_host(wid)
             self.host_wait_s += time.perf_counter() - t0
         self._enc_bytes = tree_device_nbytes(staged)
+        self.enc_bytes_high = max(self.enc_bytes_high, self._enc_bytes)
+        if self._enc_bytes:
+            self.compression_ratio = (decoded_window_nbytes(staged)
+                                      / self._enc_bytes)
         W, G = self._decode(staged)
         self._buf[wid] = (W, G)
         self._hbm_now += tree_device_nbytes(W) + tree_device_nbytes(G)
@@ -636,7 +821,7 @@ class ShardedStreamer(SegmentStreamer):
                  placement: PlacementPolicy, window: int = 0,
                  prefetch: bool = True, max_prefetch: int = 4,
                  stage_threads: Optional[int] = None,
-                 stage_workers: int = 4):
+                 stage_workers: int = 4, decode: str = "auto"):
         assert placement is not None
         need = int(np.prod(np.asarray(placement.mesh_shape, dtype=np.int64)))
         have = jax.device_count()
@@ -651,7 +836,7 @@ class ShardedStreamer(SegmentStreamer):
         self.placement = placement
         super().__init__(history, window=window, prefetch=prefetch,
                          max_prefetch=max_prefetch,
-                         stage_threads=stage_threads)
+                         stage_threads=stage_threads, decode=decode)
         from jax.sharding import NamedSharding, PartitionSpec
 
         plan = placement.plan()
@@ -664,16 +849,46 @@ class ShardedStreamer(SegmentStreamer):
         self._flat_specs_w = [s.spec
                               for s in jax.tree.leaves(self._shard_w)]
         self._rep_sharding = NamedSharding(placement.mesh, PartitionSpec())
+        if self.decode_mode == "kernel":
+            # the windows the engines see are ENCODED — build the matching
+            # EncodedLeaf spec trees for shard_map (q/base shard like the
+            # decoded leaf, time axis and keyframe axis never sharded;
+            # scale/kidx replicate)
+            codec = history.codec
+            inner = codec.inner if history.is_delta else codec
+            has_scale = isinstance(inner, Int8Codec)
+            has_base = history.is_delta
+
+            def espec(s):
+                return EncodedLeaf(
+                    q=s, scale=PartitionSpec() if has_scale else None,
+                    base=s if has_base else None,
+                    kidx=PartitionSpec() if has_base else None)
+
+            self._window_specs = (jax.tree.map(espec, self._specs[0]),
+                                  jax.tree.map(espec, self._specs[1]))
+        else:
+            self._window_specs = self._specs
         self._stage_pool = ThreadPoolExecutor(
             max_workers=max(1, min(int(stage_workers), need)))
         self._decode_fn = None
         self._sharded: Optional["ShardedReplay"] = None
+        # staged keyframe bases per window: bases are IMMUTABLE (online
+        # rewrites re-encode against the same keyframe), so repeated
+        # replays off one store ship each window's base shards once
+        self._base_cache: Dict[int, Tuple[Any, Any, Any, int]] = {}
 
     @property
     def specs(self):
         """Per-leaf (W, G) PartitionSpec trees (same contract as a
         mesh-placed `ResidentStore`)."""
         return self._specs
+
+    @property
+    def window_specs(self):
+        """Spec trees matching what `window()` RETURNS — EncodedLeaf spec
+        trees in kernel decode mode, the decoded-leaf specs otherwise."""
+        return self._window_specs
 
     # -- per-shard staging ---------------------------------------------------
 
@@ -699,27 +914,61 @@ class ShardedStreamer(SegmentStreamer):
         return jax.make_array_from_single_device_arrays(
             gshape, sharding, [f.result() for f in futs])
 
-    def _stage_tree(self, entries, shardings, meter: List[int]):
+    def _stage_tree(self, entries, shardings, meter: List[int],
+                    base_flat=None, kidx_dev=None):
         """Stack one window of encoded per-step pytrees into globally
         sharded (L, ...) leaves.  Codec-dict leaves shard their payload
         ("q") like the decoded leaf; per-entry scales stack to a
-        replicated (L,) vector."""
+        replicated (L,) vector shipped in ONE broadcast put.  Non-f32
+        codecs come back as EncodedLeaf leaves; delta keyframe bases
+        arrive pre-staged (immutable → cached, see `_staged_bases`)."""
         flat0, tdef = jax.tree.flatten(entries[0], is_leaf=_is_enc_leaf)
         cols = list(zip(*(jax.tree.leaves(e, is_leaf=_is_enc_leaf)
                           for e in entries)))
+        if base_flat is None:
+            base_flat = [None] * len(flat0)
+        encoded = self.history.codec.name != "f32"
         out = []
-        for proto, sh, col in zip(flat0, jax.tree.leaves(shardings), cols):
-            if _is_enc_leaf(proto):
-                out.append({
-                    "q": self._stage_leaf(sh, [c["q"] for c in col],
-                                          meter),
-                    "scale": self._stage_leaf(self._rep_sharding,
-                                              [c["scale"] for c in col],
-                                              meter),
-                })
-            else:
+        for proto, sh, col, bs in zip(flat0, jax.tree.leaves(shardings),
+                                      cols, base_flat):
+            if not encoded:
                 out.append(self._stage_leaf(sh, col, meter))
+                continue
+            if _is_enc_leaf(proto):
+                q = self._stage_leaf(sh, [c["q"] for c in col], meter)
+                buf = np.stack([np.asarray(c["scale"]) for c in col])
+                meter.append(buf.nbytes)
+                scale = jax.device_put(buf, self._rep_sharding)
+            else:  # bf16 residual — no per-step scale
+                q = self._stage_leaf(sh, col, meter)
+                scale = None
+            out.append(EncodedLeaf(
+                q=q, scale=scale, base=bs,
+                kidx=None if bs is None else kidx_dev))
         return jax.tree.unflatten(tdef, out)
+
+    def _staged_bases(self, wid: int, a: int, b: int):
+        """(kidx_dev, flat base_w, flat base_g, new_bytes) for window
+        `wid`, per-shard staged and cached: the keyframes are immutable,
+        so every later fetch of the same window (other replays on this
+        store, adaptive-prefetch restages) reuses the device shards.
+        `new_bytes` is 0 on a hit so the window meter only counts the
+        first staging."""
+        hit = self._base_cache.get(wid)
+        if hit is not None:
+            return hit
+        kidx, base_w, base_g = self._window_bases(a, b)
+        meter: List[int] = []
+        kidx_dev = jax.device_put(np.asarray(kidx, np.int32),
+                                  self._rep_sharding)
+        bw = [self._stage_leaf(sh, list(bs), meter)
+              for bs, sh in zip(jax.tree.leaves(base_w),
+                                jax.tree.leaves(self._shard_w))]
+        bg = [self._stage_leaf(sh, list(bs), meter)
+              for bs, sh in zip(jax.tree.leaves(base_g),
+                                jax.tree.leaves(self._shard_g))]
+        self._base_cache[wid] = (kidx_dev, bw, bg, 0)
+        return kidx_dev, bw, bg, sum(meter)
 
     def _stage_window(self, wid: int):
         a, b = self._bounds(wid)
@@ -730,22 +979,36 @@ class ShardedStreamer(SegmentStreamer):
             enc_g.append(g)
         # per-shard staging: this window's host footprint is the SUM of
         # its staged slices (incl. replicated leaves once per device)
-        meter: List[int] = []
-        staged = (self._stage_tree(enc_p, self._shard_w, meter),
-                  self._stage_tree(enc_g, self._shard_g, meter))
+        if self.history.is_delta:
+            kidx_dev, bw, bg, base_bytes = self._staged_bases(wid, a, b)
+        else:
+            kidx_dev = bw = bg = None
+            base_bytes = 0
+        meter: List[int] = [base_bytes]
+        staged = (self._stage_tree(enc_p, self._shard_w, meter,
+                                   bw, kidx_dev),
+                  self._stage_tree(enc_g, self._shard_g, meter,
+                                   bg, kidx_dev))
         self._note_stage_bytes(sum(meter))
         return staged
 
     def _decode(self, staged):
         """Decode the staged (encoded, sharded) window ON DEVICE, with
         `out_shardings` pinning every decoded leaf to its resident-path
-        placement — shard-local work, no gather."""
+        placement — shard-local work, no gather.  Kernel mode skips the
+        decode entirely: the scan consumes the encoded window."""
+        if self.decode_mode == "kernel":
+            return staged
         if self._decode_fn is None:
             codec = self.history.codec
+            if is_encoded_window(staged[0]) or is_encoded_window(staged[1]):
+                fn = lambda Wh, Gh: (decode_window_tree(Wh),
+                                     decode_window_tree(Gh))
+            else:
+                fn = lambda Wh, Gh: (codec.decode_stacked(Wh),
+                                     codec.decode_stacked(Gh))
             self._decode_fn = jax.jit(
-                lambda Wh, Gh: (codec.decode_stacked(Wh),
-                                codec.decode_stacked(Gh)),
-                out_shardings=(self._shard_w, self._shard_g))
+                fn, out_shardings=(self._shard_w, self._shard_g))
         return self._decode_fn(*staged)
 
     def entry(self, t: int):
@@ -830,7 +1093,7 @@ class ShardedReplay:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
-        specs_w, specs_g = self.store.specs
+        specs_w, specs_g = self.store.window_specs
         rep = P()
         lead = (rep, rep, rep, rep, specs_w, specs_g, rep,
                 self._schedule_specs())
@@ -849,13 +1112,20 @@ class ShardedReplay:
 
 def entry_at(W, t, off, gather=None):
     """Slice one step out of stacked history leaves, all-gathering sharded
-    leaves per the ShardedReplay gather plan (no-op when gather is None)."""
-    leaves, tdef = jax.tree.flatten(W)
+    leaves per the ShardedReplay gather plan (no-op when gather is None).
+
+    Encoded windows (`EncodedLeaf` leaves) dequantize the SLICE — shard-
+    local, before the gather — so sharded kernel-mode replay ships the
+    same f32 step the resident path would, while the window itself stays
+    encoded in HBM.  One EncodedLeaf flattens to one decoded leaf, so the
+    per-leaf gather plans line up unchanged."""
+    leaves, tdef = jax.tree.flatten(W, is_leaf=_is_window_leaf)
     if gather is None:
-        return jax.tree.unflatten(tdef, [x[t - off] for x in leaves])
+        return jax.tree.unflatten(
+            tdef, [_decode_leaf_slice(x, t - off) for x in leaves])
     out = []
     for leaf, plan in zip(leaves, gather):
-        x = leaf[t - off]
+        x = _decode_leaf_slice(leaf, t - off)
         for dim, ax in plan:
             x = jax.lax.all_gather(x, ax, axis=dim, tiled=True)
         out.append(x)

@@ -4,3 +4,5 @@
 #                    correction path — single-pass HBM streaming)
 #   flash_attention/ causal GQA flash attention (train/prefill hot-spot)
 #   fused_update/    leave-r-out DeltaGrad parameter update (elementwise)
+#   dequant_update/  fused dequant + update / dequant + subtract over the
+#                    ENCODED streamed history (int8/bf16, keyframe deltas)

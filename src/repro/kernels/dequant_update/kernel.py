@@ -1,0 +1,108 @@
+"""Fused dequantize + DeltaGrad update — Pallas TPU.
+
+The streamed history store can ship ENCODED windows to device (int8 q with
+a per-step scale, or a bf16 residual, optionally against a per-key-window
+keyframe base — see `core.history.DeltaCodec`).  These kernels read the
+encoded leaf directly and dequantize in registers fused with the hot-loop
+elementwise work, so the scan consumes compressed bytes without ever
+materializing an f32 copy of a window:
+
+  * ``dequant_deltagrad_update`` — the leave-r-out approx step where the
+    cached gradient operand stays encoded,
+  * ``dequant_sub`` — ``v = w - w_t`` (the L-BFGS direction input) where
+    the cached parameter operand stays encoded.
+
+Decode math is exactly ``q.astype(f32) * scale (+ base)`` — the same
+expression and association the jnp decode paths in `core.store` use — so
+kernel-mode and fetch-mode replays agree bitwise.  Scalars travel in a
+(1, N) operand like `fused_update`; the keyframe base, when present, is a
+fifth full-width operand streamed alongside w.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 4096
+
+
+def _upd_math(w, g, bv, gc, lr, n, dB, sign):
+    denom = jnp.maximum(n - sign * dB, 1.0)
+    num = n * (g + bv.astype(jnp.float32)) - sign * dB * gc.astype(jnp.float32)
+    return w.astype(jnp.float32) - lr * num / denom
+
+
+def _dq_upd_kernel(w_ref, q_ref, bv_ref, gc_ref, s_ref, out_ref):
+    s = s_ref[...]  # (1, 5): lr, n, dB, sign, scale
+    g = q_ref[...].astype(jnp.float32) * s[0, 4]
+    out = _upd_math(w_ref[...], g, bv_ref[...], gc_ref[...],
+                    s[0, 0], s[0, 1], s[0, 2], s[0, 3])
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def _dq_upd_base_kernel(w_ref, q_ref, bv_ref, gc_ref, b_ref, s_ref, out_ref):
+    s = s_ref[...]
+    g = q_ref[...].astype(jnp.float32) * s[0, 4] \
+        + b_ref[...].astype(jnp.float32)
+    out = _upd_math(w_ref[...], g, bv_ref[...], gc_ref[...],
+                    s[0, 0], s[0, 1], s[0, 2], s[0, 3])
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def _dq_sub_kernel(w_ref, q_ref, s_ref, out_ref):
+    x = q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+    out_ref[...] = (w_ref[...].astype(jnp.float32) - x).astype(out_ref.dtype)
+
+
+def _dq_sub_base_kernel(w_ref, q_ref, b_ref, s_ref, out_ref):
+    x = q_ref[...].astype(jnp.float32) * s_ref[0, 0] \
+        + b_ref[...].astype(jnp.float32)
+    out_ref[...] = (w_ref[...].astype(jnp.float32) - x).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
+def dequant_deltagrad_update(w, q, bv, g_changed, scalars, base=None, *,
+                             interpret: bool = False, tile: int = TILE):
+    """All tensors (1, p) with p % tile == 0; scalars (1, 5)."""
+    _, p = w.shape
+    grid = (p // tile,)
+    spec = pl.BlockSpec((1, tile), lambda i: (0, i))
+    sspec = pl.BlockSpec((1, 5), lambda i: (0, 0))
+    out_shape = jax.ShapeDtypeStruct((1, p), w.dtype)
+    if base is None:
+        return pl.pallas_call(
+            _dq_upd_kernel, grid=grid,
+            in_specs=[spec, spec, spec, spec, sspec],
+            out_specs=spec, out_shape=out_shape, interpret=interpret,
+        )(w, q, bv, g_changed, scalars)
+    return pl.pallas_call(
+        _dq_upd_base_kernel, grid=grid,
+        in_specs=[spec, spec, spec, spec, spec, sspec],
+        out_specs=spec, out_shape=out_shape, interpret=interpret,
+    )(w, q, bv, g_changed, base, scalars)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
+def dequant_sub(w, q, scalars, base=None, *,
+                interpret: bool = False, tile: int = TILE):
+    """(1, p) tensors, p % tile == 0; scalars (1, 1): the dequant scale."""
+    _, p = w.shape
+    grid = (p // tile,)
+    spec = pl.BlockSpec((1, tile), lambda i: (0, i))
+    sspec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    out_shape = jax.ShapeDtypeStruct((1, p), w.dtype)
+    if base is None:
+        return pl.pallas_call(
+            _dq_sub_kernel, grid=grid,
+            in_specs=[spec, spec, sspec],
+            out_specs=spec, out_shape=out_shape, interpret=interpret,
+        )(w, q, scalars)
+    return pl.pallas_call(
+        _dq_sub_base_kernel, grid=grid,
+        in_specs=[spec, spec, spec, sspec],
+        out_specs=spec, out_shape=out_shape, interpret=interpret,
+    )(w, q, base, scalars)

@@ -1,0 +1,44 @@
+"""Jit'd wrappers for the fused dequant kernels (padding + scalar packing)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dequant_update import kernel
+
+
+def _prep(x, pp, p):
+    return jnp.pad(x.reshape(1, -1), ((0, 0), (0, pp - p)))
+
+
+@partial(jax.jit, static_argnames=("interpret", "tile"))
+def dequant_update(w, q, bv, g_changed, lr, n, dB, sign, scale, base=None, *,
+                   interpret: bool = False, tile: int = 512):
+    """Flat-vector fused dequant + update; arbitrary p (pads to tile)."""
+    p = w.shape[-1]
+    pp = -(-p // tile) * tile
+    scalars = jnp.stack([jnp.float32(lr), jnp.float32(n), jnp.float32(dB),
+                         jnp.float32(sign), jnp.float32(scale)]).reshape(1, 5)
+    out = kernel.dequant_deltagrad_update(
+        _prep(w, pp, p), _prep(q, pp, p), _prep(bv, pp, p),
+        _prep(g_changed, pp, p), scalars,
+        None if base is None else _prep(base, pp, p),
+        interpret=interpret, tile=tile)
+    return out[0, :p]
+
+
+@partial(jax.jit, static_argnames=("interpret", "tile"))
+def dequant_sub(w, q, scale, base=None, *,
+                interpret: bool = False, tile: int = 512):
+    """Flat-vector ``w - dequant(q)``; arbitrary p (pads to tile)."""
+    p = w.shape[-1]
+    pp = -(-p // tile) * tile
+    scalars = jnp.float32(scale).reshape(1, 1)
+    out = kernel.dequant_sub(
+        _prep(w, pp, p), _prep(q, pp, p), scalars,
+        None if base is None else _prep(base, pp, p),
+        interpret=interpret, tile=tile)
+    return out[0, :p]

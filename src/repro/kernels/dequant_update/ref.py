@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the fused dequant + DeltaGrad update kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant_ref(q, scale, base=None):
+    """``q * scale (+ base)`` in f32 — THE decode expression.
+
+    Every read path (per-entry decode, stacked-window decode, in-scan
+    slice decode, Pallas kernel) uses this exact association, which is
+    what makes kernel-mode and fetch-mode replays bitwise identical."""
+    x = q.astype(jnp.float32) * jnp.float32(scale)
+    if base is not None:
+        x = x + base.astype(jnp.float32)
+    return x
+
+
+def dequant_update_ref(w, q, bv, g_changed, lr, n, dB, sign, scale,
+                       base=None):
+    """`fused_update.ref.deltagrad_update_ref` with the cached-gradient
+    operand supplied encoded (dequantized on the fly)."""
+    f32 = jnp.float32
+    g = dequant_ref(q, scale, base)
+    denom = jnp.maximum(n - sign * dB, 1.0)
+    num = n * (g + bv.astype(f32)) - sign * dB * g_changed.astype(f32)
+    return (w.astype(f32) - lr * num / denom).astype(w.dtype)
+
+
+def dequant_sub_ref(w, q, scale, base=None):
+    """``v = w - dequant(w_t)`` — the L-BFGS direction input."""
+    return (w.astype(jnp.float32) - dequant_ref(q, scale, base)
+            ).astype(w.dtype)

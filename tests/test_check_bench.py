@@ -46,10 +46,19 @@ def shard_doc():
         "wall_ratio_streamed": 1.7,
         "wall_ratio_mesh": 13.0,
         "wall_ratio_sharded_streamed": 27.0,
+        "delta_int8": {
+            "host_ram_reduction": 3.1,
+            "disk_bytes_reduction": 3.9,
+            "compression_ratio": 3.2,
+            "wall_ratio_vs_sharded_streamed": 1.0,
+            "kernel_vs_fetch": 0.0,
+            "parity_vs_python": 3.3e-08,
+            "sharded_vs_streamed": 3.9e-08,
+        },
     }
 
 
-def run_gate(tmp_path, current, baseline, env_extra=None):
+def run_gate(tmp_path, current, baseline, env_extra=None, rolling=None):
     cur = tmp_path / "current.json"
     base = tmp_path / "baseline.json"
     cur.write_text(json.dumps(current))
@@ -58,10 +67,15 @@ def run_gate(tmp_path, current, baseline, env_extra=None):
     env.pop("GITHUB_STEP_SUMMARY", None)
     if env_extra:
         env.update(env_extra)
-    return subprocess.run(
-        [sys.executable, TOOL, "--suite", "shard", "--current", str(cur),
-         "--baseline", str(base)],
-        capture_output=True, text=True, env=env, cwd=REPO)
+    cmd = [sys.executable, TOOL, "--suite", "shard", "--current", str(cur),
+           "--baseline", str(base)]
+    if rolling is not None:
+        roll = tmp_path / "rolling.json"
+        if isinstance(rolling, dict):
+            roll.write_text(json.dumps(rolling))
+        cmd += ["--rolling", str(roll)]
+    return subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          cwd=REPO)
 
 
 class TestCheckBenchGate:
@@ -137,6 +151,40 @@ class TestCheckBenchGate:
         text = summary.read_text()
         assert "| metric | baseline | current |" in text
         assert "sharded_streamed_shard_windows" in text
+
+    def test_rolling_missing_file_skipped(self, tmp_path):
+        """No artifact from a last green main (first run, or the artifact
+        expired) must not fail the gate."""
+        doc = shard_doc()
+        proc = run_gate(tmp_path, doc, doc, rolling="missing")
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "skipped (first run or expired artifact)" in proc.stdout
+
+    def test_rolling_stale_config_skipped(self, tmp_path):
+        doc = shard_doc()
+        rolling = copy.deepcopy(doc)
+        rolling["config"]["steps"] = 96
+        proc = run_gate(tmp_path, doc, doc, rolling=rolling)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "skipped as stale" in proc.stdout
+
+    def test_rolling_regression_fails(self, tmp_path):
+        """Slow drift: each run passes the loose committed thresholds but
+        regresses vs the LAST run — the rolling compare catches it."""
+        doc = shard_doc()
+        rolling = copy.deepcopy(doc)
+        rolling["delta_int8"]["host_ram_reduction"] = (
+            doc["delta_int8"]["host_ram_reduction"] * 2)
+        proc = run_gate(tmp_path, doc, doc, rolling=rolling)
+        assert proc.returncode == 1
+        assert "host_ram_reduction" in proc.stderr
+        assert "rolling, last green main" in proc.stdout
+
+    def test_rolling_identical_passes(self, tmp_path):
+        doc = shard_doc()
+        proc = run_gate(tmp_path, doc, doc, rolling=doc)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "rolling, last green main" in proc.stdout
 
     def test_committed_shard_baseline_passes_against_itself(self):
         """The committed CI baseline must satisfy its own gate — otherwise

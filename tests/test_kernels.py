@@ -6,6 +6,9 @@ import numpy as np
 import pytest
 
 from repro.core.lbfgs import lbfgs_hvp_stacked
+from repro.kernels.dequant_update.ops import dequant_sub, dequant_update
+from repro.kernels.dequant_update.ref import (dequant_ref, dequant_sub_ref,
+                                              dequant_update_ref)
 from repro.kernels.flash_attention.ops import attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.fused_update.ops import update
@@ -110,3 +113,78 @@ def test_fused_update_sweep(p, dtype, sign):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), rtol=2e-2,
                                atol=2e-2)
+
+
+# -- fused dequant + update (encoded streamed history) ------------------------
+
+
+def _encoded_operand(rng, p, qdtype, delta):
+    """(q, scale, base) mimicking an EncodedLeaf slice: int8 carries a
+    per-entry scale, bf16 is a plain cast, `delta` adds an f32 keyframe."""
+    x = rng.normal(size=(p,)).astype(np.float32) * 0.05
+    if qdtype == jnp.int8:
+        scale = np.float32(np.max(np.abs(x)) / 127.0)
+        q = jnp.asarray(np.clip(np.round(x / scale), -127, 127), jnp.int8)
+    else:
+        scale = np.float32(1.0)
+        q = jnp.asarray(x, jnp.bfloat16)
+    base = jnp.asarray(rng.normal(size=(p,)).astype(np.float32)) \
+        if delta else None
+    return q, scale, base
+
+
+@pytest.mark.parametrize("p", [512, 1000, 4096])
+@pytest.mark.parametrize("qdtype", [jnp.int8, jnp.bfloat16])
+@pytest.mark.parametrize("delta", [False, True])
+def test_dequant_update_sweep(p, qdtype, delta):
+    rng = np.random.default_rng(p + int(delta))
+    q, scale, base = _encoded_operand(rng, p, qdtype, delta)
+    w, bv, gc = [jnp.asarray(rng.normal(size=(p,)).astype(np.float32))
+                 for _ in range(3)]
+    out = dequant_update(w, q, bv, gc, 0.1, 512.0, 3.0, 1, scale, base,
+                         interpret=True)
+    f32 = jnp.float32
+    ref = dequant_update_ref(w, q, bv, gc, f32(0.1), f32(512.0), f32(3.0),
+                             f32(1.0), f32(scale), base)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-2,
+                               atol=2e-2)
+
+
+@pytest.mark.parametrize("p", [512, 1000])
+@pytest.mark.parametrize("qdtype", [jnp.int8, jnp.bfloat16])
+@pytest.mark.parametrize("delta", [False, True])
+def test_dequant_sub_sweep(p, qdtype, delta):
+    rng = np.random.default_rng(p + 2 * int(delta))
+    q, scale, base = _encoded_operand(rng, p, qdtype, delta)
+    w = jnp.asarray(rng.normal(size=(p,)).astype(np.float32))
+    out = dequant_sub(w, q, scale, base, interpret=True)
+    ref = dequant_sub_ref(w, q, jnp.float32(scale), base)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-2,
+                               atol=2e-2)
+
+
+def test_dequant_absmax_zero_scale_one():
+    """An all-zero residual leaf stores scale 1.0 and q zeros — the kernel
+    must return the base exactly (keyframe entries decode bitwise)."""
+    p = 512
+    base = jnp.asarray(np.random.default_rng(0)
+                       .normal(size=(p,)).astype(np.float32))
+    q = jnp.zeros((p,), jnp.int8)
+    w = base * 2.0
+    out = dequant_sub(w, q, np.float32(1.0), base, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(w - base))
+
+
+def test_dequant_ref_is_the_decode_expression():
+    """The ref oracle and the store's slice decode share one expression."""
+    from repro.core.store import EncodedLeaf, _decode_leaf_slice
+    rng = np.random.default_rng(3)
+    p = 64
+    q = jnp.asarray(rng.integers(-127, 127, size=(2, p)), jnp.int8)
+    scale = jnp.asarray(rng.random(2).astype(np.float32))
+    base = jnp.asarray(rng.normal(size=(1, p)).astype(np.float32))
+    leaf = EncodedLeaf(q=q, scale=scale, base=base,
+                       kidx=jnp.zeros((2,), jnp.int32))
+    got = jax.jit(lambda lf: _decode_leaf_slice(lf, 1))(leaf)
+    ref = jax.jit(dequant_ref)(q[1], scale[1], base[0])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))

@@ -271,6 +271,70 @@ class TestShardedStreamedMesh:
                                        placement=pol)
         assert _dist(w_resume, w_ref) == 0.0
 
+    def test_delta_codec_sharded_stream_parity(self):
+        """delta_int8 on the composed store: per-shard windows ship
+        ENCODED (residual + keyframe shards), decode in-scan, and match
+        the single-device streamed replay of the same history."""
+        import dataclasses
+
+        from repro.core.deltagrad import (deltagrad_retrain,
+                                          sgd_train_with_cache)
+        from repro.core.store import PlacementPolicy
+        from repro.utils.tree import tree_norm
+        ds, obj, meta, p0 = self._mlp_problem()
+        cfg = dataclasses.replace(_cfg(), stream_window=8,
+                                  stream_decode="kernel")
+        changed = np.arange(5)
+        _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host",
+                                    codec="delta_int8")
+        w1, s1 = deltagrad_retrain(obj, h, ds, changed, cfg)
+        w8, s8 = deltagrad_retrain(obj, h, ds, changed, cfg,
+                                   placement=PlacementPolicy.local(N_DEV))
+        assert s8.extra["store"] == "sharded_streamed"
+        assert s8.extra["stream_decode"] == "kernel"
+        assert s8.extra["compression_ratio"] > 1.2
+        rel = _dist(w8, w1) / max(1e-12, float(tree_norm(w1)))
+        assert rel <= TOL
+        assert (s1.approx_steps, s1.explicit_steps) == \
+            (s8.approx_steps, s8.explicit_steps)
+        # encoded per-shard windows undercut the decoded-fetch high-water
+        w8f, s8f = deltagrad_retrain(
+            obj, h, ds, changed,
+            dataclasses.replace(cfg, stream_decode="fetch"),
+            placement=PlacementPolicy.local(N_DEV))
+        assert _dist(w8, w8f) == 0.0
+        assert s8.extra["hbm_high_water"] < s8f.extra["hbm_high_water"]
+
+    def test_delta_write_back_sharded_stream(self):
+        """Online rewrites through the composed store under delta_int8:
+        residuals re-encode against the original keyframes and a fresh
+        sharded engine resumes exactly."""
+        import dataclasses
+
+        from repro.core.deltagrad import sgd_train_with_cache
+        from repro.core.online import online_deltagrad
+        from repro.core.store import PlacementPolicy
+
+        cfg = dataclasses.replace(_cfg(), stream_window=8)
+        pol = PlacementPolicy.local(N_DEV)
+        reqs_all = [("delete", 3), ("delete", 17), ("delete", 40)]
+
+        def mk():
+            ds, obj, meta, p0 = _problem()
+            _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host",
+                                        codec="delta_int8")
+            return ds, obj, h
+
+        ds1, obj1, h1 = mk()
+        w_ref, st = online_deltagrad(obj1, h1, ds1, reqs_all, cfg,
+                                     placement=pol)
+        assert st.per_request[0].extra["store"] == "sharded_streamed"
+        ds2, obj2, h2 = mk()
+        online_deltagrad(obj2, h2, ds2, reqs_all[:2], cfg, placement=pol)
+        w_resume, _ = online_deltagrad(obj2, h2, ds2, reqs_all[2:], cfg,
+                                       placement=pol)
+        assert _dist(w_resume, w_ref) == 0.0
+
     def test_session_save_restore_composed_descriptor(self, tmp_path):
         """save()/restore() round-trips the COMPOSED placement: host tier +
         mesh descriptor + stream window rebuild a `ShardedStreamer`."""

@@ -81,7 +81,9 @@ class TestStreamedReplay:
         ds, obj, meta, p0 = _problem()
         _, h = sgd_train_with_cache(obj, p0, ds, meta, tier="host",
                                     codec=codec)
-        store = SegmentStreamer(h, window=7)
+        # decode="fetch": auto mode keeps non-f32 windows ENCODED for the
+        # dequant kernels; this test reads the decoded arrays directly.
+        store = SegmentStreamer(h, window=7, decode="fetch")
         W, G, off = store.window(7, 14)
         assert off == 7
         for t in (7, 10, 13):

@@ -100,6 +100,23 @@ SUITES = {
          "mesh overhead vs resident"),
         ("wall_ratio_sharded_streamed", "ratio_max", 5.0,
          "composed-store overhead vs resident"),
+        # decode-in-kernel compressed histories (delta_int8 section):
+        # capacity ratios are the claim, the wall ratio has CI-runner
+        # slack, the parity fields are exact invariants
+        ("delta_int8.host_ram_reduction", "ratio_min", 0.8,
+         "per-host RAM cut vs f32 sharded_streamed"),
+        ("delta_int8.disk_bytes_reduction", "ratio_min", 0.8,
+         "windowed-spill disk bytes cut vs f32"),
+        ("delta_int8.compression_ratio", "ratio_min", 0.8,
+         "encoded vs decoded window bytes on device"),
+        ("delta_int8.wall_ratio_vs_sharded_streamed", "ratio_max", 2.0,
+         "cost of serving encoded windows (scheduling jitter slack)"),
+        ("delta_int8.kernel_vs_fetch", "parity", None,
+         "in-scan dequant vs decode-on-fetch (exactly 0.0)"),
+        ("delta_int8.parity_vs_python", "parity", None,
+         "delta replay vs per-step python oracle"),
+        ("delta_int8.sharded_vs_streamed", "parity", None,
+         "composed store vs single-device delta stream"),
     ],
 }
 
@@ -138,15 +155,17 @@ def check_metric(mode: str, threshold: Optional[float], base, cur
     raise ValueError(f"unknown mode {mode!r}")
 
 
+def _cfg(doc: dict) -> dict:
+    return {k: v for k, v in doc.get("config", {}).items() if k != "out"}
+
+
 def compare(suite: str, current: dict, baseline: dict
             ) -> Tuple[List[dict], bool]:
     rows: List[dict] = []
     ok_all = True
 
-    cfg_cur = {k: v for k, v in current.get("config", {}).items()
-               if k != "out"}
-    cfg_base = {k: v for k, v in baseline.get("config", {}).items()
-                if k != "out"}
+    cfg_cur = _cfg(current)
+    cfg_base = _cfg(baseline)
     if cfg_cur != cfg_base:
         drift = sorted(k for k in set(cfg_cur) | set(cfg_base)
                        if cfg_cur.get(k) != cfg_base.get(k))
@@ -212,6 +231,13 @@ def main(argv=None) -> int:
     ap.add_argument("--summary", default=None,
                     help="markdown summary path (default: "
                          "$GITHUB_STEP_SUMMARY when set)")
+    ap.add_argument("--rolling", default=None,
+                    help="optional ROLLING baseline JSON — the bench "
+                         "artifact from the last green main run.  Missing "
+                         "file: skipped (first run / expired artifact); "
+                         "config mismatch: skipped as stale; metric "
+                         "regression vs it: FAIL.  Catches slow drift the "
+                         "committed baseline's loose thresholds absorb.")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -221,6 +247,25 @@ def main(argv=None) -> int:
 
     rows, ok_all = compare(args.suite, current, baseline)
     table = render_table(args.suite, rows, ok_all)
+
+    if args.rolling is not None:
+        if not os.path.exists(args.rolling):
+            table += ("\nRolling baseline: none found at "
+                      f"`{args.rolling}` — skipped (first run or "
+                      "expired artifact).\n")
+        else:
+            with open(args.rolling) as f:
+                rolling = json.load(f)
+            if _cfg(rolling) != _cfg(current):
+                table += ("\nRolling baseline: config differs from this "
+                          "run — skipped as stale.\n")
+            else:
+                r_rows, r_ok = compare(args.suite, current, rolling)
+                table += "\n" + render_table(
+                    f"{args.suite} (rolling, last green main)",
+                    r_rows, r_ok)
+                rows += r_rows
+                ok_all = ok_all and r_ok
     print(table)
 
     summary = args.summary or os.environ.get("GITHUB_STEP_SUMMARY")
