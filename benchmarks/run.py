@@ -12,7 +12,7 @@ import sys
 import time
 
 MODULES = ("batch", "accuracy", "online", "hyperparams", "large_rate",
-           "kernels")
+           "kernels", "certified")
 
 
 def main() -> None:

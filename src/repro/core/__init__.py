@@ -1,3 +1,16 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+# Importing core.algorithms registers the built-in unlearning algorithms
+# (deltagrad, descent_to_delete, retrain_oracle) with the registry that
+# `UnlearnerConfig.algorithm` selects from.
+from repro.core.algorithms import (  # noqa: F401
+    ALGORITHMS,
+    Certificate,
+    DescentToDeleteConfig,
+    UnlearningAlgorithm,
+    available_algorithms,
+    get_algorithm,
+    register,
+)

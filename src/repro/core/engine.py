@@ -1039,12 +1039,17 @@ def _online_approx_step(params, vel, w_t, g_t, dWs, dGs, g_one, lr, kept, dB,
     PRE-request batch size kept+dB for deletes / kept for adds), the
     resulting SGD or heavy-ball update, and the guard verdict.
 
+    The pair ring is the zeros-initialized device ring and may be PARTIALLY
+    filled during burn-in: the masked compact solve derives slot occupancy
+    from the ring itself (`lbfgs.ring_valid_mask`) and is bitwise identical
+    to the unmasked solve once the ring is full.
+
     This is the ONE definition shared verbatim by the scan body and the
     per-step python oracle (`core.online`), which is what makes
     scan-vs-python parity hold to float32 round-off."""
     b_prev = kept + dB if sign > 0 else kept
     v = tree_sub(params, w_t)
-    bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v)
+    bv = lbfgs_hvp_stacked_pytree(dWs, dGs, v, masked=True)
     g_new = _approx_math(g_t, bv, g_one, b_prev, dB, sign)
     if momentum:
         new_p, new_vel = _momentum_math(params, vel, g_new, lr, mom)
@@ -1149,19 +1154,15 @@ def _online_explicit_step(params, vel, t, w_t, g_t, cols,
                                  kept, dB, mom, sign=sign, momentum=momentum)
 
 
-@partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum"))
-def _online_explicit_fused(params, vel, t, w_t, g_t, cols,
-                           sd: DeviceSchedule, dWs, dGs, eps, mom, *,
-                           grad_fn, sign: int, momentum: bool):
-    """`_online_explicit_step` with the Algorithm-4 pair admission resolved
-    ON DEVICE: once the ring buffer is full, admission is a `where`-gated
-    shift-append of the stacked (m, ...) pair arrays — the same rule
-    `<dg, dw> >= eps * <dw, dw>` LbfgsBuffer applies on the host, evaluated
-    without any round-trip, so a steady online request runs with ZERO
-    mid-request host syncs (guard off)."""
-    new_p, new_vel, g_cur, dw, dg, admit = _online_explicit_step(
-        params, vel, t, w_t, g_t, cols, sd, mom, grad_fn=grad_fn, sign=sign,
-        momentum=momentum)
+@jax.jit
+def _ring_append(dWs, dGs, dw, dg, admit, eps):
+    """Where-gated shift-append of the stacked (m, ...) pair ring with the
+    admission rule `<dg, dw> >= eps * <dw, dw>` resolved ON DEVICE.  The
+    ring starts as exact zeros, so the masked compact solve
+    (`lbfgs.compact_coeffs_masked` via `ring_valid_mask`) can consume it at
+    ANY fill level — burn-in no longer needs a host-side buffer phase.
+    Shared by the fused device step and the python oracle so admission is
+    one definition."""
     ok = jnp.logical_and(admit[1] > 0.0, admit[0] >= eps * admit[1])
     dWs = jax.tree.map(
         lambda b, n: jnp.where(
@@ -1171,6 +1172,25 @@ def _online_explicit_fused(params, vel, t, w_t, g_t, cols,
         lambda b, n: jnp.where(
             ok, jnp.concatenate([b[1:], n[None].astype(b.dtype)]), b),
         dGs, dg)
+    return dWs, dGs
+
+
+@partial(jax.jit, static_argnames=("grad_fn", "sign", "momentum"))
+def _online_explicit_fused(params, vel, t, w_t, g_t, cols,
+                           sd: DeviceSchedule, dWs, dGs, eps, mom, *,
+                           grad_fn, sign: int, momentum: bool):
+    """`_online_explicit_step` with the Algorithm-4 pair admission resolved
+    ON DEVICE via `_ring_append` — every explicit step (burn-in included)
+    runs this fused program against the zeros-initialized ring, so an
+    online request has ZERO mid-request host syncs (guard off).  No fill
+    count crosses this program's boundary: occupancy is derived from the
+    ring by the masked solve, which keeps this program — and so the
+    full-ring replay results — bitwise identical to the pre-masking
+    engine."""
+    new_p, new_vel, g_cur, dw, dg, admit = _online_explicit_step(
+        params, vel, t, w_t, g_t, cols, sd, mom, grad_fn=grad_fn, sign=sign,
+        momentum=momentum)
+    dWs, dGs = _ring_append(dWs, dGs, dw, dg, admit, eps)
     return new_p, new_vel, g_cur, dWs, dGs
 
 
@@ -1220,7 +1240,6 @@ def run_online_request(
         gather = runner.gather_info()
     if seg_grad_fn is None:
         seg_grad_fn = grad_fn
-    buffer = LbfgsBuffer(cfg.history_size, curvature_eps=cfg.curvature_eps)
     params = store.params0()  # w_0 is never rewritten
     vel = _tree_zeros(params) if momentum else None
     clip = jnp.float32(cfg.guard_norm_clip)
@@ -1262,50 +1281,31 @@ def run_online_request(
         pg.append(g)
         write_end = t + span
 
-    # L-BFGS pair state runs in two phases.  While the ring is FILLING, the
-    # host buffer decides admission (one sync per explicit run).  Once it is
-    # full — normally right after the burn-in — the stacked (m, ...) pair
-    # arrays are adopted as a DEVICE ring and `_online_explicit_fused`
-    # resolves admission with a where-gated shift-append: the rest of the
-    # request runs with zero host syncs (guard off).
-    dWs = dGs = None
+    # The L-BFGS pair ring lives ON DEVICE from step 0: a zeros-initialized
+    # stacked (m, ...) ring plus an admitted-pair `count`, appended to by the
+    # where-gated `_ring_append` inside every fused explicit step and read by
+    # scanned segments through the MASKED compact solve
+    # (`lbfgs.compact_coeffs_masked` — exact at any fill level, bitwise
+    # identical to the unmasked solve once the ring is full).  Burn-in no
+    # longer runs a host-side buffer phase, so a request has zero
+    # mid-request host syncs even before the ring fills (guard off).
+    dWs = jax.tree.map(
+        lambda x: jnp.zeros((cfg.history_size,) + x.shape, x.dtype), params)
+    dGs = dWs
+    ring_started = False  # True once any explicit step ran (plan invariant:
+    #                       the first non-skipped step is always explicit)
     eps = jnp.float32(cfg.curvature_eps)
 
-    def explicit_host(params, vel, t, r2):
-        """Explicit steps [t, r2) dispatched back-to-back; the admission
-        scalars sync ONCE at the end of the run — explicit steps never read
-        the pair buffer, so admission can lag until the next segment."""
-        pairs: List[Tuple[Any, Any]] = []
-        admits: List[Any] = []
+    def do_explicit(params, vel, t, r2):
+        nonlocal dWs, dGs, ring_started
         for tt in range(t, r2):
             p_in = params
             w_t, g_t = store.entry(tt)
-            params, vel, g_cur, dw, dg, admit = _online_explicit_step(
-                params, vel, tt, w_t, g_t, cols, sd, mom, grad_fn=grad_fn,
-                sign=sign, momentum=momentum)
+            params, vel, g_cur, dWs, dGs = _online_explicit_fused(
+                params, vel, tt, w_t, g_t, cols, sd, dWs, dGs, eps, mom,
+                grad_fn=grad_fn, sign=sign, momentum=momentum)
             note_single(tt, p_in, g_cur)
-            pairs.append((dw, dg))
-            admits.append(admit)
-        ads = np.asarray(admits[0])[None] if len(admits) == 1 \
-            else np.asarray(jnp.stack(admits))
-        for (dw, dg), ad in zip(pairs, ads):
-            buffer.add_pair(dw, dg, float(ad[0]), float(ad[1]))
-        return params, vel
-
-    def do_explicit(params, vel, t, r2):
-        nonlocal dWs, dGs
-        if dWs is None:
-            params, vel = explicit_host(params, vel, t, r2)
-            if len(buffer) == buffer.capacity:
-                dWs, dGs = buffer.stacked()
-        else:
-            for tt in range(t, r2):
-                p_in = params
-                w_t, g_t = store.entry(tt)
-                params, vel, g_cur, dWs, dGs = _online_explicit_fused(
-                    params, vel, tt, w_t, g_t, cols, sd, dWs, dGs, eps, mom,
-                    grad_fn=grad_fn, sign=sign, momentum=momentum)
-                note_single(tt, p_in, g_cur)
+        ring_started = True
         stats.grad_examples += int(
             (sched.kept[t:r2] + sched.dB[t:r2]).sum())
         stats.explicit_steps += r2 - t
@@ -1314,15 +1314,14 @@ def run_online_request(
     t = 0
     while t < T:
         code = plan[t]
-        have_pairs = dWs is not None or len(buffer) > 0
-        if code == EXPLICIT or (code == APPROX and not have_pairs):
+        if code == EXPLICIT or (code == APPROX and not ring_started):
             r2 = t + 1
             if code == EXPLICIT:
                 while r2 < T and plan[r2] == EXPLICIT:
                     r2 += 1
             params, vel = do_explicit(params, vel, t, r2)
             t = r2
-        elif code == SKIP and not have_pairs:
+        elif code == SKIP and not ring_started:
             t += 1  # entry stays as-is; the write region simply breaks here
         else:
             t2 = t
@@ -1346,7 +1345,7 @@ def run_online_request(
 
             while t < t2:
                 b = store.span_end(t, t2)
-                pW, pG = (dWs, dGs) if dWs is not None else buffer.stacked()
+                pW, pG = dWs, dGs
                 p_in, v_in = params, vel
                 params, vel, w_wr, g_wr, oks = scan_segment(
                     p_in, v_in, t, b, pW, pG)
@@ -1402,8 +1401,6 @@ def run_online_request(
     # rebuilt from the rewritten path on every request, so this is state
     # a snapshot records rather than state the next request consumes);
     # the engine pops it off extra so logged stats stay device-array-free
-    if dWs is not None:
+    if ring_started:
         stats.extra["lbfgs_ring"] = (dWs, dGs)
-    elif len(buffer):
-        stats.extra["lbfgs_ring"] = buffer.stacked()
     return params, stats

@@ -70,6 +70,69 @@ def compact_coeffs(
     return CompactCoeffs(sigma=sigma, a=sigma * q[:m], b=q[m:])
 
 
+def valid_pair_mask(count: jax.Array, m: int) -> jax.Array:
+    """(m,) bool mask for a newest-last ring holding ``min(count, m)`` pairs.
+
+    The engine's device ring appends by shifting left, so with ``count``
+    admitted pairs the valid slots are the trailing ``min(count, m)`` rows.
+    """
+    return jnp.arange(m) >= (m - jnp.minimum(count, m))
+
+
+def ring_valid_mask(dWs) -> jax.Array:
+    """(m,) bool — derive ring occupancy FROM the ring: slot i holds an
+    admitted pair iff its dw row is nonzero anywhere.
+
+    Sound because admission requires ``<dw, dw> > 0`` (a zero dw can never
+    be admitted) and empty slots of the zeros-initialized shift-append ring
+    are exact zeros.  Deriving the mask on device means no separate count
+    state crosses program boundaries — the fused explicit step's program is
+    untouched, which keeps full-ring replays bitwise identical to the
+    unmasked path.  The per-leaf any() reduces trailing axes shard-locally
+    (boolean OR — associativity-safe under any reduction order)."""
+    nz = [jnp.any(w != 0, axis=tuple(range(1, w.ndim)))
+          for w in jax.tree.leaves(dWs)]
+    valid = nz[0]
+    for x in nz[1:]:
+        valid = jnp.logical_or(valid, x)
+    return valid
+
+
+def compact_coeffs_masked(
+    sw: jax.Array, sy: jax.Array, wv: jax.Array, gv: jax.Array, valid: jax.Array
+) -> CompactCoeffs:
+    """``compact_coeffs`` over a partially-filled ring.
+
+    Requires invalid ring slots to be EXACT zeros (the device ring
+    guarantees this: slots start at zero and rejected pairs never write).
+    Then every Gram entry touching an invalid slot is already 0.0, and the
+    2m x 2m system block-decouples: placing a 1 on the diagonal of invalid
+    rows makes those rows ``e_i`` with a zero rhs, so their coefficients
+    solve to exactly 0 and the valid sub-block is untouched.  With all m
+    slots valid the mask is all-False and ``jnp.where`` returns ``mid``
+    verbatim — bitwise identical to the unmasked solve.
+
+    ``count == 0`` degenerates gracefully: ``sigma = 0/1 = 0`` (zero ring
+    slots) and ``q = 0``, so the resulting operator is ``B v = 0`` — the
+    exact leave-one-out estimate when ``w^I = w`` (the only way the first
+    explicit step's pair is rejected).
+    """
+    m = sw.shape[0]
+    diag_sy = jnp.diag(sy)
+    sigma = diag_sy[-1] / jnp.where(sw[-1, -1] == 0, 1.0, sw[-1, -1])
+    ell = jnp.tril(sy, k=-1)
+    dmat = jnp.diag(diag_sy)
+    top = jnp.concatenate([sigma * sw, ell], axis=1)
+    bot = jnp.concatenate([ell.T, -dmat], axis=1)
+    mid = jnp.concatenate([top, bot], axis=0)  # (2m, 2m)
+    valid2 = jnp.concatenate([valid, valid])
+    invalid_diag = jnp.eye(2 * m, dtype=bool) & ~valid2[None, :]
+    mid = jnp.where(invalid_diag, 1.0, mid)
+    rhs = jnp.concatenate([sigma * wv, gv])  # (2m,)
+    q = jnp.linalg.solve(mid, rhs)
+    return CompactCoeffs(sigma=sigma, a=sigma * q[:m], b=q[m:])
+
+
 # --------------------------------------------------------------------------
 # Stacked (m, p) backend
 # --------------------------------------------------------------------------
@@ -169,10 +232,19 @@ def gram_terms_stacked_pytree(dWs, dGs, v):
     return sw, sy, wv, gv
 
 
-def lbfgs_hvp_stacked_pytree(dWs, dGs, v):
-    """B v with history stacked along a leading axis of every leaf."""
+def lbfgs_hvp_stacked_pytree(dWs, dGs, v, masked: bool = False):
+    """B v with history stacked along a leading axis of every leaf.
+
+    With ``masked=True`` the ring may be PARTIALLY filled: empty slots must
+    be exact zeros (the engine's zeros-initialized shift-append ring), the
+    occupancy mask is derived from the ring via `ring_valid_mask`, and the
+    masked solve matches the occupied-pair operator — bitwise identical to
+    the unmasked solve once the ring is full."""
     sw, sy, wv, gv = gram_terms_stacked_pytree(dWs, dGs, v)
-    c = compact_coeffs(sw, sy, wv, gv)
+    if masked:
+        c = compact_coeffs_masked(sw, sy, wv, gv, ring_valid_mask(dWs))
+    else:
+        c = compact_coeffs(sw, sy, wv, gv)
 
     def upd(x, w, g):
         shape = (-1,) + (1,) * (x.ndim)

@@ -48,10 +48,9 @@ import numpy as np
 from repro.core.deltagrad import (DeltaGradConfig, Objective, RetrainStats,
                                   _next_pow2, _tree_zeros)
 from repro.core.engine import (SKIP, EXPLICIT, _online_approx_step,
-                               _online_explicit_math, build_plan,
-                               run_online_request)
+                               _online_explicit_math, _ring_append,
+                               build_plan, run_online_request)
 from repro.core.history import TrainingHistory
-from repro.core.lbfgs import LbfgsBuffer
 from repro.core.store import (HistoryStore, PlacementPolicy,
                               make_psum_grad_fn)
 from repro.data.dataset import Dataset
@@ -387,12 +386,21 @@ def _online_request_python(grad_fn, history, ds, sched: ReplaySchedule,
     sign = 1 if op == "delete" else -1
     momentum = bool(meta.momentum)
     plan = build_plan(cfg, sched, online=True)
-    buffer = LbfgsBuffer(cfg.history_size, curvature_eps=cfg.curvature_eps)
     params = history.params_at(0)
     vel = _tree_zeros(params) if momentum else None
     mom = jnp.float32(meta.momentum)
     clip = jnp.float32(cfg.guard_norm_clip)
     stats = RetrainStats()
+    # zeros-initialized device pair ring, mirroring the scan path's
+    # `_ring_append` / masked-solve semantics exactly (the same jitted
+    # admission + compact solve, with slot occupancy derived FROM the ring,
+    # so parity holds at ANY fill level — including a partially-filled
+    # ring during burn-in)
+    dWs = jax.tree.map(
+        lambda x: jnp.zeros((cfg.history_size,) + x.shape, x.dtype), params)
+    dGs = dWs
+    ring_started = False
+    eps = jnp.float32(cfg.curvature_eps)
 
     def changed_grad(t):
         has = jnp.float32(1.0 if sched.dB[t] > 0 else 0.0)
@@ -409,13 +417,12 @@ def _online_request_python(grad_fn, history, ds, sched: ReplaySchedule,
         dB = jnp.float32(sched.dB[t])
         lr = jnp.float32(meta.lr_at(t))
         w_t, g_t = history.entry(t)
-        explicit = code == EXPLICIT or len(buffer) == 0
+        explicit = code == EXPLICIT or not ring_started
         g_one = None
 
         if not explicit:
             g_one = changed_grad(t)
             stats.grad_examples += int(sched.dB[t])
-            dWs, dGs = buffer.stacked()
             new_p, new_vel, g_new, ok = _online_approx_step(
                 params, vel, w_t, g_t, dWs, dGs, g_one, lr, kept, dB, clip,
                 mom, sign=sign, momentum=momentum)
@@ -438,8 +445,8 @@ def _online_request_python(grad_fn, history, ds, sched: ReplaySchedule,
             params, vel, g_cur, dw, dg, admit = _online_explicit_math(
                 params, vel, w_t, g_t, g_base, g_one, lr, kept, dB, mom,
                 sign=sign, momentum=momentum)
-            curv, ss = np.asarray(admit)
-            buffer.add_pair(dw, dg, float(curv), float(ss))
+            dWs, dGs = _ring_append(dWs, dGs, dw, dg, admit, eps)
+            ring_started = True
             history.overwrite(t, p_in, g_cur)
             stats.explicit_steps += 1
 
@@ -447,6 +454,6 @@ def _online_request_python(grad_fn, history, ds, sched: ReplaySchedule,
     if op == "add":
         base = base + sched.dB.astype(np.int64)
     stats.grad_examples_baseline = int(base.sum())
-    if len(buffer):  # see run_online_request: snapshot state for sessions
-        stats.extra["lbfgs_ring"] = buffer.stacked()
+    if ring_started:  # see run_online_request: snapshot state for sessions
+        stats.extra["lbfgs_ring"] = (dWs, dGs)
     return params, stats

@@ -5,13 +5,24 @@ adding iid Laplace(delta/eps) noise per coordinate with ``delta >= sqrt(p) *
 delta_0`` makes the released DeltaGrad model an ε-approximate deletion in the
 sense of Definition 3 (the log-density ratio between noised-DeltaGrad and
 noised-exact-retrain is bounded by eps).
+
+This module also carries the Gaussian mechanism used by the
+descent-to-delete algorithm (Neel et al. 2020): there the deviation bound
+is an L2 ball, so calibrated Gaussian noise gives (ε, δ)-indistinguishability
+from the retrained-and-noised release.
+
+Both publishers are ONE compiled tree-map (`jax.jit` keyed on the params
+treedef/shapes), sample per-leaf from independent split keys, and preserve
+every leaf's dtype exactly — the published model is a drop-in replacement
+for the private one.
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any
+from functools import partial
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,21 +58,88 @@ class DeletionBoundConstants:
         return num / (self.lr * denom_c ** 2)
 
 
+@dataclass
+class PrivacyConfig:
+    """Certified-deletion knobs shared by every registered algorithm.
+
+    eps/delta are the published guarantee targets; mu/L/c0/c2/c1 are the
+    objective's regularity constants (strong convexity, smoothness, Hessian
+    Lipschitz, per-sample gradient bound, strong independence).  ``mu=None``
+    resolves to the objective's l2 coefficient — the only convexity the
+    regularized losses guarantee unconditionally.
+    """
+
+    eps: float = 1.0
+    delta: float = 1e-5  # Gaussian-mechanism delta (Laplace uses delta=0)
+    mu: Optional[float] = None
+    L: float = 1.0
+    c0: float = 1.0
+    c2: float = 1.0
+    c1: float = 0.2
+    m: int = 2
+
+    def resolve_mu(self, l2: float) -> float:
+        mu = self.mu if self.mu is not None else l2
+        if mu <= 0:
+            raise ValueError(
+                "privacy bounds need strong convexity: set PrivacyConfig.mu "
+                "or use an l2-regularized objective")
+        return float(mu)
+
+    def constants(self, lr: float, n: int, r: int,
+                  l2: float = 0.0) -> DeletionBoundConstants:
+        return DeletionBoundConstants(
+            mu=self.resolve_mu(l2), L=self.L, c0=self.c0, c2=self.c2,
+            lr=float(lr), n=int(n), r=int(r), m=self.m, c1=self.c1)
+
+
 def num_params(params: Any) -> int:
     return sum(x.size for x in jax.tree.leaves(params))
 
 
-def laplace_publish(key: jax.Array, params: Any, eps: float, delta0: float):
-    """Add iid Laplace(delta/eps) noise per coordinate, delta = sqrt(p)*delta0."""
-    p = num_params(params)
-    scale = math.sqrt(p) * delta0 / eps
+@partial(jax.jit, static_argnames=("dist",))
+def _noise_publish(key: jax.Array, params: Any, scale: jax.Array,
+                   *, dist: str):
+    """ONE compiled publisher: per-leaf independent keys, leaf-dtype noise.
+
+    The additions happen in each leaf's own dtype so the published pytree's
+    structure AND dtypes match the input exactly (an f64 head next to f32
+    features stays f64)."""
     leaves, treedef = jax.tree.flatten(params)
     keys = jax.random.split(key, len(leaves))
+    sampler = jax.random.laplace if dist == "laplace" else jax.random.normal
     noised = [
-        leaf + scale * jax.random.laplace(k, leaf.shape, dtype=jnp.float32)
+        leaf + (scale.astype(leaf.dtype)
+                * sampler(k, leaf.shape, dtype=leaf.dtype))
         for leaf, k in zip(leaves, keys)
     ]
     return jax.tree.unflatten(treedef, noised)
+
+
+def laplace_publish(key: jax.Array, params: Any, eps: float, delta0: float):
+    """Add iid Laplace(delta/eps) noise per coordinate, delta = sqrt(p)*delta0.
+
+    jit-compatible and deterministic under `key`: the whole publication is
+    one compiled tree-map (reused across calls with the same param shapes),
+    and all randomness flows from the caller's key — no module-level state."""
+    p = num_params(params)
+    scale = jnp.float32(math.sqrt(p) * delta0 / eps)
+    return _noise_publish(key, params, scale, dist="laplace")
+
+
+def gaussian_sigma(bound: float, eps: float, delta: float) -> float:
+    """Gaussian-mechanism noise scale for an L2 sensitivity `bound`:
+    sigma = bound * sqrt(2 ln(1.25/delta)) / eps (Dwork & Roth Thm A.1)."""
+    if not 0 < delta < 1:
+        raise ValueError(f"gaussian mechanism needs 0 < delta < 1, got {delta}")
+    return float(bound) * math.sqrt(2.0 * math.log(1.25 / delta)) / float(eps)
+
+
+def gaussian_publish(key: jax.Array, params: Any, sigma: float):
+    """Add iid N(0, sigma^2) noise per coordinate (descent-to-delete's
+    publication step); same compiled one-tree-map/dtype-preserving contract
+    as `laplace_publish`."""
+    return _noise_publish(key, params, jnp.float32(sigma), dist="gaussian")
 
 
 def empirical_epsilon(w_i: Any, w_u: Any, eps: float, delta0: float, p: int) -> float:

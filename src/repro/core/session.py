@@ -45,12 +45,48 @@ Design:
 
   * SNAPSHOT/RESTORE.  `save()` writes params through `train/checkpoint`
     (sharded .npz + atomic manifest) with the `TrainingHistory` state (all
-    tiers), dataset columns + deletion mask, and the engine's stream state
-    (liveness, added-row order, capacities, last L-BFGS pair ring) in the
-    checkpoint's extra payload.  `restore()` rebuilds a session that
-    serves the next request with results identical to the uninterrupted
-    one.  Objectives hold code, not state, so the caller passes the
-    objective to `restore()`.
+    tiers), dataset columns + deletion mask, the ALGORITHM DESCRIPTOR
+    (name + algorithm state, e.g. the engine's liveness/added-row
+    order/capacities/L-BFGS ring, or descent-to-delete's contraction
+    bound) and the session PRNG key in the checkpoint's extra payload.
+    `restore()` rebuilds a session that serves the next request — and the
+    next certified `publish()` — with results identical to the
+    uninterrupted one.  Objectives hold code, not state, so the caller
+    passes the objective to `restore()`.
+
+ALGORITHM SELECTION (``UnlearnerConfig.algorithm``) — every entry in
+`core.algorithms`'s registry serves through this same session surface:
+
+  * ``"deltagrad"`` (default) — the paper's Algorithm 3: L-BFGS-corrected
+    replay of the cached path.  Per-request cost ~ the explicit steps'
+    gradients only; answers track exact retraining to within the paper's
+    approximation error.  Choose it when requests trickle in and the
+    cached path is warm — it is the low-latency path this repo exists
+    for.  Certificate: Laplace ε-approximate deletion from the §5.1 δ0
+    bound (δ = 0); the bound needs r ≪ n and strong convexity, and
+    `certificate()` raises once cumulative removals push δ0's
+    denominator negative.
+  * ``"descent_to_delete"`` — noisy projected fine-tuning (Neel et al.
+    2020): I full-batch steps from the current params per request group,
+    Gaussian noise at publication.  Cost is independent of the training
+    length T, so it wins on wall-clock whenever T-step replay (or
+    retraining) is the alternative and a weaker, (ε, δ)-style guarantee
+    with contraction bound ρ^I(bound + Δ) suffices.  Needs strong
+    convexity for the contraction (κ = L/μ finite).
+  * ``"retrain_oracle"`` — exact retraining served through the same
+    engine (all-explicit plan).  The reference everything else is
+    certified against: ε = 0, bound = 0, publish is the identity.  Use
+    it for ground truth, audits, and small problems where exactness is
+    cheap.
+
+  Certificate semantics: `certificate()` reports (mechanism, ε, δ,
+  bound, noise_scale) where `bound` certifies ``||w_alg − w_retrain*||``
+  under the algorithm's analysis; `publish()` draws the calibrated noise
+  deterministically from the session-held PRNG key (split per call, so a
+  restored session publishes bitwise-identically).  ALL bounds assume
+  the strongly-convex regularized setting — for non-convex objectives
+  the numbers are diagnostics, not guarantees (the paper's guard only
+  protects the replay's stability, not the certificate).
 
 `core.api.Unlearner` is a thin compatibility shim over this class.
 """
@@ -65,10 +101,13 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.core.algorithms import (Certificate, DescentToDeleteConfig,
+                                   UnlearningAlgorithm, get_algorithm)
 from repro.core.deltagrad import (DeltaGradConfig, Objective, RetrainStats,
                                   baseline_retrain, sgd_train_with_cache)
 from repro.core.history import HistoryMeta, TrainingHistory
 from repro.core.online import OnlineEngine, OnlineStats
+from repro.core.privacy import PrivacyConfig
 from repro.core.store import PlacementPolicy
 from repro.data.dataset import Dataset
 from repro.train import checkpoint as ckpt
@@ -103,6 +142,14 @@ class UnlearnerConfig:
     # long (checked at submit and via session.poll()).  None disables.
     max_pending: Optional[int] = None
     max_delay_s: Optional[float] = None
+    # which registered unlearning algorithm serves requests — see the
+    # module docstring's selection guide and core/algorithms.py
+    algorithm: str = "deltagrad"
+    # certified-deletion constants (ε/δ targets + regularity constants);
+    # None resolves to PrivacyConfig() defaults at certificate time
+    privacy: Optional[PrivacyConfig] = None
+    # descent-to-delete knobs (finetune steps, lr, projection radius)
+    descent: Optional[DescentToDeleteConfig] = None
 
 
 @dataclass
@@ -261,7 +308,8 @@ class UnlearnerSession:
         self.history: Optional[TrainingHistory] = None
         self.log: List[Dict] = []
         self._trained_params: Any = params0
-        self._engine: Optional[OnlineEngine] = None
+        self._algorithm: Optional[UnlearningAlgorithm] = None
+        self._prng_key: Optional[jax.Array] = None
         self._pending: List[Tuple[int, UnlearnRequest]] = []
         self._responses: Dict[int, UnlearnResponse] = {}
         self._failed: Dict[int, Exception] = {}
@@ -310,54 +358,97 @@ class UnlearnerSession:
             spill_dir=c.spill_dir,
             window=c.deltagrad.stream_window,
         )
-        self._engine = None
+        self._algorithm = None
         return self._trained_params
 
     def _require_fit(self):
         if self.history is None:
             raise RuntimeError("call fit() (or restore()) before serving")
 
-    # -- engine / current model ---------------------------------------------
+    # -- algorithm / engine / current model ---------------------------------
+
+    @property
+    def algorithm(self) -> UnlearningAlgorithm:
+        """The session's ONE serving algorithm (created lazily from
+        ``config.algorithm`` via the `core.algorithms` registry, bound to
+        the cached run by `prepare()`)."""
+        self._require_fit()
+        if self._algorithm is None:
+            cls = get_algorithm(self.config.algorithm)
+            self._algorithm = cls(self.objective, self.dataset, self.config)
+            self._algorithm.prepare(self.history, self._trained_params,
+                                    self.params0)
+        return self._algorithm
+
+    @property
+    def _engine(self) -> Optional[OnlineEngine]:
+        """The algorithm's online engine, when it has one (deltagrad /
+        retrain_oracle); None before the first request and for
+        engine-less algorithms.  Kept as a property because drivers and
+        tests reach for the engine's liveness/added state directly."""
+        if self._algorithm is None:
+            return None
+        return getattr(self._algorithm, "_engine", None)
 
     def engine(self, placement: Optional[PlacementPolicy] = None
                ) -> OnlineEngine:
-        """The session's ONE online engine (created lazily; owns liveness,
+        """The session's online engine (created lazily; owns liveness,
         added-row join columns, and the rewritten cached path — served
-        through a `core.store.HistoryStore`).
+        through a `core.store.HistoryStore`).  Only engine-backed
+        algorithms (deltagrad, retrain_oracle) have one.
 
         `placement` overrides ``config.placement`` for the engine's store
         on FIRST creation (mesh-sharded resident replay); after that the
         engine — and its placement — is fixed for the session's life."""
-        self._require_fit()
-        if self._engine is None:
-            self._engine = OnlineEngine(
-                self.objective, self.history, self.dataset,
-                self.config.deltagrad,
-                placement=placement or self.config.placement)
-        elif placement is not None:
+        algo = self.algorithm
+        if not hasattr(algo, "engine"):
             raise RuntimeError(
-                "the session's engine already exists; placement must be "
-                "chosen before the first request (pass it to the first "
-                "engine() call or set config.placement)")
-        return self._engine
+                f"algorithm {algo.name!r} does not serve through an "
+                "OnlineEngine; use session.algorithm directly")
+        return algo.engine(placement=placement)
 
     def warmup(self, specs=("delete",)) -> float:
         """Pre-compile the request programs; `specs` entries are op names
         or ``(op, group_size)`` pairs (group sizes bucket to pow2, so warm
         the bucket the serving bursts will hit).  Returns compile time."""
-        engine = self.engine()
-        if engine.impl == "scan":
-            engine._warmup(tuple(specs))
-        return engine.compile_time_s
+        return self.algorithm.warmup(tuple(specs))
 
     @property
     def params(self):
         """Current model — forces every pending request and blocks."""
         self.flush()
-        p = self._engine.params if self._engine is not None \
+        p = self._algorithm.params if self._algorithm is not None \
             else self._trained_params
         jax.block_until_ready(p)
         return p
+
+    # -- certified publication ----------------------------------------------
+
+    def _next_key(self) -> jax.Array:
+        """Split one use-key off the session-held PRNG key (created from
+        ``config.seed`` on first use; save()/restore() round-trips it, so
+        a restored session's next publish is bitwise-identical)."""
+        if self._prng_key is None:
+            self._prng_key = jax.random.PRNGKey(self.config.seed)
+        self._prng_key, key = jax.random.split(self._prng_key)
+        return key
+
+    def certificate(self, eps: Optional[float] = None,
+                    delta: Optional[float] = None) -> Certificate:
+        """The serving algorithm's current deletion certificate — no
+        noise is drawn and no state changes."""
+        self.flush()
+        return self.algorithm.certificate(eps=eps, delta=delta)
+
+    def publish(self, eps: Optional[float] = None,
+                delta: Optional[float] = None):
+        """(params, Certificate): certified release of the current model
+        through the algorithm's mechanism, with noise drawn from the
+        session PRNG key (one split per publish)."""
+        with self._lock:
+            params = self.params  # flush + block
+            return self.algorithm.publish(self._next_key(), params,
+                                          eps=eps, delta=delta)
 
     # -- phase 2: the request plan ------------------------------------------
 
@@ -406,7 +497,8 @@ class UnlearnerSession:
         else:
             pending_add = {r for _, q in self._pending if q.op == "add"
                            for r in q.rows}
-            already = set(self._engine.added) if self._engine else set()
+            already = (set(self._algorithm.added)
+                       if self._algorithm is not None else set())
             base_n = self.history.meta.n
             for r in request.rows:
                 if not base_n <= r < self.dataset.n:
@@ -531,14 +623,13 @@ class UnlearnerSession:
     def _flush_locked(self) -> List[UnlearnResponse]:
         if not self._pending:
             return []
-        engine = self.engine()
+        algo = self.algorithm
         pending, self._pending = self._pending, []
         ts0, self._oldest_pending_ts = self._oldest_pending_ts, None
         # size the add-column block for the whole plan once so the padded
         # schedule width (and every compiled shape) stays put across it
         n_adds = sum(len(q.rows) for _, q in pending if q.op == "add")
-        engine.add_capacity = max(engine.add_capacity,
-                                  len(engine.added) + n_adds)
+        algo.begin_plan(n_adds)
         out: List[UnlearnResponse] = []
         groups = plan_requests(pending)
         for gi, group in enumerate(groups):
@@ -546,10 +637,8 @@ class UnlearnerSession:
             rows = [r for _, q in group for r in q.rows]
             t0 = time.perf_counter()
             try:
-                if group[0][1].coalesce and len(rows) > 1:
-                    stats = [engine.request_group(op, rows)]
-                else:
-                    stats = [engine.request(op, r) for r in rows]
+                stats = algo.apply(op, rows,
+                                   coalesce=group[0][1].coalesce)
             except Exception as e:
                 # the failing group's handles resolve to this error; groups
                 # after it go back on the queue (ahead of anything submitted
@@ -569,7 +658,7 @@ class UnlearnerSession:
                 resp = UnlearnResponse(request=req, stats=stats,
                                        group_size=len(rows),
                                        dispatch_s=dispatch_s,
-                                       params=engine.params)
+                                       params=algo.params)
                 self._record(ticket, resp)
                 out.append(resp)
             self.log.append({"op": op, "rows": rows,
@@ -585,13 +674,13 @@ class UnlearnerSession:
         the final device sync, with compile cost reported separately."""
         self._require_fit()
         self.flush()  # drain older pending work outside this stream's timer
-        engine = self.engine()
+        algo = self.algorithm
         handles = [self.submit(op=op, rows=[int(row)], coalesce=False)
                    for op, row in ops]
-        stats = OnlineStats(compile_time_s=engine.compile_time_s)
+        stats = OnlineStats(compile_time_s=algo.compile_time_s)
         t0 = time.perf_counter()
         self.flush()
-        jax.block_until_ready(engine.params)
+        jax.block_until_ready(algo.params)
         stats.wall_time_s = time.perf_counter() - t0
         for h in handles:
             stats.per_request.extend(h.stats)
@@ -633,12 +722,12 @@ class UnlearnerSession:
     def _save_locked(self, directory: str, step: Optional[int]) -> str:
         self._require_fit()
         self.flush()
-        params = self._engine.params if self._engine is not None \
+        params = self._algorithm.params if self._algorithm is not None \
             else self._trained_params
         jax.block_until_ready(params)
         step = self._tickets if step is None else int(step)
         extra = {
-            "format": 1,
+            "format": 2,
             "config": self.config,
             "params0": jax.device_get(self.params0),
             "history": self.history.state_dict(),
@@ -647,8 +736,16 @@ class UnlearnerSession:
                             for k, v in self.dataset.columns.items()},
                 "removed": np.asarray(self.dataset.removed, dtype=bool).copy(),
             },
-            "engine": (self._engine.state_dict()
-                       if self._engine is not None else None),
+            # the algorithm descriptor: which algorithm served this
+            # session plus its full serving state, so restore() rebuilds
+            # the SAME algorithm mid-stream (format 1 snapshots carried a
+            # bare deltagrad engine state under "engine")
+            "algorithm": ({
+                "name": self._algorithm.name,
+                "state": self._algorithm.state_dict(),
+            } if self._algorithm is not None else None),
+            "prng_key": (np.asarray(jax.device_get(self._prng_key))
+                         if self._prng_key is not None else None),
             "tickets": self._tickets,
         }
         return ckpt.save(directory, step, params, extra=extra)
@@ -681,7 +778,17 @@ class UnlearnerSession:
         sess.history = history
         sess._trained_params = params
         sess._tickets = int(extra.get("tickets", 0))
-        if extra.get("engine") is not None:
+        key = extra.get("prng_key")
+        if key is not None:
+            sess._prng_key = jax.numpy.asarray(np.asarray(key))
+        algo_desc = extra.get("algorithm")
+        if algo_desc is not None:
+            if algo_desc["name"] != sess.config.algorithm:
+                raise ValueError(
+                    f"snapshot was served by {algo_desc['name']!r} but the "
+                    f"restored config selects {sess.config.algorithm!r}")
+            sess.algorithm.load_state(algo_desc["state"], params)
+        elif extra.get("engine") is not None:  # format 1 (pre-registry)
             engine = sess.engine()
             engine.load_state(extra["engine"])
             engine.params = params

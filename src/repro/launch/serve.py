@@ -49,6 +49,7 @@ def unlearn_main(argv) -> None:
     import json
 
     from repro.core.deltagrad import DeltaGradConfig
+    from repro.core.privacy import PrivacyConfig
     from repro.core.session import UnlearnerConfig, UnlearnerSession
     from repro.data.synthetic import binary_classification
     from repro.models.simple import (logreg_accuracy, logreg_init,
@@ -69,6 +70,12 @@ def unlearn_main(argv) -> None:
     ap.add_argument("--add-frac", type=float, default=0.25,
                     help="fraction of requests that are additions")
     ap.add_argument("--impl", default="scan", choices=("scan", "python"))
+    ap.add_argument("--algorithm", default="deltagrad",
+                    help="registered unlearning algorithm serving the "
+                         "stream (core.algorithms registry)")
+    ap.add_argument("--eps", type=float, default=1.0,
+                    help="certified-deletion epsilon for the published "
+                         "model / certificate report")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--burst", type=int, default=8,
                     help="K for the coalesced-vs-serial delete burst")
@@ -87,7 +94,8 @@ def unlearn_main(argv) -> None:
     obj = logreg_objective(l2=args.l2)
     cfg = UnlearnerConfig(
         steps=args.steps, batch_size=args.batch, lr=args.lr, seed=args.seed,
-        momentum=args.momentum,
+        momentum=args.momentum, algorithm=args.algorithm,
+        privacy=PrivacyConfig(eps=args.eps, mu=0.5, L=1.0, c0=0.1, c2=0.1),
         deltagrad=DeltaGradConfig(period=args.period, burn_in=args.burn_in,
                                   impl=args.impl))
 
@@ -111,12 +119,12 @@ def unlearn_main(argv) -> None:
     rng = np.random.default_rng(args.seed + 1)
     pool_src = rng.integers(0, args.n, size=args.requests)
     add_pool = list(ds.append({k: v[pool_src] for k, v in ds.columns.items()}))
-    engine = sess.engine()
-    engine.add_capacity = args.requests
+    algo = sess.algorithm
+    algo.begin_plan(args.requests)
 
     warm = [("delete", 1)] + ([("add", 1)] if args.add_frac > 0 else [])
     compile_s = sess.warmup(warm)
-    print(f"session up (impl={engine.impl}); first-request compile "
+    print(f"session up (algorithm={algo.name}); first-request compile "
           f"{compile_s * 1e3:.0f} ms")
 
     # -- latency loop: dispatch (what the request queue sees) vs blocked
@@ -127,13 +135,13 @@ def unlearn_main(argv) -> None:
         if add_pool and rng.random() < args.add_frac:
             op, row = "add", int(add_pool.pop(0))
         else:
-            live = np.flatnonzero(engine.live[:args.n])
+            live = np.flatnonzero(algo.live[:args.n])
             op, row = "delete", int(rng.choice(live))
         t0 = time.perf_counter()
         h = sess.submit(op=op, rows=[row], coalesce=False)
         sess.flush()
         t_disp = time.perf_counter() - t0
-        jax.block_until_ready(engine.params)
+        jax.block_until_ready(algo.params)
         t_block = time.perf_counter() - t0
         dispatch_ms.append(t_disp * 1e3)
         blocked_ms.append(t_block * 1e3)
@@ -148,18 +156,29 @@ def unlearn_main(argv) -> None:
           f"{bp['p50']:.1f} / p95 {bp['p95']:.1f} / p99 {bp['p99']:.1f} ms; "
           f"accuracy {logreg_accuracy(sess.params, ds):.4f}")
 
+    # -- certified release: the certificate the stream's cumulative
+    # deletions buy at --eps (publishes through the session PRNG key)
+    published, cert = sess.publish(eps=args.eps)
+    print(f"certificate: algorithm={cert.algorithm} "
+          f"mechanism={cert.mechanism} eps={cert.eps:g} "
+          f"delta={cert.delta:g} bound={cert.bound:.3e} "
+          f"noise_scale={cert.noise_scale:.3e} removals={cert.removals}")
+
     # -- coalesced burst: K deletes as ONE group replay vs the serial path
     K = args.burst
     results = {
         "config": {"n": args.n, "d": args.d, "steps": args.steps,
                    "batch": args.batch, "requests": args.requests,
                    "add_frac": args.add_frac, "impl": args.impl,
-                   "momentum": args.momentum, "burst": K},
+                   "momentum": args.momentum, "burst": K,
+                   "algorithm": args.algorithm, "eps": args.eps},
         "compile_s": compile_s,
         "latency_ms": {"dispatch": dp, "blocked": bp},
         "accuracy": float(logreg_accuracy(sess.params, ds)),
+        "certificate": cert.as_dict(),
+        "published_accuracy": float(logreg_accuracy(published, ds)),
     }
-    if K > 0:
+    if K > 0 and args.algorithm == "deltagrad":
         burst_rows = np.random.default_rng(args.seed + 2).choice(
             args.n, size=K, replace=False).tolist()
 
@@ -216,7 +235,7 @@ def unlearn_main(argv) -> None:
         if args.max_pending:
             warm_k.append(("delete", args.max_pending))
         sess_f.warmup(warm_k)
-        engine_f = sess_f.engine()
+        algo_f = sess_f.algorithm
         timer = (sess_f.start_autoflush_timer()
                  if sess_f.config.max_delay_s else None)
         rng_f = np.random.default_rng(args.seed + 3)
@@ -224,7 +243,7 @@ def unlearn_main(argv) -> None:
         submitted: set = set()  # engine liveness lags until a flush lands
         t0 = time.perf_counter()
         for i in range(args.requests):
-            live = np.flatnonzero(engine_f.live[:args.n])
+            live = np.flatnonzero(algo_f.live[:args.n])
             live = live[~np.isin(live, list(submitted))]
             staleness_ms.append(sess_f.pending_age_s * 1e3)
             row = int(rng_f.choice(live))
@@ -236,7 +255,7 @@ def unlearn_main(argv) -> None:
         # LONE TAIL request, then silence: only the timer can flush it
         lone_deadline_ok = None
         if timer is not None:
-            live = np.flatnonzero(engine_f.live[:args.n])
+            live = np.flatnonzero(algo_f.live[:args.n])
             live = live[~np.isin(live, list(submitted))]
             h_lone = sess_f.submit(op="delete", rows=[int(rng_f.choice(live))])
             t_lone = time.perf_counter()
@@ -247,7 +266,7 @@ def unlearn_main(argv) -> None:
             lone_deadline_ok = bool(h_lone.done)
             staleness_ms.append(lone_wait_ms)
         sess_f.flush()  # drain anything below the policy thresholds
-        jax.block_until_ready(sess_f.engine().params)
+        jax.block_until_ready(sess_f.params)
         t_total = time.perf_counter() - t0
         if timer is not None:
             timer.stop()

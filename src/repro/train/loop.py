@@ -102,6 +102,47 @@ def make_train_step(
     return train_step
 
 
+def make_finetune_runner(loss_fn: Callable[[Any, Any], jax.Array],
+                         optimizer: Optimizer, lr: float, steps: int,
+                         project_radius: Optional[float] = None):
+    """Compiled warm-start fine-tuner: `steps` full-batch `make_train_step`
+    updates under one lax.scan — the descent-to-delete inner loop (noisy
+    projected fine-tuning from the last checkpoint; core.algorithms).
+
+    `project_radius` adds the projected-GD step the convex analysis assumes:
+    after each update the params are radially projected back onto the L2
+    ball of that radius (a no-op while the iterates stay inside it).
+
+    Returns ``run(params, batch) -> (params, losses)``; jit-compiled, keyed
+    on the params/batch structure, so a serving stream reuses one program.
+    """
+    step = make_train_step(loss_fn, optimizer,
+                           lambda s: jnp.float32(lr))
+
+    def project(params):
+        if project_radius is None:
+            return params
+        sq = sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(params))
+        norm = jnp.sqrt(jnp.maximum(sq, 1e-30))
+        shrink = jnp.minimum(1.0, project_radius / norm)
+        return jax.tree.map(lambda x: x * shrink.astype(x.dtype), params)
+
+    @jax.jit
+    def run(params, batch):
+        state = TrainState(params, optimizer.init(params),
+                           jnp.zeros((), jnp.int32))
+
+        def body(st, _):
+            st, metrics = step(st, batch)
+            st = TrainState(project(st.params), st.opt_state, st.step)
+            return st, metrics["loss"]
+
+        state, losses = jax.lax.scan(body, state, None, length=steps)
+        return state.params, losses
+
+    return run
+
+
 def make_serve_step(decode_fn: Callable):
     """(params, batch, caches) -> (logits, caches)."""
 

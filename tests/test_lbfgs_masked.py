@@ -1,0 +1,82 @@
+"""Variable-count L-BFGS on device: the masked compact solve over the
+zeros-initialized ring (1..m admitted pairs, no host-side burn-in)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lbfgs import (
+    lbfgs_hvp_stacked_pytree,
+    ring_valid_mask,
+    valid_pair_mask,
+)
+
+
+def make_history(c, p, seed=0, mu=1.0):
+    """Curvature-consistent pairs: dg = H dw with H spd (so D_ii > 0)."""
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(p, p)).astype(np.float32)
+    H = A @ A.T / p + mu * np.eye(p, dtype=np.float32)
+    dW = rng.normal(size=(c, p)).astype(np.float32)
+    dG = (dW @ H.T).astype(np.float32)
+    v = rng.normal(size=(p,)).astype(np.float32)
+    return jnp.asarray(dW), jnp.asarray(dG), jnp.asarray(v)
+
+
+def ring_with(dW, dG, m):
+    """Embed c pairs newest-last in a zeros-initialized m-slot ring."""
+    c, p = dW.shape
+    rW = jnp.zeros((m, p), dtype=dW.dtype).at[m - c:].set(dW)
+    rG = jnp.zeros((m, p), dtype=dG.dtype).at[m - c:].set(dG)
+    return rW, rG
+
+
+def test_ring_valid_mask_from_occupancy():
+    dW, dG, _ = make_history(2, 12, seed=4)
+    rW, _ = ring_with(dW, dG, 5)
+    # any-leaf occupancy: the second leaf is all zeros and must not mask
+    # out slots the first leaf occupies
+    ring = {"a": rW, "b": jnp.zeros((5, 3), dtype=jnp.float32)}
+    mask = np.asarray(ring_valid_mask(ring))
+    assert mask.tolist() == [False, False, False, True, True]
+
+
+def test_valid_pair_mask_matches_ring_derivation():
+    dW, dG, _ = make_history(3, 8, seed=1)
+    rW, _ = ring_with(dW, dG, 5)
+    np.testing.assert_array_equal(np.asarray(valid_pair_mask(3, 5)),
+                                  np.asarray(ring_valid_mask(rW)))
+    assert np.asarray(valid_pair_mask(9, 5)).all()  # saturates at m
+
+
+@pytest.mark.parametrize("c,m", [(1, 4), (2, 4), (3, 4), (2, 3)])
+def test_masked_partial_ring_matches_compact_subsystem(c, m):
+    """The masked 2m x 2m solve over a c-pair ring must equal the plain
+    compact solve on just those c pairs (the satellite's contract: the
+    device ring serves 1..m pairs with no separate count state)."""
+    dW, dG, v = make_history(c, 24, seed=c * 10 + m)
+    rW, rG = ring_with(dW, dG, m)
+    got = lbfgs_hvp_stacked_pytree(rW, rG, v, masked=True)
+    want = lbfgs_hvp_stacked_pytree(dW, dG, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_masked_full_ring_bitwise_equals_unmasked():
+    """With every slot occupied the mask is inert: the masked solve must
+    return the unmasked result EXACTLY (the engine's bitwise invariant —
+    full-ring replays are unchanged by the refactor)."""
+    dW, dG, v = make_history(4, 32, seed=9)
+    got = lbfgs_hvp_stacked_pytree(dW, dG, v, masked=True)
+    want = lbfgs_hvp_stacked_pytree(dW, dG, v)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_masked_empty_ring_is_zero_operator():
+    """count == 0 degenerates to B v = 0 (sigma = 0/1 from zero slots)."""
+    m, p = 3, 16
+    rW = jnp.zeros((m, p), dtype=jnp.float32)
+    v = jnp.asarray(np.random.default_rng(0).normal(size=(p,)),
+                    dtype=jnp.float32)
+    out = lbfgs_hvp_stacked_pytree(rW, rW, v, masked=True)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(p, np.float32))

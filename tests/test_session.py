@@ -310,3 +310,23 @@ def test_unlearner_shim_batch_after_stream_keeps_state():
     # deleting a previously-added row still works after the batch call
     unl.stream_delete([400])
     assert unl._online is eng and not eng.live[400]
+
+
+def test_partial_ring_parity_scan_vs_python():
+    """burn_in < history_size: the first approx steps run the masked
+    compact solve over a PARTIALLY-filled device ring (1..m pairs, no
+    host-side burn-in) — scan must still match the python oracle."""
+    rows = np.random.default_rng(11).choice(800, 6, replace=False).tolist()
+    ws = {}
+    for impl in ("scan", "python"):
+        ds = binary_classification(n=800, d=10, seed=0)
+        cfg = UnlearnerConfig(
+            steps=50, batch_size=256, lr=0.4, seed=0,
+            deltagrad=DeltaGradConfig(period=3, burn_in=2, history_size=4,
+                                      impl=impl))
+        sess = UnlearnerSession(logreg_objective(l2=5e-3),
+                                logreg_init(10, seed=1), ds, cfg)
+        sess.fit()
+        ws[impl] = sess.delete(rows).params
+    d = float(tree_norm(tree_sub(ws["scan"], ws["python"])))
+    assert d <= PARITY_TOL, d

@@ -70,6 +70,42 @@ SUITES = {
         ("autoflush.lone_request_flushed_by_timer", "exact", None,
          "timer thread enforces max_delay_s with zero arrivals"),
     ],
+    "certified": [
+        # the oracle's distance to itself is the anchor invariant; the
+        # approximate algorithms' distances are deterministic replays so
+        # they gate tightly (parity for deltagrad: baseline ~2e-3 may
+        # wobble 4x, not drift)
+        ("algorithms[name=retrain_oracle].distance_vs_retrain", "exact",
+         None, "oracle anchors the sweep (identically 0.0)"),
+        ("algorithms[name=deltagrad].distance_vs_retrain", "parity", None,
+         "L-BFGS replay vs all-explicit retrain"),
+        ("algorithms[name=descent_to_delete].distance_vs_retrain",
+         "ratio_max", 2.0, "finetune distance to the replayed schedule"),
+        ("algorithms[name=retrain_oracle].removals", "exact", None,
+         "served delete stream"),
+        # certificates are closed-form in the stated constants — exact
+        ("algorithms[name=retrain_oracle].certificates[eps=1.0]"
+         ".noise_scale", "exact", None, "exact mechanism adds no noise"),
+        ("algorithms[name=deltagrad].certificates[eps=1.0].bound", "exact",
+         None, "Laplace bound from DeletionBoundConstants"),
+        ("algorithms[name=deltagrad].certificates[eps=1.0].noise_scale",
+         "exact", None, "sqrt(p)*delta0/eps calibration"),
+        ("algorithms[name=descent_to_delete].certificates[eps=1.0].bound",
+         "exact", None, "contraction-recursion bound"),
+        ("algorithms[name=descent_to_delete].certificates[eps=1.0]"
+         ".noise_scale", "exact", None, "Gaussian sigma calibration"),
+        ("noise_monotone_in_eps", "exact", None,
+         "noise shrinks as the budget loosens"),
+        ("d2d_beats_retrain", "exact", None,
+         "descent-to-delete wall < full retrain wall"),
+        ("speedups.descent_to_delete", "ratio_min", 0.05,
+         "d2d vs retrain wall (cross-runner slack)"),
+        # absolute walls: loose, they only catch fell-off-the-compiled-path
+        ("algorithms[name=retrain_oracle].wall_s", "ratio_max", 25.0,
+         "all-explicit replay wall"),
+        ("algorithms[name=deltagrad].wall_s", "ratio_max", 25.0,
+         "corrected replay wall"),
+    ],
     "shard": [
         ("variants[variant=streamed].parity_vs_resident", "parity", None,
          "streamed vs resident (exactly 0.0)"),
@@ -123,10 +159,24 @@ SUITES = {
 _SEG = re.compile(r"^(?P<key>[^\[\]]+)(\[(?P<sel>[^=\]]+)=(?P<val>[^\]]+)\])?$")
 
 
+def _split_path(path: str) -> List[str]:
+    """Split on dots OUTSIDE brackets ([eps=1.0] keeps its dot)."""
+    parts, buf, depth = [], "", 0
+    for ch in path:
+        if ch == "." and depth == 0:
+            parts.append(buf)
+            buf = ""
+            continue
+        depth += {"[": 1, "]": -1}.get(ch, 0)
+        buf += ch
+    parts.append(buf)
+    return parts
+
+
 def resolve(doc: Any, path: str):
     """Walk `doc` by a dotted path; [k=v] selects a dict from a list."""
     cur = doc
-    for part in path.split("."):
+    for part in _split_path(path):
         m = _SEG.match(part)
         if m is None:
             raise KeyError(path)
