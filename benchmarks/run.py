@@ -12,7 +12,7 @@ import sys
 import time
 
 MODULES = ("batch", "accuracy", "online", "hyperparams", "large_rate",
-           "kernels", "certified")
+           "kernels", "certified", "serve")
 
 
 def main() -> None:

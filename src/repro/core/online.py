@@ -195,7 +195,18 @@ class OnlineEngine:
             r_pad=_next_pow2(r_eff))
 
     def _cols(self):
-        """Device columns at the bucketed row capacity (see `_row_cap`)."""
+        """Device columns at the bucketed row capacity (see `_row_cap`).
+
+        The cap honors a RAISED ``add_capacity`` (e.g. `begin_plan` sizing
+        a whole flush, or the serving tier pre-staging its admission
+        budget) — not just rows already appended — so staging happens once
+        up front instead of as a mid-flush retrace on the first add
+        burst.  Admission-side accounting (`repro.serve`) counts pending
+        adds against this same bucket, padding included."""
+        need = max(len(self.added), self.add_capacity)
+        cap = self._base_n + (_next_pow2(need) if need else 0)
+        if cap > self._row_cap:
+            self._row_cap = cap
         if self.ds.n > self._row_cap:
             self._row_cap = self._base_n + _next_pow2(self.ds.n
                                                       - self._base_n)

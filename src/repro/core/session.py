@@ -88,6 +88,14 @@ ALGORITHM SELECTION (``UnlearnerConfig.algorithm``) — every entry in
   the numbers are diagnostics, not guarantees (the paper's guard only
   protects the replay's stability, not the certificate).
 
+SERVING TIER.  For multi-caller traffic — per-tenant admission control,
+SLA-class deadlines instead of the single ``max_pending``/``max_delay_s``
+pair, cross-tenant batching, and seeded load generation — put
+`repro.serve.ServingScheduler` in front of the session (the serving guide
+lives in ``repro/serve/__init__.py``).  The session-level auto-flush
+policy remains for single-caller use; `AutoFlushTimer` is deprecated in
+favor of `repro.serve.SessionFlushClock`.
+
 `core.api.Unlearner` is a thin compatibility shim over this class.
 """
 
@@ -95,6 +103,7 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -195,46 +204,22 @@ class UnlearnResponse:
 
 
 class AutoFlushTimer:
-    """Daemon timer that drives a session's ``max_delay_s`` deadline with
-    ZERO arrivals: `poll()` only runs when somebody calls it, so a lone
-    request submitted right before a lull would otherwise sit past its
-    deadline until the next submit.  The timer calls ``session.poll()``
-    every ``interval_s`` (default: a quarter of the deadline) from a
-    daemon thread; session mutation is serialized by the session's lock,
-    so the timer is safe next to a submitting foreground thread.
+    """DEPRECATED shim — the global auto-flush timer is superseded by the
+    serving tier (`repro.serve`): `ServingScheduler` for per-SLA-class
+    deadlines, or `SessionFlushClock` for the degenerate one-class case
+    this timer implemented.  Constructing it warns and returns a
+    `SessionFlushClock` (same ``ticks``/``last_error``/``interval_s``/
+    ``stop()`` surface), so existing callers keep working."""
 
-    A flush that raises (a failing request group) records the error on
-    ``last_error`` and keeps ticking — the failing handles already resolve
-    to the error through the session's usual path."""
-
-    def __init__(self, session: "UnlearnerSession",
-                 interval_s: Optional[float] = None):
-        deadline = session.config.max_delay_s
-        # staleness is bounded by max_delay_s + one timer interval (the
-        # deadline can expire right after a tick), so default to a small
-        # fraction of the deadline
-        if interval_s is None:
-            interval_s = (deadline / 8.0) if deadline else 0.05
-        self.interval_s = max(1e-3, float(interval_s))
-        self.ticks = 0
-        self.last_error: Optional[Exception] = None
-        self._session = session
-        self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name="unlearner-autoflush")
-        self._thread.start()
-
-    def _run(self) -> None:
-        while not self._stop.wait(self.interval_s):
-            self.ticks += 1
-            try:
-                self._session.poll()
-            except Exception as e:  # noqa: BLE001 — keep the timer alive
-                self.last_error = e
-
-    def stop(self) -> None:
-        self._stop.set()
-        self._thread.join(timeout=5.0)
+    def __new__(cls, session: "UnlearnerSession",
+                interval_s: Optional[float] = None):
+        warnings.warn(
+            "core.session.AutoFlushTimer is deprecated; use "
+            "repro.serve.SessionFlushClock (one default SLA class) or "
+            "repro.serve.ServingScheduler (per-class deadlines)",
+            DeprecationWarning, stacklevel=2)
+        from repro.serve.scheduler import SessionFlushClock
+        return SessionFlushClock(session, interval_s=interval_s)
 
 
 class RequestHandle:
@@ -324,7 +309,7 @@ class UnlearnerSession:
         # can drive the deadline next to a submitting foreground thread
         self._lock = threading.RLock()
         self._oldest_pending_ts: Optional[float] = None
-        self._autoflush_timer: Optional[AutoFlushTimer] = None
+        self._autoflush_timer: Optional[Any] = None  # SessionFlushClock
         self.autoflush_count = 0
         self.autoflush_reasons: Dict[str, int] = {"max_pending": 0,
                                                   "max_delay_s": 0}
@@ -559,20 +544,28 @@ class UnlearnerSession:
         with self._lock:
             return self._maybe_autoflush()
 
-    def start_autoflush_timer(self, interval_s: Optional[float] = None
-                              ) -> AutoFlushTimer:
-        """Drive the ``max_delay_s`` deadline from a daemon timer thread so
-        it holds even with ZERO further arrivals (the ROADMAP serve-path
-        item: `poll()` alone only fires when the load loop spins).  Returns
-        the timer; `stop()` it when the session retires.  Starting a new
-        timer stops the previous one."""
+    def start_autoflush_timer(self, interval_s: Optional[float] = None):
+        """DEPRECATED: drive the ``max_delay_s`` deadline from a daemon
+        tick thread.  This now routes through the serving tier — it
+        returns a `repro.serve.SessionFlushClock` (one default SLA class
+        whose deadline is ``max_delay_s``; same ``ticks``/``stop()``
+        surface as the old `AutoFlushTimer`).  New code should construct
+        `repro.serve.ServingScheduler` for per-class deadlines, admission
+        control, and cross-tenant batching.  Starting a new clock stops
+        the previous one."""
+        warnings.warn(
+            "session.start_autoflush_timer() is deprecated; serve through "
+            "repro.serve.ServingScheduler (SLA-class deadlines) or create "
+            "repro.serve.SessionFlushClock directly",
+            DeprecationWarning, stacklevel=2)
         if self.config.max_delay_s is None:
             raise ValueError(
                 "start_autoflush_timer() needs config.max_delay_s — there "
                 "is no deadline for the timer to enforce")
+        from repro.serve.scheduler import SessionFlushClock
         if self._autoflush_timer is not None:
             self._autoflush_timer.stop()
-        self._autoflush_timer = AutoFlushTimer(self, interval_s=interval_s)
+        self._autoflush_timer = SessionFlushClock(self, interval_s=interval_s)
         return self._autoflush_timer
 
     @property
@@ -582,6 +575,35 @@ class UnlearnerSession:
         if not self._pending or self._oldest_pending_ts is None:
             return 0.0
         return time.monotonic() - self._oldest_pending_ts
+
+    @property
+    def pending_count(self) -> int:
+        """Number of submitted-but-unserved requests (len is atomic under
+        CPython, so this is safe to read without the lock — the serving
+        executor polls it between flush rounds)."""
+        return len(self._pending)
+
+    def pending_requests(self) -> List[Tuple[int, UnlearnRequest]]:
+        """Snapshot of the pending set as ``(ticket, request)`` pairs, in
+        submission order — what the coalescing planner would group at the
+        next flush.  The serving tier uses this (plus `pending_count`) to
+        decide whether a snapshot can proceed and to account pending add
+        rows against staged device capacity."""
+        with self._lock:
+            return list(self._pending)
+
+    def try_flush(self) -> Optional[List[UnlearnResponse]]:
+        """Non-blocking flush: serve the pending set IF the session lock
+        is immediately available, else return None without waiting.  The
+        serving executor's idle tick uses this so a deadline check never
+        parks behind a foreground submitter (or another flush) holding the
+        lock."""
+        if not self._lock.acquire(blocking=False):
+            return None
+        try:
+            return self._flush_locked()
+        finally:
+            self._lock.release()
 
     def delete(self, rows: Sequence[int], coalesce: bool = True
                ) -> RequestHandle:
@@ -704,19 +726,33 @@ class UnlearnerSession:
 
     # -- snapshot / restore --------------------------------------------------
 
-    def save(self, directory: str, step: Optional[int] = None) -> str:
+    def save(self, directory: str, step: Optional[int] = None,
+             pending: str = "drain") -> str:
         """Write a restorable snapshot through `train/checkpoint`.
 
-        Pending requests are flushed (and the device drained) first, so
-        the snapshot is always a consistent between-requests state: params
-        ride as the checkpoint's sharded pytree; `TrainingHistory` (any
-        tier), the dataset (columns + deletion mask), and the engine's
-        stream state (liveness, added-row order, capacities, last L-BFGS
-        pair ring) ride in the extra payload.  Returns the step dir.
-        Holds the session lock for the whole write so a concurrent
-        submitter or `AutoFlushTimer` cannot mutate state between the
-        flush and the state_dict reads."""
+        ``pending`` picks the snapshot-under-load semantics, and both
+        choices are deterministic: ``"drain"`` (default) flushes every
+        pending request first, so the snapshot is always a consistent
+        between-requests state — restoring it and serving the remainder of
+        a request stream is identical to the uninterrupted session;
+        ``"refuse"`` raises `RuntimeError` while anything is pending, for
+        callers that must not absorb the drain latency inside save().
+        Params ride as the checkpoint's sharded pytree; `TrainingHistory`
+        (any tier), the dataset (columns + deletion mask), and the
+        algorithm descriptor (e.g. the engine's liveness/added-row
+        order/capacities/L-BFGS ring) ride in the extra payload.  Returns
+        the step dir.  Holds the session lock for the whole write so a
+        concurrent submitter or flush clock cannot mutate state between
+        the flush and the state_dict reads."""
+        if pending not in ("drain", "refuse"):
+            raise ValueError(
+                f"pending must be 'drain' or 'refuse', got {pending!r}")
         with self._lock:
+            if pending == "refuse" and self._pending:
+                raise RuntimeError(
+                    f"save(pending='refuse') with {len(self._pending)} "
+                    "pending request(s); flush() first or use "
+                    "pending='drain'")
             return self._save_locked(directory, step)
 
     def _save_locked(self, directory: str, step: Optional[int]) -> str:

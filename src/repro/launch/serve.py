@@ -7,13 +7,19 @@ Two entry points share this module:
     answers a stream of online delete/add requests (one lazy `submit()`
     per request — DISPATCH latency is what the server's queue sees, and is
     reported separately from BLOCKED latency, the device-drained time a
-    per-request sync would pay), then serves a burst of ``--burst``
-    deletes both serially and COALESCED into one group replay.  Summary
-    percentiles include p99; a machine-readable ``BENCH_serve.json`` is
-    written to ``--bench-out``.
+    per-request sync would pay), serves a burst of ``--burst`` deletes
+    both serially and COALESCED into one group replay, then drives a
+    seeded multi-tenant trace (``--trace poisson|diurnal|fixed``, mixed
+    SLA classes) through `repro.serve.ServingScheduler` — admission,
+    EDF flush, cross-tenant batching, and the lone-tail deadline tick.
+    Summary percentiles include p99; a machine-readable
+    ``BENCH_serve.json`` is written to ``--bench-out`` (the full
+    continuous-batching load sweep lives in ``benchmarks/bench_serve.py``,
+    which runs this driver in-process).
 
         PYTHONPATH=src python -m repro.launch.serve unlearn \
-            --n 4000 --d 500 --steps 80 --requests 12 --add-frac 0.25
+            --n 4000 --d 500 --steps 80 --requests 12 --add-frac 0.25 \
+            --trace poisson --rate 200
 
   * batched decode (default, backwards-compatible flags): prefill a prompt
     batch, then step the KV caches.
@@ -79,14 +85,21 @@ def unlearn_main(argv) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--burst", type=int, default=8,
                     help="K for the coalesced-vs-serial delete burst")
-    ap.add_argument("--max-pending", type=int, default=4,
-                    help="auto-flush: serve whenever this many requests are "
-                         "queued (0 disables the auto-flush section)")
-    ap.add_argument("--max-delay-ms", type=float, default=25.0,
-                    help="auto-flush: serve when the oldest pending request "
-                         "has waited this long (0 disables)")
+    ap.add_argument("--trace", default="poisson",
+                    choices=("poisson", "diurnal", "fixed"),
+                    help="arrival process for the continuous-serving "
+                         "section (seeded; 'fixed' is the deterministic "
+                         "equal-spacing mode driven by --arrival-ms)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="offered load in requests/s for poisson/diurnal "
+                         "traces (0 derives it from --arrival-ms)")
     ap.add_argument("--arrival-ms", type=float, default=2.0,
-                    help="inter-arrival gap for the auto-flush load loop")
+                    help="inter-arrival gap for --trace fixed (and the "
+                         "rate fallback for the seeded traces)")
+    ap.add_argument("--sla-class", default="mixed",
+                    choices=("mixed", "interactive", "batch", "bulk_gdpr"),
+                    help="SLA class for generated requests ('mixed' draws "
+                         "from all three)")
     ap.add_argument("--bench-out", default="BENCH_serve.json",
                     help="machine-readable results path ('' disables)")
     args = ap.parse_args(argv)
@@ -171,7 +184,9 @@ def unlearn_main(argv) -> None:
                    "batch": args.batch, "requests": args.requests,
                    "add_frac": args.add_frac, "impl": args.impl,
                    "momentum": args.momentum, "burst": K,
-                   "algorithm": args.algorithm, "eps": args.eps},
+                   "algorithm": args.algorithm, "eps": args.eps,
+                   "trace": args.trace, "sla_class": args.sla_class,
+                   "arrival_ms": args.arrival_ms},
         "compile_s": compile_s,
         "latency_ms": {"dispatch": dp, "blocked": bp},
         "accuracy": float(logreg_accuracy(sess.params, ds)),
@@ -219,79 +234,83 @@ def unlearn_main(argv) -> None:
               f"(x{t_serial / max(t_coal, 1e-9):.1f}); parity vs python "
               f"{parity:.2e}; serial-vs-coalesced dist {drift:.2e}")
 
-    # -- auto-flush under continuous load: submit WITHOUT forcing handles and
-    # let the max_pending/max_delay_s policy decide when to serve — the
-    # planner coalesces each flushed batch, and staleness (how long the
-    # oldest submit waited) stays bounded by the policy.  The deadline is
-    # driven by the session's daemon TIMER thread (`start_autoflush_timer`),
-    # so max_delay_s holds even when the load loop stops arriving — the
-    # final lone request below proves it with zero further submits/polls.
-    if args.max_pending or args.max_delay_ms:
+    # -- continuous serving: a seeded open-loop trace through the serving
+    # tier (repro.serve) — admission control, SLA-class deadlines, EDF
+    # flush, cross-tenant batching, one replay in flight.  This replaces
+    # the old session-global auto-flush load loop (and its hand-rolled
+    # drain logic); the session-level max_pending/max_delay_s policy still
+    # exists for embedded use, but the serving CLI routes everything
+    # through the scheduler.  The lone tail request at the end proves the
+    # deadline holds with ZERO further arrivals — the executor's idle tick
+    # serves it, no timer thread and no extra poll() calls.
+    if args.requests > 0:
+        from repro.serve import (LoadGenerator, ServeConfig,
+                                 ServingScheduler, diurnal_trace,
+                                 fixed_trace, materialize, poisson_trace)
+
         sess_f, ds_f = build_session()
-        sess_f.config.max_pending = args.max_pending or None
-        sess_f.config.max_delay_s = (args.max_delay_ms / 1e3
-                                     if args.max_delay_ms else None)
-        warm_k = [("delete", 1)]
-        if args.max_pending:
-            warm_k.append(("delete", args.max_pending))
-        sess_f.warmup(warm_k)
-        algo_f = sess_f.algorithm
-        timer = (sess_f.start_autoflush_timer()
-                 if sess_f.config.max_delay_s else None)
-        rng_f = np.random.default_rng(args.seed + 3)
-        staleness_ms = []
-        submitted: set = set()  # engine liveness lags until a flush lands
-        t0 = time.perf_counter()
-        for i in range(args.requests):
-            live = np.flatnonzero(algo_f.live[:args.n])
-            live = live[~np.isin(live, list(submitted))]
-            staleness_ms.append(sess_f.pending_age_s * 1e3)
-            row = int(rng_f.choice(live))
-            submitted.add(row)
-            sess_f.submit(op="delete", rows=[row])
-            if args.arrival_ms:
-                time.sleep(args.arrival_ms / 1e3)
-            staleness_ms.append(sess_f.pending_age_s * 1e3)
-        # LONE TAIL request, then silence: only the timer can flush it
-        lone_deadline_ok = None
-        if timer is not None:
-            live = np.flatnonzero(algo_f.live[:args.n])
-            live = live[~np.isin(live, list(submitted))]
-            h_lone = sess_f.submit(op="delete", rows=[int(rng_f.choice(live))])
-            t_lone = time.perf_counter()
-            while not h_lone.done and \
-                    time.perf_counter() - t_lone < 10.0:
-                time.sleep(sess_f.config.max_delay_s / 10)
-            lone_wait_ms = (time.perf_counter() - t_lone) * 1e3
-            lone_deadline_ok = bool(h_lone.done)
-            staleness_ms.append(lone_wait_ms)
-        sess_f.flush()  # drain anything below the policy thresholds
-        jax.block_until_ready(sess_f.params)
-        t_total = time.perf_counter() - t0
-        if timer is not None:
-            timer.stop()
-        group_rows = [len(e["rows"]) for e in sess_f.log]
-        results["autoflush"] = {
-            "max_pending": args.max_pending,
-            "max_delay_ms": args.max_delay_ms,
+        rate = args.rate or (1e3 / args.arrival_ms if args.arrival_ms
+                             else 200.0)
+        class_mix = ({"interactive": 0.5, "batch": 0.3, "bulk_gdpr": 0.2}
+                     if args.sla_class == "mixed" else (args.sla_class,))
+        tenants = {"tenant-a": 0.6, "tenant-b": 0.4}
+        if args.trace == "poisson":
+            events = poisson_trace(rate, args.requests, args.seed + 3,
+                                   tenants=tenants, classes=class_mix,
+                                   add_frac=args.add_frac)
+        elif args.trace == "diurnal":
+            events = diurnal_trace(
+                max(rate / 2, 1e-3), rate * 2,
+                period_s=max(0.25, args.requests / rate),
+                n_events=args.requests, seed=args.seed + 3,
+                tenants=tenants, classes=class_mix,
+                add_frac=args.add_frac)
+        else:
+            events = fixed_trace((args.arrival_ms or 2.0) / 1e3,
+                                 args.requests, args.seed + 3,
+                                 tenants=tenants, classes=class_mix,
+                                 add_frac=args.add_frac)
+        materialize(events, ds_f, seed=args.seed + 4)
+        n_add_rows = sum(ev.n_rows for ev in events if ev.op == "add")
+        sched = ServingScheduler(
+            sess_f, ServeConfig(add_capacity=max(1, n_add_rows)))
+        warm = [("delete", k) for k in (1, 2, 4, 8)]
+        if n_add_rows:
+            warm += [("add", k) for k in (1, 2, 4)]
+        sess_f.warmup(warm)
+        sched.start()
+        res = LoadGenerator(sched).open_loop(events)
+        for tk in res.tickets:
+            tk.wait(timeout=60.0)
+        # lone tail, then silence: only the executor's deadline tick fires
+        used = {r for ev in events if ev.rows for r in ev.rows}
+        live = np.flatnonzero(sess_f.algorithm.live[:args.n])
+        lone_row = next(int(r) for r in live if int(r) not in used)
+        lone = sched.submit("delete", rows=[lone_row],
+                            sla_class=("interactive"
+                                       if args.sla_class == "mixed"
+                                       else args.sla_class))
+        lone_ok = lone.wait(timeout=10.0)
+        sched.stop()
+        st = sched.stats()
+        results["serving"] = {
+            "trace": args.trace,
+            "rate_rps": rate,
             "arrival_ms": args.arrival_ms,
-            "autoflushes": sess_f.autoflush_count,
-            "reasons": dict(sess_f.autoflush_reasons),
-            "max_staleness_ms": float(max(staleness_ms)),
-            "mean_group_rows": float(np.mean(group_rows)),
-            "wall_ms_per_req": t_total / max(1, args.requests) * 1e3,
-            "timer_interval_ms": (timer.interval_s * 1e3
-                                  if timer is not None else None),
-            "lone_request_flushed_by_timer": lone_deadline_ok,
+            "sla_class": args.sla_class,
+            "rejected": res.rejected,
+            "lone_request_served": bool(lone_ok),
+            "lone_missed_deadline": bool(lone.missed_deadline),
+            **st,
         }
-        print(f"auto-flush: {sess_f.autoflush_count} policy flushes "
-              f"({sess_f.autoflush_reasons}), max staleness "
-              f"{max(staleness_ms):.1f} ms (bound "
-              f"{args.max_delay_ms:.0f} ms), mean coalesced group "
-              f"{np.mean(group_rows):.1f} rows, "
-              f"{t_total / max(1, args.requests) * 1e3:.1f} ms/req"
-              + (f"; lone tail request flushed by timer: "
-                 f"{lone_deadline_ok}" if timer is not None else ""))
+        bt = st["batches"]
+        miss = st["deadline_misses_total"]
+        print(f"serving: {st['admission']['admitted']} admitted "
+              f"({res.rejected} rejected), {bt['count']} batches "
+              f"(mean {bt['size_mean']:.1f} rows, {bt['cross_tenant']} "
+              f"cross-tenant), {miss} deadline misses, "
+              f"{st['add_capacity_retraces']} capacity retraces; lone "
+              f"tail served by deadline tick: {lone_ok}")
 
     if args.bench_out:
         with open(args.bench_out, "w") as f:

@@ -1,0 +1,123 @@
+"""Serving-tier metrics — the numbers BENCH_serve.json's
+``continuous_batching`` section reports and CI gates.
+
+One `ServeMonitor` instance per scheduler.  Everything is recorded
+in-memory (these are bench/CI runs, not a fleet), so `snapshot()` can
+compute exact percentiles instead of streaming sketches.  Recorded per
+request: dispatch latency (enqueue → batch dispatch), e2e latency
+(enqueue → replay drained), and whether the SLA-class deadline was met.
+Recorded per batch: size, distinct tenants, ops.  Counters: deadline
+misses per class, admission rejections (scraped from the queue),
+add-capacity retraces (a flush that re-bucketed the engine's staged
+device rows — each one recompiles every replay program, which is exactly
+what admission-side accounting exists to prevent).
+"""
+
+from __future__ import annotations
+
+from collections import Counter, defaultdict
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.queue import AdmissionQueue, QueuedRequest
+
+
+def _pcts(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"count": 0}
+    a = np.asarray(xs, dtype=np.float64)
+    return {"count": int(a.size), "mean": float(a.mean()),
+            "p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95)),
+            "p99": float(np.percentile(a, 99)),
+            "max": float(a.max())}
+
+
+class ServeMonitor:
+    """Per-class latency, queue, and batching telemetry."""
+
+    def __init__(self) -> None:
+        self._dispatch_ms: Dict[str, List[float]] = defaultdict(list)
+        self._e2e_ms: Dict[str, List[float]] = defaultdict(list)
+        self.deadline_misses: Counter = Counter()
+        self.served: Counter = Counter()
+        self.failed: Counter = Counter()
+        self.batch_sizes: List[int] = []
+        self.batch_tenants: List[int] = []
+        self.batch_ops: Counter = Counter()
+        self.cross_tenant_batches = 0
+        self.add_capacity_retraces = 0
+        self.depth_samples: List[int] = []
+
+    # -- observations --------------------------------------------------------
+
+    def observe_request(self, req: QueuedRequest) -> None:
+        cls = req.sla_class
+        if req.error is not None:
+            self.failed[cls] += 1
+            return
+        self.served[cls] += 1
+        if req.t_dispatch is not None:
+            self._dispatch_ms[cls].append(
+                (req.t_dispatch - req.t_enqueue) * 1e3)
+        if req.t_done is not None:
+            self._e2e_ms[cls].append((req.t_done - req.t_enqueue) * 1e3)
+        if req.missed_deadline:
+            self.deadline_misses[cls] += 1
+
+    def observe_batch(self, batch: List[QueuedRequest],
+                      retraced: bool = False) -> None:
+        self.batch_sizes.append(len(batch))
+        tenants = len({q.tenant for q in batch})
+        self.batch_tenants.append(tenants)
+        if tenants > 1:
+            self.cross_tenant_batches += 1
+        for q in batch:
+            self.batch_ops[q.op] += 1
+        if retraced:
+            self.add_capacity_retraces += 1
+
+    def observe_depth(self, depth: int) -> None:
+        self.depth_samples.append(int(depth))
+
+    # -- snapshot ------------------------------------------------------------
+
+    def snapshot(self, queue: Optional[AdmissionQueue] = None
+                 ) -> Dict[str, Any]:
+        classes = sorted(set(self._e2e_ms) | set(self._dispatch_ms)
+                         | set(self.served) | set(self.failed))
+        out: Dict[str, Any] = {
+            "per_class": {
+                cls: {
+                    "served": int(self.served[cls]),
+                    "failed": int(self.failed[cls]),
+                    "deadline_misses": int(self.deadline_misses[cls]),
+                    "dispatch_ms": _pcts(self._dispatch_ms[cls]),
+                    "e2e_ms": _pcts(self._e2e_ms[cls]),
+                } for cls in classes
+            },
+            "batches": {
+                "count": len(self.batch_sizes),
+                "size_mean": (float(np.mean(self.batch_sizes))
+                              if self.batch_sizes else 0.0),
+                "size_max": int(max(self.batch_sizes, default=0)),
+                "size_hist": dict(Counter(self.batch_sizes)),
+                "cross_tenant": int(self.cross_tenant_batches),
+                "tenants_mean": (float(np.mean(self.batch_tenants))
+                                 if self.batch_tenants else 0.0),
+                "ops": dict(self.batch_ops),
+            },
+            "queue_depth": _pcts([float(d) for d in self.depth_samples]),
+            "add_capacity_retraces": int(self.add_capacity_retraces),
+            "deadline_misses_total": int(sum(self.deadline_misses.values())),
+        }
+        if queue is not None:
+            out["admission"] = {
+                "admitted": queue.admitted,
+                "rejected_depth": queue.rejected_depth,
+                "rejected_tenant": queue.rejected_tenant,
+                "rejected_add_capacity": queue.rejected_add_capacity,
+                "blocked_admissions": queue.blocked_admissions,
+            }
+        return out

@@ -1,0 +1,511 @@
+"""Continuous-batching serving tier: admission, EDF flush, snapshots.
+
+The contract under test: the serving subsystem decides WHEN to flush and
+WHAT to coalesce but never HOW to replay — every batch goes through the
+unchanged session submit/coalesce/flush path, so admission control, SLA
+deadlines, and cross-tenant batching compose with the engine's numerics
+(scan-vs-python parity, pow2 bucketing, snapshot determinism) untouched.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.deltagrad import DeltaGradConfig, _next_pow2
+from repro.core.session import (AutoFlushTimer, UnlearnerConfig,
+                                UnlearnerSession)
+from repro.data.synthetic import binary_classification
+from repro.models.simple import logreg_init, logreg_objective
+from repro.serve import (AddCapacityLedger, AdmissionQueue, LoadGenerator,
+                         QueuedRequest, RetryAfter, ServeConfig,
+                         ServingScheduler, SessionFlushClock, SLAClass,
+                         TenantQuota, fixed_trace, materialize,
+                         poisson_trace)
+from repro.utils.tree import tree_norm, tree_sub
+
+CFG = DeltaGradConfig(period=5, burn_in=10, history_size=2)
+META = dict(n=200, batch_size=64, seed=0, steps=30, l2=1e-3)
+
+
+def _session(**kw):
+    ds = binary_classification(n=META["n"], d=16, seed=0)
+    obj = logreg_objective(l2=META["l2"])
+    cfg = UnlearnerConfig(steps=META["steps"],
+                          batch_size=META["batch_size"], lr=0.2,
+                          seed=0, deltagrad=CFG, **kw)
+    sess = UnlearnerSession(obj, logreg_init(16, seed=1), ds, cfg)
+    sess.fit()
+    return sess
+
+
+def _dist(a, b):
+    return float(tree_norm(tree_sub(a, b)))
+
+
+def _req(seq=0, tenant="t", op="delete", rows=(1,), sla="interactive",
+         t=0.0, deadline=1.0, coalesce=True, data=None):
+    return QueuedRequest(seq=seq, tenant=tenant, sla_class=sla, op=op,
+                        rows=list(rows) if rows is not None else None,
+                        data=data, coalesce=coalesce, t_enqueue=t,
+                        deadline=deadline)
+
+
+class VirtualClock:
+    """Deterministic monotonic clock: a fixed tick per call."""
+
+    def __init__(self, tick_s=1e-3):
+        self.t = 0.0
+        self.tick_s = tick_s
+
+    def __call__(self):
+        self.t += self.tick_s
+        return self.t
+
+
+# --------------------------------------------------------------------------
+# Admission queue: bounds, quotas, backpressure
+# --------------------------------------------------------------------------
+
+
+class TestAdmissionQueue:
+    def test_depth_bound_rejects_with_retry_after(self):
+        q = AdmissionQueue(max_depth=2)
+        q.admit(_req())
+        q.admit(_req())
+        with pytest.raises(RetryAfter, match="max_depth"):
+            q.admit(_req())
+        assert q.rejected_depth == 1 and q.admitted == 2
+        # the hint is a positive drain-rate estimate, not a promise
+        try:
+            q.admit(_req())
+        except RetryAfter as e:
+            assert e.retry_after_s > 0
+
+    def test_tenant_quota_isolates_tenants(self):
+        q = AdmissionQueue(max_depth=100,
+                           tenant_quota=TenantQuota(max_pending=2))
+        q.admit(_req(tenant="a"))
+        q.admit(_req(tenant="a"))
+        with pytest.raises(RetryAfter, match="tenant 'a'"):
+            q.admit(_req(tenant="a"))
+        # tenant a at quota does NOT starve tenant b
+        q.admit(_req(tenant="b"))
+        assert q.rejected_tenant == 1
+        assert q.tenant_depth("a") == 2 and q.tenant_depth("b") == 1
+
+    def test_take_frees_quota(self):
+        q = AdmissionQueue(max_depth=100,
+                           tenant_quota=TenantQuota(max_pending=1))
+        q.admit(_req(tenant="a"))
+        q.take(lambda p: list(p))
+        q.admit(_req(tenant="a"))  # quota freed by the take
+
+    def test_block_mode_times_out_to_retry_after(self):
+        q = AdmissionQueue(max_depth=1, on_full="block",
+                           block_timeout_s=0.05)
+        q.admit(_req())
+        with pytest.raises(RetryAfter, match="block_timeout_s"):
+            q.admit(_req())
+        assert q.blocked_admissions == 1
+
+    def test_block_mode_wakes_when_space_frees(self):
+        import threading
+        q = AdmissionQueue(max_depth=1, on_full="block", block_timeout_s=5.0)
+        q.admit(_req())
+        admitted = threading.Event()
+
+        def blocked_producer():
+            q.admit(_req(seq=1))
+            admitted.set()
+
+        t = threading.Thread(target=blocked_producer, daemon=True)
+        t.start()
+        assert not admitted.wait(0.05)  # parked: the queue is full
+        q.take(lambda p: p[:1])         # space frees -> producer wakes
+        assert admitted.wait(2.0)
+        t.join(timeout=2.0)
+
+    def test_closed_queue_raises_runtime_error_and_reopens(self):
+        q = AdmissionQueue(max_depth=4)
+        q.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            q.admit(_req())
+        q.reopen()
+        q.admit(_req())
+
+    def test_take_is_atomic_choice(self):
+        q = AdmissionQueue(max_depth=10)
+        for i in range(4):
+            q.admit(_req(rows=[i]))
+        batch = q.take(lambda p: [x for x in p if x.seq % 2 == 0])
+        assert [b.seq for b in batch] == [0, 2]
+        assert [b.seq for b in q.snapshot()] == [1, 3]
+
+
+class TestAddCapacityLedger:
+    def test_padding_counts_as_capacity(self):
+        """The pre-scheduler accounting compared against the raw add count;
+        the fix charges the FULL pow2 bucket, padding included."""
+        led = AddCapacityLedger()
+        led.refresh(staged_rows=_next_pow2(5), appended_rows=5)
+        # bucket(5) == 8: three padding rows admit without a retrace
+        assert led.headroom == 3
+        assert led.try_charge(3)
+        assert not led.try_charge(1)   # the 4th row crosses the boundary
+        led.release(3)
+        assert led.headroom == 3
+
+    def test_bucket_is_next_pow2(self):
+        assert AddCapacityLedger.bucket(0) == 0
+        assert AddCapacityLedger.bucket(1) == 1
+        assert AddCapacityLedger.bucket(5) == 8
+
+    def test_queue_rejects_add_past_headroom(self):
+        q = AdmissionQueue(max_depth=10)
+        q.ledger.refresh(staged_rows=2, appended_rows=0)
+        data = {"x": np.zeros((4, 16)), "y": np.zeros(4)}
+        with pytest.raises(RetryAfter, match="staged"):
+            q.admit(_req(op="add", rows=None, data=data))
+        assert q.rejected_add_capacity == 1
+        # blocking cannot create device capacity: adds reject even in
+        # block mode
+        qb = AdmissionQueue(max_depth=10, on_full="block")
+        qb.ledger.refresh(staged_rows=2, appended_rows=0)
+        with pytest.raises(RetryAfter, match="staged"):
+            qb.admit(_req(op="add", rows=None, data=data))
+
+    def test_enforcement_off_force_charges(self):
+        q = AdmissionQueue(max_depth=10)
+        q.ledger.refresh(staged_rows=1, appended_rows=0)
+        data = {"x": np.zeros((4, 16)), "y": np.zeros(4)}
+        q.admit(_req(op="add", rows=None, data=data),
+                enforce_add_capacity=False)
+        assert q.ledger.pending_rows == 4
+
+
+# --------------------------------------------------------------------------
+# Scheduler: EDF flush policy, cross-tenant batching, SLA accounting
+# --------------------------------------------------------------------------
+
+
+class TestServingScheduler:
+    def _sched(self, sess=None, **cfg_kw):
+        sess = sess or _session()
+        clock = VirtualClock()
+        cfg = ServeConfig(**cfg_kw)
+        return ServingScheduler(sess, cfg, clock=clock), clock
+
+    def test_rejects_session_with_own_autoflush_policy(self):
+        sess = _session(max_pending=3)
+        with pytest.raises(ValueError, match="max_pending"):
+            ServingScheduler(sess, ServeConfig())
+
+    def test_unknown_sla_class_rejected(self):
+        sched, _ = self._sched()
+        with pytest.raises(ValueError, match="unknown SLA class"):
+            sched.submit("delete", rows=[1], sla_class="platinum")
+
+    def test_edf_head_anchors_cross_tenant_batch(self):
+        """Requests from DIFFERENT tenants with the same op coalesce into
+        one batch, ordered earliest-deadline-first, served as ONE flush."""
+        sched, _ = self._sched()
+        sched.submit("delete", rows=[1], tenant="a", sla_class="bulk_gdpr")
+        sched.submit("delete", rows=[2], tenant="b", sla_class="interactive")
+        sched.submit("delete", rows=[3], tenant="c", sla_class="batch")
+        served = sched.pump(force=True)
+        assert served == 3
+        (rec,) = sched.batch_log
+        assert rec["rows"] == [2, 3, 1]      # EDF order, not arrival order
+        assert rec["tenants"] == ["a", "b", "c"]
+        stats = sched.stats()
+        assert stats["batches"]["cross_tenant"] == 1
+        assert stats["batches"]["count"] == 1
+
+    def test_mixed_ops_do_not_coalesce(self):
+        sess = _session()
+        sched, _ = self._sched(sess=sess, add_capacity=4)
+        sched.submit("delete", rows=[1], sla_class="interactive")
+        data = {k: np.asarray(v)[:1] for k, v in sess.dataset.columns.items()}
+        sched.submit("add", data=data, sla_class="interactive")
+        assert sched.pump(force=True) == 1   # the EDF head's op only
+        assert sched.pump(force=True) == 1
+        ops = [rec["op"] for rec in sched.batch_log]
+        assert sorted(ops) == ["add", "delete"]
+
+    def test_no_coalesce_request_served_alone(self):
+        sched, _ = self._sched()
+        sched.submit("delete", rows=[1], sla_class="bulk_gdpr",
+                     coalesce=True)
+        sched.submit("delete", rows=[2], sla_class="interactive",
+                     coalesce=False)
+        assert sched.pump(force=True) == 1
+        assert sched.batch_log[0]["rows"] == [2]
+
+    def test_hold_delays_dispatch_until_ready(self):
+        """A batch-class request is NOT ready before its hold expires (the
+        deliberate batching delay); force=False honors it, and wait_hint
+        tells the executor exactly how long to sleep."""
+        classes = (SLAClass("batch", deadline_s=10.0, hold_s=1.0),)
+        sched, clock = self._sched(classes=classes, service_est_init_s=0.01)
+        sched.submit("delete", rows=[1], sla_class="batch")
+        t0 = sched.queue.snapshot()[0].t_enqueue
+        assert sched.take_batch(now=t0 + 0.1) == []
+        assert sched.wait_hint == pytest.approx(0.9)
+        batch = sched.take_batch(now=t0 + 1.1)
+        assert len(batch) == 1
+
+    def test_deadline_trims_hold(self):
+        """ready_t = min(enqueue + hold, deadline - slack*est): a hold can
+        never park a request past the point where the service estimate
+        says it would miss."""
+        classes = (SLAClass("batch", deadline_s=0.5, hold_s=10.0),)
+        sched, _ = self._sched(classes=classes, slack_factor=2.0,
+                               service_est_init_s=0.1)
+        sched.submit("delete", rows=[1], sla_class="batch")
+        q = sched.queue.snapshot()[0]
+        assert sched._ready_t(q) == pytest.approx(q.deadline - 0.2)
+
+    def test_full_pending_set_dispatches_without_waiting(self):
+        classes = (SLAClass("batch", deadline_s=10.0, hold_s=5.0),)
+        sched, _ = self._sched(classes=classes, max_batch=2)
+        sched.submit("delete", rows=[1], sla_class="batch")
+        sched.submit("delete", rows=[2], sla_class="batch")
+        # pending hit max_batch: holds are moot, dispatch now
+        assert len(sched.take_batch()) == 2
+
+    def test_deadline_miss_detected_and_counted(self):
+        classes = (SLAClass("rush", deadline_s=1e-6, hold_s=0.0),)
+        sched, _ = self._sched(classes=classes)
+        t = sched.submit("delete", rows=[1], sla_class="rush")
+        t.wait(timeout=30.0)
+        assert t.missed_deadline is True
+        stats = sched.stats()
+        assert stats["deadline_misses_total"] == 1
+        assert stats["per_class"]["rush"]["deadline_misses"] == 1
+
+    def test_service_estimate_ema_updates(self):
+        sched, _ = self._sched()
+        est0 = sched.service_est_s
+        sched.submit("delete", rows=[1], sla_class="interactive")
+        sched.pump(force=True)
+        assert sched.service_est_s != est0
+
+    def test_ticket_error_surfaces(self):
+        sched, _ = self._sched()
+        t = sched.submit("delete", rows=[10 ** 9], sla_class="interactive")
+        with pytest.raises(RuntimeError, match="failed"):
+            t.wait(timeout=30.0)
+        assert sched.stats()["per_class"]["interactive"]["failed"] == 1
+
+    def test_add_over_capacity_rejected_at_admission(self):
+        sess = _session()
+        sched, _ = self._sched(sess=sess, add_capacity=2)
+        cols = sess.dataset.columns
+        data = {k: np.asarray(v)[:4] for k, v in cols.items()}
+        with pytest.raises(RetryAfter, match="staged"):
+            sched.submit("add", data=data)
+        assert sched.stats()["admission"]["rejected_add_capacity"] == 1
+        # within the staged bucket (padding included) adds admit and serve
+        ok = sched.submit("add",
+                          data={k: np.asarray(v)[:2] for k, v in cols.items()})
+        ok.wait(timeout=30.0)
+        assert sched.stats()["add_capacity_retraces"] == 0
+
+    def test_unenforced_add_burst_counts_retrace(self):
+        """enforce_add_capacity=False admits past the pow2 boundary; the
+        resulting mid-serve retrace is surfaced as a monitor counter
+        instead of silently eating a recompile."""
+        sess = _session()
+        sched, _ = self._sched(sess=sess, add_capacity=1,
+                               enforce_add_capacity=False)
+        sched.submit("delete", rows=[0])
+        sched.pump(force=True)           # batches_served > 0, cap staged
+        cols = sess.dataset.columns
+        data = {k: np.asarray(v)[:3] for k, v in cols.items()}
+        sched.submit("add", data=data)   # 3 rows into a 1-row bucket
+        sched.pump(force=True)
+        assert sched.stats()["add_capacity_retraces"] == 1
+
+
+# --------------------------------------------------------------------------
+# Load generation: determinism, parity of loop modes
+# --------------------------------------------------------------------------
+
+
+class TestLoadGen:
+    def test_trace_deterministic_per_seed(self):
+        a = poisson_trace(100.0, 50, seed=7, tenants={"a": 0.5, "b": 0.5},
+                          classes=("interactive", "batch"), add_frac=0.3)
+        b = poisson_trace(100.0, 50, seed=7, tenants={"a": 0.5, "b": 0.5},
+                          classes=("interactive", "batch"), add_frac=0.3)
+        c = poisson_trace(100.0, 50, seed=8, tenants={"a": 0.5, "b": 0.5},
+                          classes=("interactive", "batch"), add_frac=0.3)
+        assert [(e.t, e.op, e.tenant, e.sla_class) for e in a] \
+            == [(e.t, e.op, e.tenant, e.sla_class) for e in b]
+        assert [e.t for e in a] != [e.t for e in c]
+
+    def test_fixed_trace_times_carry_no_randomness(self):
+        ev = fixed_trace(0.01, 5, seed=3)
+        assert [e.t for e in ev] == pytest.approx(
+            [0.01, 0.02, 0.03, 0.04, 0.05])
+
+    def test_materialize_deletes_disjoint_and_deterministic(self):
+        ds = binary_classification(n=50, d=4, seed=0)
+        ev1 = materialize(fixed_trace(0.01, 10, seed=1), ds, seed=5)
+        ev2 = materialize(fixed_trace(0.01, 10, seed=1), ds, seed=5)
+        rows1 = [r for e in ev1 if e.op == "delete" for r in e.rows]
+        rows2 = [r for e in ev2 if e.op == "delete" for r in e.rows]
+        assert rows1 == rows2
+        assert len(set(rows1)) == len(rows1)  # no batching order conflicts
+
+    def test_materialize_exhausting_live_rows_raises(self):
+        ds = binary_classification(n=5, d=4, seed=0)
+        with pytest.raises(ValueError, match="live rows"):
+            materialize(fixed_trace(0.01, 6, seed=1), ds, seed=5)
+
+    def test_closed_loop_serves_every_event_inline(self):
+        sess = _session()
+        sched = ServingScheduler(sess, ServeConfig(add_capacity=4))
+        ev = materialize(fixed_trace(0.001, 6, seed=2,
+                                     tenants=("a", "b"), add_frac=0.25),
+                         sess.dataset, seed=9)
+        res = LoadGenerator(sched).closed_loop(ev, timeout_s=60.0)
+        assert res.rejected == 0 and res.served == 6
+
+
+# --------------------------------------------------------------------------
+# Snapshot consistency under load (ISSUE satellite c)
+# --------------------------------------------------------------------------
+
+
+class TestSnapshotUnderLoad:
+    def test_save_refuse_raises_with_queued_work(self, tmp_path):
+        sched, _ = TestServingScheduler()._sched()
+        sched.submit("delete", rows=[1], sla_class="bulk_gdpr")
+        with pytest.raises(RuntimeError, match="refuse"):
+            sched.save(str(tmp_path), pending="refuse")
+        # the queued request is untouched by the refused save
+        assert sched.queue.depth == 1
+        sched.drain()
+        sched.save(str(tmp_path), pending="refuse")  # now clean: fine
+
+    def test_save_drain_serves_queue_first(self, tmp_path):
+        sched, _ = TestServingScheduler()._sched()
+        t = sched.submit("delete", rows=[3], sla_class="bulk_gdpr")
+        sched.save(str(tmp_path), pending="drain")
+        assert t.done and sched.queue.depth == 0
+
+    def test_restore_and_replay_is_bitwise_identical(self, tmp_path):
+        """Drain-save mid-trace, restore, replay the remainder: params are
+        bitwise-identical to the uninterrupted run of the same seeded
+        trace (same per-event batching on both sides)."""
+        obj = logreg_objective(l2=META["l2"])
+        ev = fixed_trace(0.001, 8, seed=4, tenants=("a", "b"), add_frac=0.25)
+        sess_ref = _session()
+        ev = materialize(ev, sess_ref.dataset, seed=11)
+        ev_mid = copy.deepcopy(ev)
+
+        def replay(sched, events):
+            for e in events:
+                sched.submit(op=e.op, rows=e.rows, data=e.data,
+                             tenant=e.tenant, sla_class=e.sla_class)
+                while sched.pump(force=True):
+                    pass
+
+        # uninterrupted run
+        sched_ref = ServingScheduler(sess_ref, ServeConfig(add_capacity=4))
+        replay(sched_ref, ev)
+
+        # interrupted run: first half, drain-save, restore, second half
+        sess_a = _session()
+        sched_a = ServingScheduler(sess_a, ServeConfig(add_capacity=4))
+        replay(sched_a, ev_mid[:4])
+        sched_a.save(str(tmp_path), pending="drain")
+        sess_b = UnlearnerSession.restore(str(tmp_path), obj)
+        sched_b = ServingScheduler(sess_b, ServeConfig(add_capacity=4))
+        replay(sched_b, ev_mid[4:])
+
+        assert _dist(sched_ref.session.params, sched_b.session.params) == 0.0
+        plans = lambda s: [(r["op"], tuple(r["rows"])) for r in s.batch_log]  # noqa: E731
+        assert plans(sched_a) + plans(sched_b) == plans(sched_ref)
+
+
+# --------------------------------------------------------------------------
+# Deprecation shims (ISSUE satellite a)
+# --------------------------------------------------------------------------
+
+
+class TestDeprecationShims:
+    def test_start_autoflush_timer_warns_and_delegates(self):
+        sess = _session(max_delay_s=0.05)
+        with pytest.warns(DeprecationWarning, match="SessionFlushClock"):
+            clock = sess.start_autoflush_timer()
+        try:
+            assert isinstance(clock, SessionFlushClock)
+            assert clock.sla.deadline_s == pytest.approx(0.05)
+        finally:
+            clock.stop()
+
+    def test_autoflush_timer_class_warns_and_delegates(self):
+        sess = _session(max_delay_s=0.05)
+        with pytest.warns(DeprecationWarning, match="SessionFlushClock"):
+            timer = AutoFlushTimer(sess)
+        try:
+            assert isinstance(timer, SessionFlushClock)
+        finally:
+            timer.stop()
+
+    def test_clock_without_deadline_rejected(self):
+        sess = _session()
+        with pytest.raises(ValueError, match="max_delay_s"):
+            SessionFlushClock(sess)
+
+    def test_flush_clock_holds_deadline_with_zero_arrivals(self):
+        import time
+        sess = _session(max_delay_s=0.05)
+        clock = SessionFlushClock(sess)
+        try:
+            h = sess.submit(op="delete", rows=[1])
+            deadline = time.monotonic() + 10.0
+            while not h.done and time.monotonic() < deadline:
+                time.sleep(0.005)
+            assert h.done and clock.ticks >= 1
+        finally:
+            clock.stop()
+
+
+# --------------------------------------------------------------------------
+# Threaded executor: continuous batching end to end
+# --------------------------------------------------------------------------
+
+
+class TestThreadedExecutor:
+    def test_open_loop_burst_coalesces_under_thread(self):
+        sess = _session()
+        sched = ServingScheduler(sess, ServeConfig(add_capacity=4))
+        # warm the compiled programs so the burst measures steady state
+        sess.delete([190], coalesce=True)
+        ev = materialize(
+            poisson_trace(400.0, 12, seed=6, tenants=("a", "b"),
+                          classes=("batch",)),
+            sess.dataset, seed=13)
+        sched.start()
+        try:
+            res = LoadGenerator(sched).open_loop(ev)
+            for t in res.tickets:
+                t.wait(timeout=30.0)
+        finally:
+            sched.stop()
+        assert res.served == 12
+        stats = sched.stats()
+        assert stats["batches"]["count"] < 12       # batching happened
+        assert stats["batches"]["cross_tenant"] >= 1
+        assert sched.queue.depth == 0
+
+    def test_stop_then_inline_use_still_works(self):
+        sched, _ = TestServingScheduler()._sched()
+        sched.start()
+        sched.stop()
+        t = sched.submit("delete", rows=[5], sla_class="interactive")
+        assert t.wait(timeout=30.0)

@@ -65,10 +65,28 @@ SUITES = {
          "coalesced scan vs python oracle"),
         ("coalesce.serial_vs_coalesced_dist", "ratio_max", 50.0,
          "group-vs-serial semantic drift"),
-        ("autoflush.max_staleness_ms", "ratio_max", 20.0,
-         "pending-request staleness bound"),
-        ("autoflush.lone_request_flushed_by_timer", "exact", None,
-         "timer thread enforces max_delay_s with zero arrivals"),
+        # the serving tier (repro.serve): scheduler-routed load section of
+        # the serve driver plus bench_serve's continuous-batching sweep
+        ("serving.lone_request_served", "exact", None,
+         "executor deadline tick serves a lone tail with zero arrivals"),
+        ("serving.add_capacity_retraces", "exact", None,
+         "admission accounting prevents mid-flush retraces"),
+        ("continuous_batching.parity_vs_python", "parity", None,
+         "scheduler-formed coalesced replays: scan vs python oracle"),
+        ("continuous_batching.batch_plans_equal", "exact", None,
+         "virtual-clock batch formation replays identically"),
+        ("continuous_batching.interactive_misses_below_knee", "exact", None,
+         "zero interactive deadline misses below the knee"),
+        ("continuous_batching.add_capacity_retraces", "exact", None,
+         "pow2-bucket admission accounting holds across the sweep"),
+        ("continuous_batching.cb_beats_serial_at_peak", "exact", None,
+         "continuous batching beats the serial path on p99 at peak load"),
+        ("continuous_batching.p99_ratio_serial_over_cb", "ratio_min", 0.25,
+         "p99 win vs the max_batch=1 ablation (cross-runner slack)"),
+        ("continuous_batching.batch_size_mean_at_peak", "ratio_min", 0.5,
+         "cross-tenant coalescing actually batches at peak"),
+        ("continuous_batching.cross_tenant_batches_at_peak", "ratio_min",
+         0.3, "cross-tenant batch-count floor"),
     ],
     "certified": [
         # the oracle's distance to itself is the anchor invariant; the
