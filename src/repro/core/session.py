@@ -593,11 +593,15 @@ class UnlearnerSession:
             return list(self._pending)
 
     def try_flush(self) -> Optional[List[UnlearnResponse]]:
-        """Non-blocking flush: serve the pending set IF the session lock
-        is immediately available, else return None without waiting.  The
-        serving executor's idle tick uses this so a deadline check never
-        parks behind a foreground submitter (or another flush) holding the
-        lock."""
+        """Non-blocking variant of `flush()`: serve the pending set IF
+        the session lock is immediately available, else return None
+        without waiting.  Part of the serving-tier session surface
+        (alongside `poll` and `pending_requests`) for callers driving the
+        session from their own event loop, where a flush attempt must
+        never park behind a foreground submitter (or another flush)
+        holding the lock.  The threaded serving path does not need it:
+        `ServingScheduler`'s executor is the session's only writer there
+        and uses plain `flush()`."""
         if not self._lock.acquire(blocking=False):
             return None
         try:

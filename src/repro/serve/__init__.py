@@ -36,10 +36,10 @@ ARCHITECTURE — one request's life:
     caller ──▶ AdmissionQueue.admit()          (quota + depth + add-capacity
                    │                            checks; backpressure here)
                    ▼
-    ServingScheduler._decide()                 (EDF over the pending set:
+    ServingScheduler.take_batch()              (EDF over the pending set:
                    │                            dispatch now / wait)
                    ▼
-    Executor._serve_batch()                    (session.submit × batch,
+    Executor.serve_batch()                     (session.submit × batch,
                    │                            ONE flush, ONE device sync)
                    ▼
     ServeMonitor.observe_*()                   (e2e vs the class deadline)

@@ -16,7 +16,6 @@ is served (the session's flush already isolates failing groups)."""
 from __future__ import annotations
 
 import threading
-import time
 from typing import List
 
 from repro.serve.queue import QueuedRequest
@@ -76,63 +75,71 @@ class Executor:
         sched = self.scheduler
         session = sched.session
         with self._serve_lock:
-            cap_before = sched._row_cap_now()
-            t_disp = sched.clock()
-            handles = []
-            for q in batch:
-                try:
-                    h = session.submit(op=q.op, rows=q.rows, data=q.data,
-                                       coalesce=q.coalesce)
-                    # adds resolve their appended row ids at submit time;
-                    # reflect them so the trace log / parity replays see
-                    # the served rows
-                    q.rows = list(h.request.rows)
-                    handles.append((q, h))
-                except Exception as e:  # noqa: BLE001 — per-request fault
-                    q.error = e
+            try:
+                cap_before = sched._row_cap_now()
+                t_disp = sched.clock()
+                handles = []
+                for q in batch:
+                    try:
+                        h = session.submit(op=q.op, rows=q.rows,
+                                           data=q.data, coalesce=q.coalesce)
+                        # adds resolve their appended row ids at submit
+                        # time; reflect them so the trace log / parity
+                        # replays see the served rows
+                        q.rows = list(h.request.rows)
+                        handles.append((q, h))
+                    except Exception as e:  # noqa: BLE001 — per-req fault
+                        q.error = e
+                        q.t_dispatch = t_disp
+                        q.t_done = sched.clock()
+                        q.batch_id = sched._batch_ids + 1
+                        q.done.set()
+                # one flush per batch: the planner coalesces the run into
+                # one group replay.  flush() isolates a failing group by
+                # requeueing the groups behind it, so keep flushing until
+                # the session's pending set is empty (bounded by the
+                # batch size).
+                for _ in range(max(1, len(handles))):
+                    try:
+                        session.flush()
+                    except Exception:  # noqa: BLE001 — outcomes below
+                        pass
+                    if session.pending_count == 0:
+                        break
+                if handles:
+                    try:
+                        jax.block_until_ready(session._algorithm.params)
+                    except Exception:  # noqa: BLE001 — per-handle below
+                        pass
+                t_done = sched.clock()
+                for q, h in handles:
                     q.t_dispatch = t_disp
-                    q.t_done = sched.clock()
+                    q.t_done = t_done
+                    q.batch_id = sched._batch_ids + 1
+                    try:
+                        h.result(block=False)
+                    except Exception as e:  # noqa: BLE001
+                        q.error = e
                     q.done.set()
-            # one flush per batch: the planner coalesces the run into one
-            # group replay.  flush() isolates a failing group by requeueing
-            # the groups behind it, so keep flushing until the session's
-            # pending set is empty (bounded by the batch size).
-            for _ in range(max(1, len(handles))):
-                try:
-                    session.flush()
-                except Exception:  # noqa: BLE001 — read outcomes below
-                    pass
-                if session.pending_count == 0:
-                    break
-            served = [q for q, _ in handles]
-            if served:
-                jax.block_until_ready(session._algorithm.params)
-            t_done = sched.clock()
-            for q, h in handles:
-                q.t_dispatch = t_disp
-                q.t_done = t_done
-                q.batch_id = sched._batch_ids + 1
-                try:
-                    h.result(block=False)
-                except Exception as e:  # noqa: BLE001
-                    q.error = e
-                q.done.set()
-            cap_after = sched._row_cap_now()
-            retraced = (cap_before is not None
-                        and self.batches_served > 0
-                        and cap_after != cap_before)
-            self.batches_served += 1
-            sched.note_service(max(t_done - t_disp, 1e-9),
-                               [q for q, _ in handles] or batch,
-                               retraced)
+                cap_after = sched._row_cap_now()
+                retraced = (cap_before is not None
+                            and self.batches_served > 0
+                            and cap_after != cap_before)
+                self.batches_served += 1
+                # the FULL batch, failed submits included: the monitor's
+                # failed counter and the batch/trace log must record them
+                sched.note_service(max(t_done - t_disp, 1e-9), batch,
+                                   retraced)
+            finally:
+                # always settle the batch with the queue — refresh the
+                # ledger's appended_rows, THEN release the in-flight rows
+                # and count, so drain()/save() see a true between-requests
+                # state and add headroom never double-counts
+                sched._note_batch_done(batch)
 
     def drain_wait(self, timeout: float = 30.0) -> bool:
-        """Wait (thread mode) until the queue is empty and no batch is in
-        flight; True on success."""
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
-            if self.scheduler.queue.depth == 0 \
-                    and not self._serve_lock.locked():
-                return True
-            time.sleep(0.002)
-        return False
+        """Wait (thread mode) until the queue is empty AND no taken batch
+        is still being served; True on success.  `ServingScheduler.drain`
+        uses this so a drain (and a ``pending="drain"`` snapshot) never
+        lands mid-batch."""
+        return self.scheduler.queue.wait_idle(timeout=timeout)

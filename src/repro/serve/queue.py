@@ -107,7 +107,11 @@ class AddCapacityLedger:
     where ``staged_rows`` is the full bucket (padding included — the fix
     for the pre-scheduler accounting, which compared against the raw add
     count and let bursts slip past the boundary) and ``pending_rows`` are
-    admitted-but-not-yet-appended adds sitting in the queue."""
+    admitted-but-not-yet-appended adds: rows sitting in the queue AND
+    rows in a batch the executor has taken but not finished serving.  A
+    charge is released only once the batch completes and the scheduler
+    has refreshed ``appended_rows`` (`AdmissionQueue.note_served`), so
+    in-flight rows are never counted as headroom."""
 
     def __init__(self) -> None:
         self.staged_rows = 0
@@ -138,8 +142,8 @@ class AddCapacityLedger:
         self.pending_rows += k
 
     def release(self, k: int) -> None:
-        """A charged request left the queue (served — its rows are now in
-        ``appended_rows`` at the next refresh — or failed)."""
+        """A charged request finished serving (its rows are now visible
+        in ``appended_rows``) or failed without appending."""
         self.pending_rows = max(0, self.pending_rows - k)
 
     @staticmethod
@@ -168,6 +172,7 @@ class AdmissionQueue:
         self.ledger = AddCapacityLedger()
         self.cond = threading.Condition()
         self._pending: List[QueuedRequest] = []
+        self._in_flight = 0
         self._seq = 0
         self._closed = False
         # admission outcome counters (monitor scrapes them)
@@ -189,6 +194,14 @@ class AdmissionQueue:
     @property
     def depth(self) -> int:
         return len(self)
+
+    @property
+    def in_flight(self) -> int:
+        """Requests taken by the executor but not yet finished serving.
+        A drain (or a snapshot) is only between-requests when BOTH the
+        depth and this are zero."""
+        with self.cond:
+            return self._in_flight
 
     def tenant_depth(self, tenant: str) -> int:
         with self.cond:
@@ -286,9 +299,10 @@ class AdmissionQueue:
                 picked = {q.seq for q in batch}
                 self._pending = [q for q in self._pending
                                  if q.seq not in picked]
-                for q in batch:
-                    if q.op == "add":
-                        self.ledger.release(q.n_rows)
+                # taken rows stay charged on the ledger until the batch
+                # completes and `note_served` runs — releasing here would
+                # overstate headroom while the rows are in flight
+                self._in_flight += len(batch)
                 now = self.clock()
                 if self._last_take_t is not None:
                     dt = max(now - self._last_take_t, 1e-6)
@@ -298,6 +312,33 @@ class AdmissionQueue:
                 self._last_take_t = now
                 self.cond.notify_all()  # space freed: wake blocked admits
             return batch
+
+    def note_served(self, batch: List[QueuedRequest]) -> None:
+        """The executor finished (or abandoned) a taken batch: drop its
+        in-flight count and release its add-row ledger charges.  Call
+        AFTER `refresh_ledger` has absorbed the appended rows, so the
+        charge hands off to ``appended_rows`` without a headroom gap."""
+        with self.cond:
+            self._in_flight = max(0, self._in_flight - len(batch))
+            for q in batch:
+                if q.op == "add":
+                    self.ledger.release(q.n_rows)
+            self.cond.notify_all()  # wake wait_idle / blocked admits
+
+    def refresh_ledger(self, staged_rows: int, appended_rows: int) -> None:
+        """Sync the ledger's engine-side facts under the queue lock (so
+        a concurrent admit's `try_charge` never sees a half-updated
+        view)."""
+        with self.cond:
+            self.ledger.refresh(staged_rows, appended_rows)
+
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        """Block until nothing is pending AND nothing is in flight (or
+        timeout); True when idle.  This is the drain/snapshot barrier."""
+        with self.cond:
+            return self.cond.wait_for(
+                lambda: not self._pending and not self._in_flight,
+                timeout=timeout)
 
     def close(self) -> None:
         """Stop admitting (blocked admits wake and see the closed queue).

@@ -203,7 +203,15 @@ class ServingScheduler:
     def _refresh_ledger(self) -> None:
         view = self._capacity_view()
         if view is not None:
-            self.queue.ledger.refresh(*view)
+            self.queue.refresh_ledger(*view)
+
+    def _note_batch_done(self, batch: List[QueuedRequest]) -> None:
+        """Settle a completed (or abandoned) batch with the queue: absorb
+        the appended rows into the ledger FIRST, then release the batch's
+        in-flight charges — in that order there is no instant where
+        in-flight add rows count as headroom."""
+        self._refresh_ledger()
+        self.queue.note_served(batch)
 
     def _row_cap_now(self) -> Optional[int]:
         algo = self.session._algorithm
@@ -278,8 +286,10 @@ class ServingScheduler:
 
     def note_service(self, service_s: float, batch: List[QueuedRequest],
                      retraced: bool) -> None:
-        """Executor feedback after each batch: service-time EMA for the
-        deadline margin, the batch record for the monitor + trace log."""
+        """Executor feedback after each batch — the FULL batch, including
+        requests whose submit failed (the monitor routes those to the
+        per-class failed counter): service-time EMA for the deadline
+        margin, the batch record for the monitor + trace log."""
         self.service_est_s = 0.5 * self.service_est_s + 0.5 * float(service_s)
         self.monitor.observe_batch(batch, retraced=retraced)
         for q in batch:
@@ -293,7 +303,6 @@ class ServingScheduler:
             "classes": sorted({q.sla_class for q in batch}),
             "coalesce": batch[0].coalesce,
         })
-        self._refresh_ledger()
 
     # -- execution modes -----------------------------------------------------
 
@@ -327,13 +336,20 @@ class ServingScheduler:
     def drain(self) -> int:
         """Serve everything pending (queue AND session) to completion;
         returns requests served.  Safe next to a running executor thread —
-        batches are taken atomically either way."""
+        batches are taken atomically either way, and a batch the executor
+        has already taken is waited out (`Executor.drain_wait`) before the
+        final session flush, so a drain never lands mid-batch."""
         served = 0
         while True:
             n = self.pump(force=True) if not self.running else 0
             served += n
             if self.queue.depth == 0 and not n:
-                break
+                # the queue is empty, but the executor may still be
+                # serving a batch it took earlier — wait for it before
+                # declaring the drain complete
+                if not self.running or self.executor.drain_wait():
+                    if self.queue.depth == 0 and self.queue.in_flight == 0:
+                        break
             if self.running:
                 time.sleep(0.002)
         self.session.flush()
@@ -349,18 +365,21 @@ class ServingScheduler:
         snapshot is a between-requests state — restoring and replaying
         the rest of a seeded trace is bitwise-identical to the
         uninterrupted run); ``pending="refuse"`` raises while anything is
-        queued, for callers that must not absorb latency here."""
+        queued OR in flight, for callers that must not absorb latency
+        here."""
         if pending not in ("drain", "refuse"):
             raise ValueError(f"pending must be 'drain' or 'refuse', got "
                              f"{pending!r}")
         if pending == "refuse":
             depth = self.queue.depth
+            in_flight = self.queue.in_flight
             sess_pending = self.session.pending_count
-            if depth or sess_pending:
+            if depth or in_flight or sess_pending:
                 raise RuntimeError(
                     f"save(pending='refuse') with {depth} queued + "
-                    f"{sess_pending} session-pending request(s); drain "
-                    "first or save(pending='drain')")
+                    f"{in_flight} in-flight + {sess_pending} "
+                    "session-pending request(s); drain first or "
+                    "save(pending='drain')")
         else:
             self.drain()
         return self.session.save(directory, step)

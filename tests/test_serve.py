@@ -142,6 +142,18 @@ class TestAdmissionQueue:
         assert [b.seq for b in batch] == [0, 2]
         assert [b.seq for b in q.snapshot()] == [1, 3]
 
+    def test_taken_batch_is_in_flight_until_noted_served(self):
+        """A drain/snapshot barrier must see a taken-but-unserved batch:
+        wait_idle only passes once `note_served` settles it."""
+        q = AdmissionQueue(max_depth=10)
+        q.admit(_req())
+        batch = q.take(lambda p: list(p))
+        assert q.depth == 0 and q.in_flight == 1
+        assert not q.wait_idle(timeout=0.01)
+        q.note_served(batch)
+        assert q.in_flight == 0
+        assert q.wait_idle(timeout=0.01)
+
 
 class TestAddCapacityLedger:
     def test_padding_counts_as_capacity(self):
@@ -174,6 +186,25 @@ class TestAddCapacityLedger:
         qb.ledger.refresh(staged_rows=2, appended_rows=0)
         with pytest.raises(RetryAfter, match="staged"):
             qb.admit(_req(op="add", rows=None, data=data))
+
+    def test_take_keeps_add_charge_until_served(self):
+        """In-flight add rows are NOT headroom: the charge survives the
+        take and hands off to appended_rows only at note_served, so a
+        concurrent admit can never overstate the staged bucket."""
+        q = AdmissionQueue(max_depth=10)
+        q.ledger.refresh(staged_rows=4, appended_rows=0)
+        data = {"x": np.zeros((4, 16)), "y": np.zeros(4)}
+        q.admit(_req(op="add", rows=None, data=data))
+        batch = q.take(lambda p: list(p))
+        # the rows are in flight, not yet appended — still charged
+        assert q.ledger.pending_rows == 4 and q.ledger.headroom == 0
+        with pytest.raises(RetryAfter, match="staged"):
+            q.admit(_req(op="add", rows=None,
+                         data={k: v[:1] for k, v in data.items()}))
+        # executor appended the rows, then settles the batch
+        q.refresh_ledger(staged_rows=4, appended_rows=4)
+        q.note_served(batch)
+        assert q.ledger.pending_rows == 0 and q.ledger.headroom == 0
 
     def test_enforcement_off_force_charges(self):
         q = AdmissionQueue(max_depth=10)
@@ -298,6 +329,20 @@ class TestServingScheduler:
             t.wait(timeout=30.0)
         assert sched.stats()["per_class"]["interactive"]["failed"] == 1
 
+    def test_partial_batch_failure_counts_failed_request(self):
+        """A request whose session.submit raises inside an otherwise
+        healthy batch still reaches the monitor: failed counts it, served
+        counts only the rest."""
+        sched, _ = self._sched()
+        ok = sched.submit("delete", rows=[1], sla_class="interactive")
+        bad = sched.submit("delete", rows=[10 ** 9],
+                           sla_class="interactive")
+        assert sched.pump(force=True) == 2   # one coalesced batch
+        assert ok.done and bad.done
+        assert bad.error is not None and ok.error is None
+        cls = sched.stats()["per_class"]["interactive"]
+        assert cls["served"] == 1 and cls["failed"] == 1
+
     def test_add_over_capacity_rejected_at_admission(self):
         sess = _session()
         sched, _ = self._sched(sess=sess, add_capacity=2)
@@ -389,6 +434,20 @@ class TestSnapshotUnderLoad:
         assert sched.queue.depth == 1
         sched.drain()
         sched.save(str(tmp_path), pending="refuse")  # now clean: fine
+
+    def test_save_refuse_counts_in_flight_batch(self, tmp_path):
+        """A batch the executor has taken but not finished serving blocks
+        ``pending="refuse"`` just like queued work — the snapshot must
+        never land mid-batch."""
+        sched, _ = TestServingScheduler()._sched()
+        sched.submit("delete", rows=[1], sla_class="bulk_gdpr")
+        batch = sched.take_batch(force=True)   # taken, not yet served
+        assert sched.queue.in_flight == 1
+        with pytest.raises(RuntimeError, match="in-flight"):
+            sched.save(str(tmp_path), pending="refuse")
+        sched.executor.serve_batch(batch)
+        assert sched.queue.in_flight == 0
+        sched.save(str(tmp_path), pending="refuse")  # settled: fine
 
     def test_save_drain_serves_queue_first(self, tmp_path):
         sched, _ = TestServingScheduler()._sched()
@@ -502,6 +561,34 @@ class TestThreadedExecutor:
         assert stats["batches"]["count"] < 12       # batching happened
         assert stats["batches"]["cross_tenant"] >= 1
         assert sched.queue.depth == 0
+
+    def test_drain_waits_for_in_flight_batch(self, monkeypatch):
+        """drain() (and so save(pending='drain')) must wait out a batch
+        the executor already took: the session flush that ends the drain
+        may not interleave with the executor's in-flight serve."""
+        import threading
+        import time as _time
+        sess = _session()
+        sched = ServingScheduler(sess, ServeConfig())
+        entered = threading.Event()
+        real_flush = sess.flush
+
+        def slow_flush():
+            entered.set()
+            out = real_flush()
+            _time.sleep(0.2)       # batch still in flight after the flush
+            return out
+
+        monkeypatch.setattr(sess, "flush", slow_flush)
+        sched.start()
+        try:
+            t = sched.submit("delete", rows=[2], sla_class="interactive")
+            assert entered.wait(30.0)   # the executor took the batch
+            sched.drain()
+            assert t.done               # ...so drain waited it out
+            assert sched.queue.in_flight == 0
+        finally:
+            sched.stop()
 
     def test_stop_then_inline_use_still_works(self):
         sched, _ = TestServingScheduler()._sched()
