@@ -137,6 +137,7 @@ def _make_trace(trace, rate, n_events, seed, add_frac):
 
 def _run_point(size, seed, events, max_batch):
     """Serve one materialized trace open-loop; returns the point record."""
+    from repro.obs import metrics as obs_metrics
     from repro.serve import (LoadGenerator, ServeConfig, ServingScheduler,
                              materialize)
 
@@ -154,7 +155,13 @@ def _run_point(size, seed, events, max_batch):
     if n_add_rows:
         warm += [("add", k) for k in ks if k <= _next_pow2_at_least(
             n_add_rows)]
-    sess.warmup(warm)
+    # compile-time attribution: the warmup cost is its own metric, never
+    # inside a measured point's latency (every bucket a dispatch can hit
+    # is compiled before the open loop starts)
+    compile_s = sess.warmup(warm)
+    obs_metrics.get_registry().histogram(
+        "bench.warmup_compile_s", unit="s",
+        owner="benchmarks").observe(compile_s)
     sched.start()
     res = LoadGenerator(sched).open_loop(events)
     for tk in res.tickets:
@@ -163,17 +170,20 @@ def _run_point(size, seed, events, max_batch):
     st = sched.stats()
 
     reqs = [tk.req for tk in res.tickets if tk.req.t_done is not None]
-    e2e_ms = np.asarray([q.e2e_s * 1e3 for q in reqs])
+    h_e2e = obs_metrics.Histogram("bench.point_e2e_ms", unit="ms",
+                                  owner="benchmarks")
+    for q in reqs:
+        h_e2e.observe(q.e2e_s * 1e3)
+    e2e = h_e2e.summary()
     wall = (max(q.t_done for q in reqs) - min(q.t_enqueue for q in reqs)
             if reqs else 1e-9)
     return {
         "served": len(reqs),
         "rejected": res.rejected,
         "throughput_rps": len(reqs) / max(wall, 1e-9),
-        "e2e_ms": {"p50": float(np.percentile(e2e_ms, 50)),
-                   "p95": float(np.percentile(e2e_ms, 95)),
-                   "p99": float(np.percentile(e2e_ms, 99)),
-                   "max": float(e2e_ms.max())},
+        "warmup_compile_s": compile_s,
+        "e2e_ms": {"p50": e2e["p50"], "p95": e2e["p95"],
+                   "p99": e2e["p99"], "max": e2e["max"]},
         "per_class": st["per_class"],
         "deadline_misses": st["deadline_misses_total"],
         "batch_size_mean": st["batches"]["size_mean"],
@@ -233,7 +243,17 @@ def main(argv=()) -> None:
                     help="arrivals per sweep point (0: 24 quick / 80 full)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--trace-out", default="",
+                    help="enable the span tracer for the WHOLE bench run "
+                         "and write a Chrome/Perfetto trace-event JSON "
+                         "here ('' disables); the metrics registry lands "
+                         "beside it as <path>.metrics.jsonl")
     args = ap.parse_args(list(argv))
+
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+    if args.trace_out:
+        obs_trace.enable()
 
     size = dict(QUICK if args.quick else FULL)
     n_events = args.events or (24 if args.quick else 80)
@@ -320,6 +340,16 @@ def main(argv=()) -> None:
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)
     print(f"wrote {args.out}")
+
+    if args.trace_out:
+        tracer = obs_trace.disable()
+        tracer.export_chrome(args.trace_out)
+        obs_metrics.get_registry().to_jsonl(args.trace_out
+                                            + ".metrics.jsonl")
+        n_scan = sum(1 for e in tracer.events()
+                     if e["name"] == "replay.scan")
+        print(f"wrote {args.trace_out} ({len(tracer.events())} spans, "
+              f"{n_scan} replay.scan) + {args.trace_out}.metrics.jsonl")
 
     # CSV rows for benchmarks.run
     cb = results["continuous_batching"]

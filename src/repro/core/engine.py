@@ -105,6 +105,9 @@ from repro.core.store import (EncodedLeaf, HistoryStore, auto_window,
                               entry_at, is_encoded_window,
                               make_psum_grad_fn, pad_schedule_batch)
 from repro.data.dataset import Dataset
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.roofline.replay import scan_segment_cost
 from repro.data.sampler import (ReplaySchedule, addition_mask,
                                 batch_indices, batch_indices_all,
                                 build_schedule)
@@ -157,6 +160,35 @@ class RetrainStats:
     @property
     def theoretical_speedup(self) -> float:
         return self.grad_examples_baseline / max(self.grad_examples, 1)
+
+
+def _scan_pred(n_params: int, steps: int, r: int, m: int,
+               momentum: bool) -> Optional[float]:
+    """Roofline-predicted cost (seconds) for a scanned replay segment —
+    attached as ``pred_s`` to ``replay.scan`` spans so the exported trace
+    carries measured-vs-roofline ratios.  Returns None (and computes
+    nothing) while tracing is disabled, keeping the tracer-off hot path
+    free of the prediction arithmetic."""
+    if not obs_trace.enabled():
+        return None
+    return scan_segment_cost(n_params, steps, r, m, momentum=momentum).pred_s
+
+
+def _publish_replay_metrics(stats: "RetrainStats", store) -> None:
+    """Publish one finished replay's counters into the process-wide
+    `repro.obs.metrics` registry (see the contract table in `repro.obs`)."""
+    reg = obs_metrics.get_registry()
+    own = "core.engine"
+    reg.counter("engine.replays", owner=own).inc()
+    reg.counter("engine.explicit_steps", owner=own).inc(stats.explicit_steps)
+    reg.counter("engine.approx_steps", owner=own).inc(stats.approx_steps)
+    reg.counter("engine.guard_fallbacks",
+                owner=own).inc(stats.guard_fallbacks)
+    reg.counter("engine.grad_examples", owner=own).inc(stats.grad_examples)
+    hw = store.hbm_high_water() if store is not None else 0
+    if hw:
+        reg.gauge("store.hbm_high_water_bytes", unit="B",
+                  owner="core.store").set_max(hw)
 
 
 # --------------------------------------------------------------------------
@@ -728,10 +760,12 @@ def run_replay(
     runner = store.sharded_replay()
 
     t_start = time.perf_counter()
-    sched = build_schedule(meta.seed, meta.steps, meta.n, meta.batch_size,
-                           changed_idx, mode, r_pad, meta.lr_at)
-    plan = build_plan(cfg, sched)
-    sd = to_device(sched)
+    with obs_trace.span("replay.schedule_build", steps=meta.steps, r=r):
+        sched = build_schedule(meta.seed, meta.steps, meta.n,
+                               meta.batch_size, changed_idx, mode, r_pad,
+                               meta.lr_at)
+        plan = build_plan(cfg, sched)
+        sd = to_device(sched)
     if runner is not None:
         sd = pad_schedule_batch(sd, runner.placement.data_size)
         seg_grad_fn = make_psum_grad_fn(objective,
@@ -751,30 +785,42 @@ def run_replay(
     T = meta.steps
     seg_oks: List[Tuple[int, int, Any]] = []  # (t0, t1, device flags)
 
+    n_params = (sum(x.size for x in jax.tree.leaves(params))
+                if obs_trace.enabled() else 0)
+
     def scan_segment(p, v, a, b):
-        W, G, off = store.window(a, b)
-        if runner is not None:
-            fn = runner.wrap(
-                partial(_replay_segment_impl, grad_fn=seg_grad_fn,
-                        sign=sign, momentum=momentum, fused=fused,
-                        span=b - a, gather=gather, axis=axis,
-                        n_shards=n_shards),
-                key=("replay", b - a, sign, momentum, fused), n_outputs=3)
-            return fn(p, v, jnp.int32(a), jnp.int32(off), W, G, cols, sd,
-                      dWs, dGs, Bf, clip, mom)
-        return _replay_segment(
-            p, v, jnp.int32(a), jnp.int32(off), W, G, cols, sd, dWs, dGs,
-            Bf, clip, mom, grad_fn=grad_fn, sign=sign, momentum=momentum,
-            fused=fused, span=b - a)
+        with obs_trace.span(
+                "replay.scan", t0=a, t1=b,
+                pred_s=_scan_pred(n_params, b - a, r_pad,
+                                  cfg.history_size, momentum)):
+            W, G, off = store.window(a, b)
+            if runner is not None:
+                fn = runner.wrap(
+                    partial(_replay_segment_impl, grad_fn=seg_grad_fn,
+                            sign=sign, momentum=momentum, fused=fused,
+                            span=b - a, gather=gather, axis=axis,
+                            n_shards=n_shards),
+                    key=("replay", b - a, sign, momentum, fused),
+                    n_outputs=3)
+                return fn(p, v, jnp.int32(a), jnp.int32(off), W, G, cols,
+                          sd, dWs, dGs, Bf, clip, mom)
+            return _replay_segment(
+                p, v, jnp.int32(a), jnp.int32(off), W, G, cols, sd, dWs,
+                dGs, Bf, clip, mom, grad_fn=grad_fn, sign=sign,
+                momentum=momentum, fused=fused, span=b - a)
+
+    def explicit_step(p, v, tt):
+        with obs_trace.span("replay.explicit", t0=tt, steps=1):
+            return _host_explicit_step(
+                grad_fn, buffer, p, v, tt, store, cols, sd,
+                float(sched.kept[tt]), float(sched.dB[tt]), Bf, mom, sign,
+                momentum, stats)
 
     t = 0
     while t < T:
         code = plan[t]
         if code == EXPLICIT or (code == APPROX and len(buffer) == 0):
-            params, vel = _host_explicit_step(
-                grad_fn, buffer, params, vel, t, store, cols, sd,
-                float(sched.kept[t]), float(sched.dB[t]), Bf, mom, sign,
-                momentum, stats)
+            params, vel = explicit_step(params, vel, t)
             t += 1
         elif code == SKIP and len(buffer) == 0:
             t += 1
@@ -804,17 +850,16 @@ def run_replay(
                         (plan[t:b] != SKIP) & ~np.asarray(oks))
                     if fell.size:
                         tf = t + int(fell[0])
-                        if tf > t:
-                            params, vel, oks_p = scan_segment(p_in, v_in,
-                                                              t, tf)
-                            seg_oks.append((t, tf, oks_p))
-                        else:
-                            params, vel = p_in, v_in
-                        stats.guard_fallbacks += 1
-                        params, vel = _host_explicit_step(
-                            grad_fn, buffer, params, vel, tf, store, cols,
-                            sd, float(sched.kept[tf]), float(sched.dB[tf]),
-                            Bf, mom, sign, momentum, stats)
+                        with obs_trace.span("replay.guard_retry", t=tf,
+                                            prefix=tf - t):
+                            if tf > t:
+                                params, vel, oks_p = scan_segment(
+                                    p_in, v_in, t, tf)
+                                seg_oks.append((t, tf, oks_p))
+                            else:
+                                params, vel = p_in, v_in
+                            stats.guard_fallbacks += 1
+                            params, vel = explicit_step(params, vel, tf)
                         t = tf + 1
                         continue
                 seg_oks.append((t, b, oks))
@@ -859,6 +904,7 @@ def run_replay(
         stats.extra["spill_io_write_s"] = history.io_write_s
     if runner is not None:
         stats.extra["mesh"] = runner.placement.describe()
+    _publish_replay_metrics(stats, store)
     return params, stats
 
 
@@ -1241,6 +1287,8 @@ def run_online_request(
     if seg_grad_fn is None:
         seg_grad_fn = grad_fn
     params = store.params0()  # w_0 is never rewritten
+    n_params = (sum(x.size for x in jax.tree.leaves(params))
+                if obs_trace.enabled() else 0)
     vel = _tree_zeros(params) if momentum else None
     clip = jnp.float32(cfg.guard_norm_clip)
     mom = jnp.float32(meta.momentum)
@@ -1298,13 +1346,14 @@ def run_online_request(
 
     def do_explicit(params, vel, t, r2):
         nonlocal dWs, dGs, ring_started
-        for tt in range(t, r2):
-            p_in = params
-            w_t, g_t = store.entry(tt)
-            params, vel, g_cur, dWs, dGs = _online_explicit_fused(
-                params, vel, tt, w_t, g_t, cols, sd, dWs, dGs, eps, mom,
-                grad_fn=grad_fn, sign=sign, momentum=momentum)
-            note_single(tt, p_in, g_cur)
+        with obs_trace.span("replay.explicit", t0=t, steps=r2 - t):
+            for tt in range(t, r2):
+                p_in = params
+                w_t, g_t = store.entry(tt)
+                params, vel, g_cur, dWs, dGs = _online_explicit_fused(
+                    params, vel, tt, w_t, g_t, cols, sd, dWs, dGs, eps,
+                    mom, grad_fn=grad_fn, sign=sign, momentum=momentum)
+                note_single(tt, p_in, g_cur)
         ring_started = True
         stats.grad_examples += int(
             (sched.kept[t:r2] + sched.dB[t:r2]).sum())
@@ -1329,19 +1378,25 @@ def run_online_request(
                 t2 += 1
 
             def scan_segment(p, v, a, b, pW, pG):
-                Wd, Gd, off = store.window(a, b)
-                if runner is not None:
-                    fn = runner.wrap(
-                        partial(_online_segment_impl, grad_fn=seg_grad_fn,
-                                sign=sign, momentum=momentum, span=b - a,
-                                gather=gather),
-                        key=("online", b - a, sign, momentum), n_outputs=5)
-                    return fn(p, v, jnp.int32(a), jnp.int32(off), Wd, Gd,
-                              cols, sd, pW, pG, clip, mom)
-                return _online_segment(
-                    p, v, jnp.int32(a), jnp.int32(off), Wd, Gd, cols, sd,
-                    pW, pG, clip, mom, grad_fn=seg_grad_fn, sign=sign,
-                    momentum=momentum, span=b - a)
+                with obs_trace.span(
+                        "replay.scan", t0=a, t1=b,
+                        pred_s=_scan_pred(n_params, b - a, sched.r_pad,
+                                          cfg.history_size, momentum)):
+                    Wd, Gd, off = store.window(a, b)
+                    if runner is not None:
+                        fn = runner.wrap(
+                            partial(_online_segment_impl,
+                                    grad_fn=seg_grad_fn, sign=sign,
+                                    momentum=momentum, span=b - a,
+                                    gather=gather),
+                            key=("online", b - a, sign, momentum),
+                            n_outputs=5)
+                        return fn(p, v, jnp.int32(a), jnp.int32(off), Wd,
+                                  Gd, cols, sd, pW, pG, clip, mom)
+                    return _online_segment(
+                        p, v, jnp.int32(a), jnp.int32(off), Wd, Gd, cols,
+                        sd, pW, pG, clip, mom, grad_fn=seg_grad_fn,
+                        sign=sign, momentum=momentum, span=b - a)
 
             while t < t2:
                 b = store.span_end(t, t2)
@@ -1359,15 +1414,18 @@ def run_online_request(
                         (plan[t:b] != SKIP) & ~np.asarray(oks))
                     if fell.size:
                         tf = t + int(fell[0])
-                        if tf > t:
-                            params, vel, w_wr, g_wr, oks_p = scan_segment(
-                                p_in, v_in, t, tf, pW, pG)
-                            note_seg(t, tf - t, w_wr, g_wr)
-                            seg_oks.append((t, tf, oks_p))
-                        else:
-                            params, vel = p_in, v_in
-                        stats.guard_fallbacks += 1
-                        params, vel = do_explicit(params, vel, tf, tf + 1)
+                        with obs_trace.span("replay.guard_retry", t=tf,
+                                            prefix=tf - t):
+                            if tf > t:
+                                params, vel, w_wr, g_wr, oks_p = \
+                                    scan_segment(p_in, v_in, t, tf, pW, pG)
+                                note_seg(t, tf - t, w_wr, g_wr)
+                                seg_oks.append((t, tf, oks_p))
+                            else:
+                                params, vel = p_in, v_in
+                            stats.guard_fallbacks += 1
+                            params, vel = do_explicit(params, vel, tf,
+                                                      tf + 1)
                         t = tf + 1
                         continue
                 note_seg(t, b - t, w_wr, g_wr)
@@ -1375,7 +1433,8 @@ def run_online_request(
                 t = b
 
     if commit:
-        store.commit(regions, final_params=params)
+        with obs_trace.span("replay.commit", regions=len(regions)):
+            store.commit(regions, final_params=params)
 
     for t0_, t1_, oks in seg_oks:
         nonskip = plan[t0_:t1_] != SKIP
@@ -1403,4 +1462,5 @@ def run_online_request(
     # the engine pops it off extra so logged stats stay device-array-free
     if ring_started:
         stats.extra["lbfgs_ring"] = (dWs, dGs)
+    _publish_replay_metrics(stats, store)
     return params, stats

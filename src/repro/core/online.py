@@ -49,13 +49,15 @@ from repro.core.deltagrad import (DeltaGradConfig, Objective, RetrainStats,
                                   _next_pow2, _tree_zeros)
 from repro.core.engine import (SKIP, EXPLICIT, _online_approx_step,
                                _online_explicit_math, _ring_append,
-                               build_plan, run_online_request)
+                               _scan_pred, build_plan, run_online_request)
 from repro.core.history import TrainingHistory
 from repro.core.store import (HistoryStore, PlacementPolicy,
                               make_psum_grad_fn)
 from repro.data.dataset import Dataset
 from repro.data.sampler import (ReplaySchedule, addition_mask_all,
                                 batch_indices_all, build_online_schedule)
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -235,20 +237,24 @@ class OnlineEngine:
         if live_rows.size == 0:
             return
         t0 = time.perf_counter()
-        for spec in ops:
-            op, k = spec if isinstance(spec, tuple) else (spec, 1)
-            k = int(min(k, live_rows.size))
-            # existing live rows stand in for appended ones in add mode:
-            # the schedule only needs gatherable row ids + the next free
-            # join-mask columns
-            sched = self._schedule(op, [int(r) for r in live_rows[:k]])
-            out = run_online_request(self.grad_fn, self.store, self._cols(),
-                                     sched, self.cfg,
-                                     static_dev=self._static_dev(sched),
-                                     seg_grad_fn=self._seg_grad_fn,
-                                     commit=False)
-            jax.block_until_ready(out[0])
+        with obs_trace.span("online.warmup", ops=len(ops)):
+            for spec in ops:
+                op, k = spec if isinstance(spec, tuple) else (spec, 1)
+                k = int(min(k, live_rows.size))
+                # existing live rows stand in for appended ones in add mode:
+                # the schedule only needs gatherable row ids + the next free
+                # join-mask columns
+                sched = self._schedule(op, [int(r) for r in live_rows[:k]])
+                out = run_online_request(self.grad_fn, self.store,
+                                         self._cols(), sched, self.cfg,
+                                         static_dev=self._static_dev(sched),
+                                         seg_grad_fn=self._seg_grad_fn,
+                                         commit=False)
+                jax.block_until_ready(out[0])
         self.compile_time_s = time.perf_counter() - t0
+        obs_metrics.get_registry().gauge(
+            "online.compile_time_s", unit="s",
+            owner="core.online").set(self.compile_time_s)
 
     # -- request serving ---------------------------------------------------
 
@@ -287,19 +293,30 @@ class OnlineEngine:
                 assert row not in self.added, f"row {row} already added"
         sched = self._schedule(op, rows)
 
-        if self.impl == "scan":
-            # the store commits the rewrites into the history per request
-            # (O(1) pointer swap for resident storage, codec write-back for
-            # streamed tiers) so dataset bookkeeping and the rewritten
-            # cache never diverge even if a later request dies mid-stream
-            params, rstat = run_online_request(
-                self.grad_fn, self.store, self._cols(), sched, self.cfg,
-                static_dev=self._static_dev(sched),
-                seg_grad_fn=self._seg_grad_fn)
-        else:
-            params, rstat = _online_request_python(
-                self.grad_fn, self.history, self.ds, sched, self.cfg)
-            self.history.finalize(params)
+        # whole-replay roofline lower bound (None — and not computed —
+        # while tracing is off); the tracer stamps the measured wall and
+        # ratio onto the span at exit
+        pred = _scan_pred(
+            sum(x.size for x in jax.tree.leaves(self.params)),
+            self.history.meta.steps, sched.r_pad, self.cfg.history_size,
+            bool(self.history.meta.momentum)) if obs_trace.enabled() \
+            else None
+        with obs_trace.span("online.request", op=op, k=len(rows),
+                            pred_s=pred):
+            if self.impl == "scan":
+                # the store commits the rewrites into the history per
+                # request (O(1) pointer swap for resident storage, codec
+                # write-back for streamed tiers) so dataset bookkeeping and
+                # the rewritten cache never diverge even if a later request
+                # dies mid-stream
+                params, rstat = run_online_request(
+                    self.grad_fn, self.store, self._cols(), sched, self.cfg,
+                    static_dev=self._static_dev(sched),
+                    seg_grad_fn=self._seg_grad_fn)
+            else:
+                params, rstat = _online_request_python(
+                    self.grad_fn, self.history, self.ds, sched, self.cfg)
+                self.history.finalize(params)
         ring = rstat.extra.pop("lbfgs_ring", None)
         if ring is not None:
             self.last_ring = ring
@@ -381,7 +398,14 @@ def online_deltagrad(
     t_start = time.perf_counter()
     for r in requests:
         op, row = r if isinstance(r, (tuple, list)) else (mode, r)
-        stats.per_request.append(engine.request(op, int(row)))
+        t_req = time.perf_counter()
+        rstat = engine.request(op, int(row))
+        # host-side dispatch wall per request (no added device sync:
+        # compile happens synchronously at trace time, so a cache-miss
+        # first request shows up here and bench_online can report it
+        # separately from the steady per-request cost)
+        rstat.extra["dispatch_wall_s"] = time.perf_counter() - t_req
+        stats.per_request.append(rstat)
     jax.block_until_ready(engine.params)
     stats.wall_time_s = time.perf_counter() - t_start
     return engine.params, stats

@@ -194,7 +194,18 @@ class UnlearnResponse:
     coalesced (> len(request.rows) when neighbors merged in).
     `dispatch_s` is host dispatch time for the whole group; `params` is
     the post-request model (a device value — NOT host-synced; forcing a
-    handle blocks on it)."""
+    handle blocks on it).
+
+    MIGRATION NOTE — ``stats.extra``: the untyped per-replay dict
+    (``impl``, ``store``, ``windows``, ``hbm_high_water``, ...) remains
+    for backward compatibility, but it is no longer the primary
+    observability surface.  The engine, store, queue, and monitor now
+    publish typed counters/gauges/histograms into the
+    `repro.obs.metrics` registry (``get_registry().snapshot()``, JSONL
+    and Prometheus exporters) and emit `repro.obs.trace` spans with
+    roofline predicted-vs-measured cost — new consumers should read
+    those (the full name contract is the table in ``repro/obs``)
+    instead of string-keying into ``extra``."""
 
     request: UnlearnRequest
     stats: List[RetrainStats]

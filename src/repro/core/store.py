@@ -78,6 +78,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.history import Int8Codec, TrainingHistory
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def auto_window(steps: int, window: int = 0) -> int:
@@ -635,9 +637,12 @@ class SegmentStreamer(HistoryStore):
 
     def _stack_host(self, wid: int):
         """`_stage_window` + the stacking-time EMA the adaptive prefetch
-        depth feeds on (updated from whichever thread runs the stage)."""
+        depth feeds on (updated from whichever thread runs the stage).
+        The ``store.window_stage`` span records on the staging-pool thread
+        for prefetches — its own track in the exported trace."""
         t0 = time.perf_counter()
-        staged = self._stage_window(wid)
+        with obs_trace.span("store.window_stage", wid=wid):
+            staged = self._stage_window(wid)
         dt = time.perf_counter() - t0
         self._stack_ema = dt if self._stack_ema == 0.0 \
             else 0.5 * self._stack_ema + 0.5 * dt
@@ -667,16 +672,23 @@ class SegmentStreamer(HistoryStore):
     def _fetch(self, wid: int):
         if wid in self._buf:
             return self._buf[wid]
+        reg = obs_metrics.get_registry()
         fut = self._inflight.pop(wid, None)
         if fut is not None:
             t0 = time.perf_counter()
-            staged = fut.result()
-            self.host_wait_s += time.perf_counter() - t0
+            with obs_trace.span("store.prefetch_wait", wid=wid):
+                staged = fut.result()
+            wait = time.perf_counter() - t0
+            self.host_wait_s += wait
             self.prefetch_hits += 1
+            reg.counter("store.prefetch_hits", owner="core.store").inc()
         else:
             t0 = time.perf_counter()
             staged = self._stack_host(wid)
-            self.host_wait_s += time.perf_counter() - t0
+            wait = time.perf_counter() - t0
+            self.host_wait_s += wait
+        reg.counter("store.host_wait_s", unit="s",
+                    owner="core.store").inc(wait)
         self._enc_bytes = tree_device_nbytes(staged)
         self.enc_bytes_high = max(self.enc_bytes_high, self._enc_bytes)
         if self._enc_bytes:
@@ -687,6 +699,7 @@ class SegmentStreamer(HistoryStore):
         self._hbm_now += tree_device_nbytes(W) + tree_device_nbytes(G)
         self._hbm_high = max(self._hbm_high, self._hbm_now)
         self.windows_fetched += 1
+        reg.counter("store.windows_fetched", owner="core.store").inc()
         return W, G
 
     def _evict_before(self, wid: int) -> None:
@@ -725,8 +738,10 @@ class SegmentStreamer(HistoryStore):
                 else 0.5 * self._scan_ema + 0.5 * dt
         wid = self._wid(a)
         assert b <= self._bounds(wid)[1], (a, b, self.window_len)
-        self._evict_before(wid)
-        W, G = self._fetch(wid)
+        with obs_trace.span("store.window", wid=wid,
+                            hit=wid in self._buf or wid in self._inflight):
+            self._evict_before(wid)
+            W, G = self._fetch(wid)
         # double buffering (depth 1), or deeper when the host is the
         # bottleneck: ship windows s+1..s+k while the scan for s computes
         depth = self._choose_depth()
@@ -740,6 +755,9 @@ class SegmentStreamer(HistoryStore):
         self._hbm_high = max(self._hbm_high,
                              self._hbm_now
                              + len(self._inflight) * self._enc_bytes)
+        obs_metrics.get_registry().gauge(
+            "store.hbm_high_water_bytes", unit="B",
+            owner="core.store").set_max(self._hbm_high)
         self._last_return_ts = time.perf_counter()
         return W, G, wid * self.window_len
 

@@ -40,14 +40,8 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.models.registry import build
-
-
-def _pcts(ms) -> dict:
-    ms = np.asarray(ms, dtype=np.float64)
-    return {"mean": float(ms.mean()),
-            "p50": float(np.percentile(ms, 50)),
-            "p95": float(np.percentile(ms, 95)),
-            "p99": float(np.percentile(ms, 99))}
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def unlearn_main(argv) -> None:
@@ -102,7 +96,21 @@ def unlearn_main(argv) -> None:
                          "from all three)")
     ap.add_argument("--bench-out", default="BENCH_serve.json",
                     help="machine-readable results path ('' disables)")
+    ap.add_argument("--trace-out", default="",
+                    help="enable the span tracer and write a Chrome/"
+                         "Perfetto trace-event JSON here ('' disables); "
+                         "the metrics registry lands beside it as "
+                         "<path>.metrics.jsonl")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler device trace into this "
+                         "directory ('' disables) — opt-in, for XLA-level "
+                         "drill-down under the obs spans")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        obs_trace.enable()
+    if args.profile_dir:
+        jax.profiler.start_trace(args.profile_dir)
 
     obj = logreg_objective(l2=args.l2)
     cfg = UnlearnerConfig(
@@ -142,8 +150,16 @@ def unlearn_main(argv) -> None:
 
     # -- latency loop: dispatch (what the request queue sees) vs blocked
     # (dispatch + device drain) measured separately — timing a forced
-    # jax.block_until_ready inside the per-request loop conflates the two
-    dispatch_ms, blocked_ms = [], []
+    # jax.block_until_ready inside the per-request loop conflates the two.
+    # Percentiles come from the shared obs.metrics histogram (the same
+    # implementation ServeMonitor quantiles use).
+    reg = obs_metrics.get_registry()
+    reg.gauge("online.compile_time_s", unit="s",
+              owner="core.online").set(compile_s)
+    h_disp = reg.histogram("launch.dispatch_ms", unit="ms",
+                           owner="launch.serve")
+    h_block = reg.histogram("launch.blocked_ms", unit="ms",
+                            owner="launch.serve")
     for i in range(args.requests):
         if add_pool and rng.random() < args.add_frac:
             op, row = "add", int(add_pool.pop(0))
@@ -156,14 +172,14 @@ def unlearn_main(argv) -> None:
         t_disp = time.perf_counter() - t0
         jax.block_until_ready(algo.params)
         t_block = time.perf_counter() - t0
-        dispatch_ms.append(t_disp * 1e3)
-        blocked_ms.append(t_block * 1e3)
+        h_disp.observe(t_disp * 1e3)
+        h_block.observe(t_block * 1e3)
         st = h.stats[0]
         print(f"  request {i:3d} {op:6s} row {row:5d}: dispatch "
               f"{t_disp * 1e3:7.1f} ms, blocked {t_block * 1e3:7.1f} ms  "
               f"(approx {st.approx_steps}, explicit {st.explicit_steps}, "
               f"grad-eval speedup x{st.theoretical_speedup:.1f})")
-    dp, bp = _pcts(dispatch_ms), _pcts(blocked_ms)
+    dp, bp = h_disp.summary(), h_block.summary()
     print(f"served {args.requests} requests: dispatch p50 {dp['p50']:.1f} / "
           f"p95 {dp['p95']:.1f} / p99 {dp['p99']:.1f} ms, blocked p50 "
           f"{bp['p50']:.1f} / p95 {bp['p95']:.1f} / p99 {bp['p99']:.1f} ms; "
@@ -272,8 +288,13 @@ def unlearn_main(argv) -> None:
                                  add_frac=args.add_frac)
         materialize(events, ds_f, seed=args.seed + 4)
         n_add_rows = sum(ev.n_rows for ev in events if ev.op == "add")
+        # one serving stack per CLI run — publish its monitor into the
+        # process-wide registry so --trace-out exports queue + serve
+        # metrics alongside the engine/store ones
+        from repro.serve.monitor import ServeMonitor
         sched = ServingScheduler(
-            sess_f, ServeConfig(add_capacity=max(1, n_add_rows)))
+            sess_f, ServeConfig(add_capacity=max(1, n_add_rows)),
+            monitor=ServeMonitor(registry=reg))
         warm = [("delete", k) for k in (1, 2, 4, 8)]
         if n_add_rows:
             warm += [("add", k) for k in (1, 2, 4)]
@@ -316,6 +337,18 @@ def unlearn_main(argv) -> None:
         with open(args.bench_out, "w") as f:
             json.dump(results, f, indent=1)
         print(f"wrote {args.bench_out}")
+
+    if args.profile_dir:
+        jax.profiler.stop_trace()
+        print(f"wrote jax profiler trace under {args.profile_dir}")
+    if args.trace_out:
+        tracer = obs_trace.disable()
+        tracer.export_chrome(args.trace_out)
+        reg.to_jsonl(args.trace_out + ".metrics.jsonl")
+        n_scan = sum(1 for e in tracer.events()
+                     if e["name"] == "replay.scan")
+        print(f"wrote {args.trace_out} ({len(tracer.events())} spans, "
+              f"{n_scan} replay.scan) + {args.trace_out}.metrics.jsonl")
 
 
 def decode_main() -> None:

@@ -18,6 +18,7 @@ from __future__ import annotations
 import threading
 from typing import List
 
+from repro.obs import trace as obs_trace
 from repro.serve.queue import QueuedRequest
 
 
@@ -74,7 +75,9 @@ class Executor:
 
         sched = self.scheduler
         session = sched.session
-        with self._serve_lock:
+        with self._serve_lock, obs_trace.span(
+                "serve.batch", size=len(batch),
+                op=batch[0].op if batch else ""):
             try:
                 cap_before = sched._row_cap_now()
                 t_disp = sched.clock()

@@ -1,45 +1,45 @@
 """Serving-tier metrics — the numbers BENCH_serve.json's
 ``continuous_batching`` section reports and CI gates.
 
-One `ServeMonitor` instance per scheduler.  Everything is recorded
-in-memory (these are bench/CI runs, not a fleet), so `snapshot()` can
-compute exact percentiles instead of streaming sketches.  Recorded per
-request: dispatch latency (enqueue → batch dispatch), e2e latency
-(enqueue → replay drained), and whether the SLA-class deadline was met.
-Recorded per batch: size, distinct tenants, ops.  Counters: deadline
-misses per class, admission rejections (scraped from the queue),
-add-capacity retraces (a flush that re-bucketed the engine's staged
-device rows — each one recompiles every replay program, which is exactly
-what admission-side accounting exists to prevent).
+One `ServeMonitor` instance per scheduler.  Every latency/size quantile
+is served from `repro.obs.metrics.Histogram` instances in the monitor's
+registry — the same fixed-bucket implementation `launch/serve.py` uses
+for its dispatch/blocked percentiles, so there is exactly ONE quantile
+code path in the repo.  Recorded per request: dispatch latency (enqueue →
+batch dispatch), e2e latency (enqueue → replay drained), and whether the
+SLA-class deadline was met.  Recorded per batch: size, distinct tenants,
+ops.  Counters: deadline misses per class, admission rejections (scraped
+from the queue), add-capacity retraces (a flush that re-bucketed the
+engine's staged device rows — each one recompiles every replay program,
+which is exactly what admission-side accounting exists to prevent).
+
+The monitor defaults to a PRIVATE `MetricsRegistry` (bench sweeps build
+one monitor per point; snapshots must not accumulate across points) —
+pass ``registry=obs.metrics.get_registry()`` to publish a single serving
+stack into the process-wide surface, as the serve CLI does.
 """
 
 from __future__ import annotations
 
-from collections import Counter, defaultdict
+from collections import Counter
 from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.serve.queue import AdmissionQueue, QueuedRequest
 
-
-def _pcts(xs: List[float]) -> Dict[str, float]:
-    if not xs:
-        return {"count": 0}
-    a = np.asarray(xs, dtype=np.float64)
-    return {"count": int(a.size), "mean": float(a.mean()),
-            "p50": float(np.percentile(a, 50)),
-            "p95": float(np.percentile(a, 95)),
-            "p99": float(np.percentile(a, 99)),
-            "max": float(a.max())}
+_OWN = "serve.monitor"
 
 
 class ServeMonitor:
     """Per-class latency, queue, and batching telemetry."""
 
-    def __init__(self) -> None:
-        self._dispatch_ms: Dict[str, List[float]] = defaultdict(list)
-        self._e2e_ms: Dict[str, List[float]] = defaultdict(list)
+    def __init__(self,
+                 registry: Optional[obs_metrics.MetricsRegistry] = None):
+        self.registry = registry if registry is not None \
+            else obs_metrics.MetricsRegistry()
+        self._classes: set = set()
         self.deadline_misses: Counter = Counter()
         self.served: Counter = Counter()
         self.failed: Counter = Counter()
@@ -48,27 +48,45 @@ class ServeMonitor:
         self.batch_ops: Counter = Counter()
         self.cross_tenant_batches = 0
         self.add_capacity_retraces = 0
-        self.depth_samples: List[int] = []
+
+    # -- registry accessors --------------------------------------------------
+
+    def _hist(self, name: str, cls: Optional[str] = None,
+              unit: str = "ms") -> obs_metrics.Histogram:
+        labels = {"class": cls} if cls is not None else None
+        return self.registry.histogram(name, unit=unit, owner=_OWN,
+                                       labels=labels)
+
+    def _counter(self, name: str,
+                 cls: Optional[str] = None) -> obs_metrics.Counter:
+        labels = {"class": cls} if cls is not None else None
+        return self.registry.counter(name, owner=_OWN, labels=labels)
 
     # -- observations --------------------------------------------------------
 
     def observe_request(self, req: QueuedRequest) -> None:
         cls = req.sla_class
+        self._classes.add(cls)
         if req.error is not None:
             self.failed[cls] += 1
+            self._counter("serve.failed", cls).inc()
             return
         self.served[cls] += 1
+        self._counter("serve.served", cls).inc()
         if req.t_dispatch is not None:
-            self._dispatch_ms[cls].append(
+            self._hist("serve.dispatch_ms", cls).observe(
                 (req.t_dispatch - req.t_enqueue) * 1e3)
         if req.t_done is not None:
-            self._e2e_ms[cls].append((req.t_done - req.t_enqueue) * 1e3)
+            self._hist("serve.e2e_ms", cls).observe(
+                (req.t_done - req.t_enqueue) * 1e3)
         if req.missed_deadline:
             self.deadline_misses[cls] += 1
+            self._counter("serve.deadline_misses", cls).inc()
 
     def observe_batch(self, batch: List[QueuedRequest],
                       retraced: bool = False) -> None:
         self.batch_sizes.append(len(batch))
+        self._hist("serve.batch_size", unit="1").observe(len(batch))
         tenants = len({q.tenant for q in batch})
         self.batch_tenants.append(tenants)
         if tenants > 1:
@@ -77,24 +95,26 @@ class ServeMonitor:
             self.batch_ops[q.op] += 1
         if retraced:
             self.add_capacity_retraces += 1
+            self._counter("serve.add_capacity_retraces").inc()
 
     def observe_depth(self, depth: int) -> None:
-        self.depth_samples.append(int(depth))
+        self._hist("serve.queue_depth", unit="1").observe(int(depth))
 
     # -- snapshot ------------------------------------------------------------
 
     def snapshot(self, queue: Optional[AdmissionQueue] = None
                  ) -> Dict[str, Any]:
-        classes = sorted(set(self._e2e_ms) | set(self._dispatch_ms)
-                         | set(self.served) | set(self.failed))
+        classes = sorted(self._classes | set(self.served)
+                         | set(self.failed))
         out: Dict[str, Any] = {
             "per_class": {
                 cls: {
                     "served": int(self.served[cls]),
                     "failed": int(self.failed[cls]),
                     "deadline_misses": int(self.deadline_misses[cls]),
-                    "dispatch_ms": _pcts(self._dispatch_ms[cls]),
-                    "e2e_ms": _pcts(self._e2e_ms[cls]),
+                    "dispatch_ms":
+                        self._hist("serve.dispatch_ms", cls).summary(),
+                    "e2e_ms": self._hist("serve.e2e_ms", cls).summary(),
                 } for cls in classes
             },
             "batches": {
@@ -108,7 +128,8 @@ class ServeMonitor:
                                  if self.batch_tenants else 0.0),
                 "ops": dict(self.batch_ops),
             },
-            "queue_depth": _pcts([float(d) for d in self.depth_samples]),
+            "queue_depth": self._hist("serve.queue_depth",
+                                      unit="1").summary(),
             "add_capacity_retraces": int(self.add_capacity_retraces),
             "deadline_misses_total": int(sum(self.deadline_misses.values())),
         }

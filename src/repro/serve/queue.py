@@ -32,6 +32,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.deltagrad import _next_pow2
+from repro.obs import metrics as obs_metrics
 
 
 class RetryAfter(Exception):
@@ -159,7 +160,8 @@ class AdmissionQueue:
                  tenant_quota: Optional[TenantQuota] = None,
                  on_full: str = "reject",
                  block_timeout_s: float = 30.0,
-                 clock: Callable[[], float] = None):
+                 clock: Callable[[], float] = None,
+                 registry: Optional[obs_metrics.MetricsRegistry] = None):
         if on_full not in ("reject", "block"):
             raise ValueError(f"on_full must be 'reject' or 'block', got "
                              f"{on_full!r}")
@@ -175,7 +177,12 @@ class AdmissionQueue:
         self._in_flight = 0
         self._seq = 0
         self._closed = False
-        # admission outcome counters (monitor scrapes them)
+        # admission outcome counters (monitor scrapes them); each is
+        # mirrored into the registry as `queue.<name>` — the scheduler
+        # passes its monitor's registry so the serving stack shares one
+        # surface (see the contract table in `repro.obs`)
+        self.registry = registry if registry is not None \
+            else obs_metrics.get_registry()
         self.admitted = 0
         self.rejected_depth = 0
         self.rejected_tenant = 0
@@ -218,6 +225,9 @@ class AdmissionQueue:
             return 0.05
         return max(1e-3, backlog / self._drain_rate)
 
+    def _count(self, name: str) -> None:
+        self.registry.counter("queue." + name, owner="serve.queue").inc()
+
     # -- admission -----------------------------------------------------------
 
     def admit(self, req: QueuedRequest,
@@ -234,9 +244,11 @@ class AdmissionQueue:
                                 and self._tenant_room(req.tenant)))
                 if not has_room():
                     self.blocked_admissions += 1
+                    self._count("blocked_admissions")
                     if not self.cond.wait_for(has_room,
                                               timeout=self.block_timeout_s):
                         self.rejected_depth += 1
+                        self._count("rejected_depth")
                         raise RetryAfter(
                             "queue full past block_timeout_s",
                             self._retry_hint(len(self._pending)))
@@ -244,6 +256,7 @@ class AdmissionQueue:
                 raise RuntimeError("queue is closed (scheduler stopped)")
             if len(self._pending) >= self.max_depth:
                 self.rejected_depth += 1
+                self._count("rejected_depth")
                 raise RetryAfter(
                     f"queue depth {len(self._pending)} at max_depth "
                     f"{self.max_depth}",
@@ -251,6 +264,7 @@ class AdmissionQueue:
                                      - self.max_depth))
             if not self._tenant_room(req.tenant):
                 self.rejected_tenant += 1
+                self._count("rejected_tenant")
                 raise RetryAfter(
                     f"tenant {req.tenant!r} at quota "
                     f"{self.tenant_quota.max_pending}",
@@ -259,6 +273,7 @@ class AdmissionQueue:
                 if not self.ledger.try_charge(req.n_rows):
                     if enforce_add_capacity:
                         self.rejected_add_capacity += 1
+                        self._count("rejected_add_capacity")
                         raise RetryAfter(
                             f"add of {req.n_rows} rows exceeds staged "
                             f"device capacity (headroom "
@@ -270,6 +285,7 @@ class AdmissionQueue:
             self._seq += 1
             self._pending.append(req)
             self.admitted += 1
+            self._count("admitted")
             self.cond.notify_all()
             return req
 

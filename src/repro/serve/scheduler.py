@@ -40,6 +40,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.deltagrad import _next_pow2
+from repro.obs import trace as obs_trace
 from repro.serve.monitor import ServeMonitor
 from repro.serve.queue import AdmissionQueue, QueuedRequest, TenantQuota
 
@@ -156,13 +157,16 @@ class ServingScheduler:
             raise ValueError("ServeConfig.classes must name at least one "
                              "SLA class")
         self.default_class = self.config.classes[0].name
+        self.monitor = monitor or ServeMonitor()
+        # the queue mirrors its admission counters into the monitor's
+        # registry, so one surface carries the whole serving stack
         self.queue = AdmissionQueue(
             max_depth=self.config.max_depth,
             tenant_quota=TenantQuota(self.config.tenant_max_pending),
             on_full=self.config.on_full,
             block_timeout_s=self.config.block_timeout_s,
-            clock=self.clock)
-        self.monitor = monitor or ServeMonitor()
+            clock=self.clock,
+            registry=self.monitor.registry)
         self.service_est_s = float(self.config.service_est_init_s)
         self.wait_hint: Optional[float] = None
         self.batch_log: List[Dict[str, Any]] = []
@@ -246,8 +250,10 @@ class ServingScheduler:
             rows=list(rows) if rows is not None else None, data=data,
             coalesce=coalesce, t_enqueue=now,
             deadline=now + cls.deadline_s)
-        self.queue.admit(
-            req, enforce_add_capacity=self.config.enforce_add_capacity)
+        with obs_trace.span("serve.admit", op=op, tenant=tenant,
+                            cls=cls_name):
+            self.queue.admit(
+                req, enforce_add_capacity=self.config.enforce_add_capacity)
         self.monitor.observe_depth(self.queue.depth)
         return ServeTicket(self, req)
 
