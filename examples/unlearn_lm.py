@@ -1,10 +1,25 @@
-"""DeltaGrad on a transformer LM: train a small LM on synthetic documents,
-then remove specific documents from the model with the cached-path
-correction — the paper's Algorithm 1 applied to a non-convex model
-(Algorithm-4 guard on).
+"""LM unlearning quickstart: DeltaGrad on a transformer language model.
 
-This is the LM-scale integration path: the same engine, with the model's
-per-document loss as the Objective and the history sharded like the params.
+Three lines connect the model zoo to the unlearning engine:
+
+    sess = UnlearnerSession.from_config("internlm2-1.8b", docs,
+                                        reduced=..., config=...)
+    sess.fit()                      # SGD with path caching (Algorithm 1)
+    sess.delete(doc_ids).result()   # cached-path correction (Algorithm 4)
+
+`from_config` resolves the registry name, builds the model, and wraps its
+masked token cross-entropy into the engine's per-document `Objective` via
+`Objective.from_model` — no hand-rolled vmap.  The session then exposes
+the whole request surface on the LM: delete/add with coalescing, the
+Algorithm-4 curvature guard (non-convex models need it), snapshot/restore,
+and `baseline()` for the exact-retrain reference.
+
+This script uses a CI-sized reduction of the internlm2-1.8b architecture
+(same blocks — GQA + RoPE + SwiGLU — at toy width).  Drop ``reduced=`` to
+run the real config; at that scale set ``remat=True``, pick a delta codec
+(`UnlearnerConfig(history_codec="delta_int8")`) so the cached path fits,
+and see the HBM table in `core/history.py` for the tier math.
+`benchmarks/bench_lm.py` is the measured version of this walkthrough.
 
     PYTHONPATH=src python examples/unlearn_lm.py
 """
@@ -12,58 +27,35 @@ per-document loss as the Objective and the history sharded like the params.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.registry import get_config
-from repro.core.deltagrad import (
-    DeltaGradConfig,
-    Objective,
-    baseline_retrain,
-    deltagrad_retrain,
-    sgd_train_with_cache,
-)
-from repro.core.history import HistoryMeta
-from repro.data.dataset import Dataset
+from repro.core.deltagrad import DeltaGradConfig
+from repro.core.session import UnlearnerConfig, UnlearnerSession
 from repro.data.synthetic import token_stream
-from repro.models.registry import build
 from repro.utils.tree import tree_norm, tree_sub
 
 
 def main():
-    cfg = get_config("internlm2-1.8b").reduced(
-        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
-        d_head=16)
-    model = build(cfg)
-
-    corpus = token_stream(n_docs=256, seq_len=32, vocab=cfg.vocab, seed=0)
-    ds = Dataset({"tokens": corpus.columns["tokens"]})
-
-    def per_doc_loss(params, batch):
-        # per-example LM loss: vmap-free batch loss per row via masking
-        losses = []
-        toks = batch["tokens"]
-        # loss_fn returns the batch MEAN; per-example = call on single rows
-        # is slow — instead compute full-batch token CE per row:
-        import jax
-        def one(row):
-            return model.loss_fn(params, {"tokens": row[None]},
-                                 remat=False, loss_chunk=32)
-        return jax.vmap(one)(toks)
-
-    objective = Objective(per_example_loss=per_doc_loss, l2=0.0)
-    meta = HistoryMeta(n=ds.n, batch_size=64, seed=5, steps=40,
-                       lr_schedule=((0, 0.02),))
-    params0 = model.init(0)
+    docs = token_stream(n_docs=256, seq_len=32, vocab=128, seed=0)
+    sess = UnlearnerSession.from_config(
+        "internlm2-1.8b", docs,
+        reduced=dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                     d_ff=128, vocab=128, d_head=16),
+        # the paper's DNN recipe (§4.1): small T0, long burn-in, guard on
+        config=UnlearnerConfig(steps=40, batch_size=64, lr=0.02, seed=5,
+                               deltagrad=DeltaGradConfig(
+                                   period=2, burn_in=10, history_size=2,
+                                   guard=True, curvature_eps=1e-8)),
+        loss_chunk=32)
 
     print("== training LM with path caching ==")
-    w_star, hist = sgd_train_with_cache(objective, params0, ds, meta)
-    print(f"cached {len(hist)} steps, {hist.nbytes() / 1e6:.1f} MB")
+    w_star = sess.fit()
+    print(f"cached {len(sess.history)} steps, "
+          f"{sess.history.nbytes() / 1e6:.1f} MB")
 
     print("\n== deleting 4 documents with DeltaGrad (Algorithm-4 guard) ==")
-    removed = np.array([7, 42, 99, 120])
-    # the paper's DNN recipe (§4.1): small T0, long burn-in, guard on
-    cfg_dg = DeltaGradConfig(period=2, burn_in=10, history_size=2,
-                             guard=True, curvature_eps=1e-8)
-    w_u, base_stats = baseline_retrain(objective, ds, meta, params0, removed)
-    w_i, stats = deltagrad_retrain(objective, hist, ds, removed, cfg_dg)
+    removed = [7, 42, 99, 120]
+    w_u, _ = sess.baseline(removed)        # exact retrain, for reference
+    resp = sess.delete(removed).result()
+    w_i, stats = resp.params, resp.stats[0]
 
     d_ui = float(tree_norm(tree_sub(w_u, w_i)))
     d_us = float(tree_norm(tree_sub(w_u, w_star)))
@@ -74,9 +66,10 @@ def main():
           f"grad-eval speedup x{stats.theoretical_speedup:.2f}")
 
     # behavioural check: loss on the removed docs should move toward w_u's
+    toks = jnp.asarray(np.asarray(docs.columns["tokens"])[removed])
     for name, w in [("original", w_star), ("deltagrad", w_i), ("exact", w_u)]:
-        lr_ = model.loss_fn(w, {"tokens": jnp.asarray(
-            ds.columns["tokens"][removed])}, remat=False, loss_chunk=32)
+        lr_ = sess.model.loss_fn(w, {"tokens": toks}, remat=False,
+                                 loss_chunk=32)
         print(f"loss on removed docs [{name}]: {float(lr_):.4f}")
 
 

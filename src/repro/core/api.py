@@ -37,6 +37,25 @@ Migration from the pre-session `Unlearner`:
     `handle.params` for a specific request.
   * new: `sess.submit(...)` + `flush()` for explicit request plans,
     `sess.save(dir)` / `UnlearnerSession.restore(dir, objective)`.
+
+Registry-name entry points (LM-scale surface):
+
+  * hand-rolled `Objective(per_example_loss=...)` over a transformer
+    loss  →  `Objective.from_model(model, remat=..., loss_chunk=...)` —
+    builds the per-example vmap internally (bitwise-identical to the
+    hand-rolled version) and threads the attention-impl switch
+    (`attn_impl="flash"` / `"flash_interpret"`) through the trace.
+  * `models.registry.build(cfg)` + manual session wiring  →
+    `UnlearnerSession.from_config("internlm2-1.8b", data,
+    reduced=dict(...), config=UnlearnerConfig(...))` — one call from a
+    registry name (see `configs/registry.py` for names) to a fitted-ready
+    session; the built `Model` hangs off `sess.model`.
+  * `model.objective(remat=..., loss_chunk=...)` is the instance-method
+    spelling of `Objective.from_model` for when you already hold a
+    `Model`.
+  * CLI: `launch/serve.py --model <name>` and
+    `benchmarks/bench_lm.py --model <name>` resolve the same registry
+    names (with `--quick`-style reductions applied on top).
 """
 
 from __future__ import annotations

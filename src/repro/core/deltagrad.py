@@ -84,6 +84,42 @@ class Objective:
             self._vg_fn = jax.jit(jax.value_and_grad(self.weighted_mean_loss))
         return self._vg_fn
 
+    @classmethod
+    def from_model(cls, model, *, remat: bool = False,
+                   loss_chunk: Optional[int] = None, l2: float = 0.0,
+                   attn_impl: Optional[str] = None) -> "Objective":
+        """Build an Objective from a `models.registry.Model`.
+
+        The model's ``loss_fn(params, batch) -> ()`` is a mean loss over a
+        batch (masked token cross-entropy for LMs); the engine needs a
+        per-EXAMPLE loss, so this vmaps the model loss over singleton
+        slices of each batch column — row i's loss is exactly the model's
+        mean loss on the batch ``{k: col[i:i+1]}``.  This replaces the
+        hand-rolled inline vmap every LM caller used to write.
+
+        remat / loss_chunk are forwarded to ``loss_fn`` (activation
+        rematerialization and chunked cross-entropy — the memory knobs at
+        real model scale).  ``attn_impl`` pins the attention
+        implementation (`models.attention_config`) for every trace of
+        this objective: ``"flash"`` routes the Pallas flash kernel onto
+        the replay forward where shapes allow.
+        """
+        kw: Dict[str, Any] = {"remat": remat}
+        if loss_chunk is not None:
+            kw["loss_chunk"] = loss_chunk
+
+        def per_example_loss(params, batch):
+            from repro.models.attention_config import use_attention_impl
+
+            def one(row):
+                return model.loss_fn(
+                    params, jax.tree.map(lambda c: c[None], row), **kw)
+
+            with use_attention_impl(attn_impl):
+                return jax.vmap(one)(batch)
+
+        return cls(per_example_loss=per_example_loss, l2=l2)
+
 
 # --------------------------------------------------------------------------
 # Entry points (thin frontends over core.engine)

@@ -324,6 +324,49 @@ class UnlearnerSession:
         self.autoflush_count = 0
         self.autoflush_reasons: Dict[str, int] = {"max_pending": 0,
                                                   "max_delay_s": 0}
+        # set by from_config(): the registry Model backing this session's
+        # objective (None when the objective was hand-built)
+        self.model: Optional[Any] = None
+
+    @classmethod
+    def from_config(
+        cls,
+        name: str,
+        dataset: Dataset,
+        *,
+        reduced: Optional[Dict[str, Any]] = None,
+        config: Optional[UnlearnerConfig] = None,
+        l2: float = 0.0,
+        remat: bool = False,
+        loss_chunk: Optional[int] = None,
+        attn_impl: Optional[str] = None,
+        init_seed: int = 1,
+    ) -> "UnlearnerSession":
+        """Build a session from a registry model name.
+
+        ``name`` is a `configs.registry` key (e.g. ``"internlm2-1.8b"``);
+        ``reduced`` — if given — is a dict of `ModelConfig.reduced`
+        overrides producing a CI-sized variant of the same architecture.
+        The model's loss becomes the session objective via
+        `Objective.from_model` (remat / loss_chunk / attn_impl are
+        forwarded), initial params come from ``model.init(init_seed)``,
+        and the built `models.registry.Model` is kept on ``session.model``
+        for scoring/decoding next to the unlearning surface.
+        """
+        from repro.configs.registry import get_config
+        from repro.models.registry import build
+
+        model_cfg = get_config(name)
+        if reduced is not None:
+            model_cfg = model_cfg.reduced(**reduced)
+        model = build(model_cfg)
+        objective = Objective.from_model(
+            model, remat=remat, loss_chunk=loss_chunk, l2=l2,
+            attn_impl=attn_impl)
+        sess = cls(objective, model.init(init_seed), dataset,
+                   config or UnlearnerConfig())
+        sess.model = model
+        return sess
 
     # -- phase 1: training with path caching --------------------------------
 

@@ -21,6 +21,17 @@ Two entry points share this module:
             --n 4000 --d 500 --steps 80 --requests 12 --add-frac 0.25 \
             --trace poisson --rate 200
 
+    ``--model <name>`` swaps the default logreg problem for a reduced
+    registry LM (`UnlearnerSession.from_config`): the dataset becomes a
+    synthetic token stream (``--n`` docs of ``--seq-len`` tokens) and the
+    reported score is an exp(-loss) proxy instead of accuracy — the rest
+    of the surface (latency loop, coalesced burst, scheduler trace) is
+    model-agnostic:
+
+        PYTHONPATH=src python -m repro.launch.serve unlearn \
+            --model internlm2-1.8b --n 256 --steps 40 --batch 64 \
+            --lr 0.02 --requests 8 --rate 20
+
   * batched decode (default, backwards-compatible flags): prefill a prompt
     batch, then step the KV caches.
 
@@ -57,6 +68,13 @@ def unlearn_main(argv) -> None:
     from repro.utils.tree import tree_norm, tree_sub
 
     ap = argparse.ArgumentParser(prog="serve unlearn")
+    ap.add_argument("--model", default="",
+                    help="configs.registry name — serve a reduced LM "
+                         "instead of the default logreg problem "
+                         "(UnlearnerSession.from_config); --n becomes the "
+                         "document count")
+    ap.add_argument("--seq-len", type=int, default=32,
+                    help="tokens per synthetic document (with --model)")
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--d", type=int, default=500)
     ap.add_argument("--steps", type=int, default=80)
@@ -112,26 +130,63 @@ def unlearn_main(argv) -> None:
     if args.profile_dir:
         jax.profiler.start_trace(args.profile_dir)
 
-    obj = logreg_objective(l2=args.l2)
+    # the logreg-scale lr/batch defaults destroy a transformer (the
+    # L-BFGS correction blows past the guard clip at lr=0.3): when
+    # --model is set and the user left them at the logreg defaults,
+    # swap in the LM recipe examples/unlearn_lm.py is calibrated at
+    if args.model:
+        if args.lr == ap.get_default("lr"):
+            args.lr = 0.02
+        if args.batch == ap.get_default("batch"):
+            args.batch = 64
+
     cfg = UnlearnerConfig(
         steps=args.steps, batch_size=args.batch, lr=args.lr, seed=args.seed,
         momentum=args.momentum, algorithm=args.algorithm,
         privacy=PrivacyConfig(eps=args.eps, mu=0.5, L=1.0, c0=0.1, c2=0.1),
+        # non-convex models need the Algorithm-4 curvature guard (the
+        # paper's DNN recipe); the convex logreg path keeps it off
         deltagrad=DeltaGradConfig(period=args.period, burn_in=args.burn_in,
-                                  impl=args.impl))
+                                  impl=args.impl, guard=bool(args.model),
+                                  curvature_eps=1e-8 if args.model else 0.0))
 
-    def build_session():
-        ds = binary_classification(n=args.n, d=args.d, seed=args.seed)
-        sess = UnlearnerSession(obj, logreg_init(args.d, seed=1), ds, cfg)
+    # CI-sized LM reduction (matches examples/unlearn_lm.py); the serve
+    # surface downstream is model-agnostic
+    lm_reduced = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=128, d_head=16)
+    obj = None if args.model else logreg_objective(l2=args.l2)
+
+    def build_session(config=cfg):
+        if args.model:
+            from repro.data.synthetic import token_stream
+            ds = token_stream(n_docs=args.n, seq_len=args.seq_len,
+                              vocab=lm_reduced["vocab"], seed=args.seed)
+            sess = UnlearnerSession.from_config(
+                args.model, ds, reduced=lm_reduced, config=config,
+                loss_chunk=args.seq_len)
+        else:
+            ds = binary_classification(n=args.n, d=args.d, seed=args.seed)
+            sess = UnlearnerSession(obj, logreg_init(args.d, seed=1), ds,
+                                    config)
         sess.fit()
         return sess, ds
+
+    def score(sess, params, ds) -> float:
+        """Accuracy for logreg; an exp(-token-CE) proxy for an LM."""
+        if not args.model:
+            return float(logreg_accuracy(params, ds))
+        toks = jnp.asarray(np.asarray(ds.columns["tokens"][:64]))
+        loss = sess.model.loss_fn(params, {"tokens": toks}, remat=False,
+                                  loss_chunk=args.seq_len)
+        return float(jnp.exp(-loss))
 
     t0 = time.perf_counter()
     sess, ds = build_session()
     jax.block_until_ready(sess.params)
-    print(f"trained {args.steps} steps (n={ds.n}, d={args.d}) with path "
-          f"cache in {time.perf_counter() - t0:.2f}s; "
-          f"accuracy {logreg_accuracy(sess.params, ds):.4f}")
+    print(f"trained {args.steps} steps "
+          f"(n={ds.n}, {'model=' + args.model if args.model else 'd=%d' % args.d}) "
+          f"with path cache in {time.perf_counter() - t0:.2f}s; "
+          f"score {score(sess, sess.params, ds):.4f}")
 
     # additions are served from a pre-appended row pool; with the engine's
     # pow2-bucketed row capacity a stream MAY outgrow the pool at O(log)
@@ -183,7 +238,7 @@ def unlearn_main(argv) -> None:
     print(f"served {args.requests} requests: dispatch p50 {dp['p50']:.1f} / "
           f"p95 {dp['p95']:.1f} / p99 {dp['p99']:.1f} ms, blocked p50 "
           f"{bp['p50']:.1f} / p95 {bp['p95']:.1f} / p99 {bp['p99']:.1f} ms; "
-          f"accuracy {logreg_accuracy(sess.params, ds):.4f}")
+          f"score {score(sess, sess.params, ds):.4f}")
 
     # -- certified release: the certificate the stream's cumulative
     # deletions buy at --eps (publishes through the session PRNG key)
@@ -205,10 +260,15 @@ def unlearn_main(argv) -> None:
                    "arrival_ms": args.arrival_ms},
         "compile_s": compile_s,
         "latency_ms": {"dispatch": dp, "blocked": bp},
-        "accuracy": float(logreg_accuracy(sess.params, ds)),
+        "accuracy": score(sess, sess.params, ds),
         "certificate": cert.as_dict(),
-        "published_accuracy": float(logreg_accuracy(published, ds)),
+        "published_accuracy": score(sess, published, ds),
     }
+    if args.model:
+        # only stamped for LM runs — the logreg config must keep matching
+        # the committed serve baseline (check_bench compares config dicts)
+        results["config"]["model"] = args.model
+        results["config"]["seq_len"] = args.seq_len
     if K > 0 and args.algorithm == "deltagrad":
         burst_rows = np.random.default_rng(args.seed + 2).choice(
             args.n, size=K, replace=False).tolist()
@@ -230,10 +290,7 @@ def unlearn_main(argv) -> None:
         import dataclasses
         cfg_py = dataclasses.replace(
             cfg, deltagrad=dataclasses.replace(cfg.deltagrad, impl="python"))
-        ds_c = binary_classification(n=args.n, d=args.d, seed=args.seed)
-        sess_c = UnlearnerSession(obj, logreg_init(args.d, seed=1), ds_c,
-                                  cfg_py)
-        sess_c.fit()
+        sess_c, _ = build_session(cfg_py)
         sess_c.delete(burst_rows).result()
         parity = float(tree_norm(tree_sub(sess_b.params, sess_c.params)))
         drift = float(tree_norm(tree_sub(sess_b.params, sess_a.params)))

@@ -1,0 +1,57 @@
+"""Process-wide switch for the full-sequence attention implementation.
+
+`models.layers.gqa_apply` consults this at TRACE time to pick the
+attention contraction for training/replay forwards:
+
+  * ``"blockwise"``       — the XLA online-softmax scan over KV blocks
+    (`layers.blockwise_attention`); the default everywhere, and the
+    reference the kernel path is checked against;
+  * ``"flash"``           — the Pallas flash kernel
+    (`kernels.flash_attention`) where shapes allow (causal, no sliding
+    window); lowers natively on TPU and falls back to INTERPRET mode on
+    other backends, so CPU CI runs the same kernel program as the
+    ref/interpret oracle;
+  * ``"flash_interpret"`` — force interpret mode on every backend (kernel
+    debugging / oracle runs on TPU).
+
+The switch is read when a function is traced, so a jitted objective built
+under `use_attention_impl("flash")` keeps the flash path for its whole
+cached life — `core.deltagrad.Objective.from_model(..., attn_impl=...)`
+pins it per objective, which is how the replay engine routes the kernel
+onto the LM replay forward without any global state at serve time.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+_IMPLS = ("blockwise", "flash", "flash_interpret")
+_IMPL = "blockwise"
+
+
+def attention_impl() -> str:
+    """The currently selected implementation name."""
+    return _IMPL
+
+
+def set_attention_impl(name: str) -> str:
+    """Set the implementation; returns the previous one."""
+    global _IMPL
+    if name not in _IMPLS:
+        raise ValueError(f"attention impl must be one of {_IMPLS}, "
+                         f"got {name!r}")
+    prev, _IMPL = _IMPL, name
+    return prev
+
+
+@contextmanager
+def use_attention_impl(name):
+    """Scoped override; ``None`` is a no-op (keep whatever is active)."""
+    if name is None:
+        yield
+        return
+    prev = set_attention_impl(name)
+    try:
+        yield
+    finally:
+        set_attention_impl(prev)

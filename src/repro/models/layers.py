@@ -165,6 +165,64 @@ def blockwise_attention(
     return out.reshape(B, Sq, H, D).astype(q.dtype)
 
 
+# Cache of custom_vjp-wrapped flash entry points, keyed by the static
+# (causal, interpret) pair so each traces once per configuration.
+_FLASH_VJP_CACHE: Dict[Tuple[bool, bool], object] = {}
+
+
+def _flash_attention_ref_grad(q, k, v, *, causal: bool, interpret: bool):
+    """Pallas flash forward with the blockwise reference as its backward.
+
+    The flash kernel is forward-only, but replay differentiates every
+    attention call, so the kernel is wrapped in a ``jax.custom_vjp`` whose
+    backward is the VJP of `blockwise_attention` — the XLA oracle the
+    kernel is tested against.  Forward activations come off the kernel
+    (fused, O(S) memory); gradients come off the reference program, which
+    keeps the pair consistent to the kernel-vs-ref tolerance.
+    """
+    key = (causal, interpret)
+    fn = _FLASH_VJP_CACHE.get(key)
+    if fn is None:
+        from repro.kernels.flash_attention.ops import attention as _flash
+
+        @jax.custom_vjp
+        def fn(q, k, v):
+            return _flash(q, k, v, causal=causal, interpret=interpret)
+
+        def fwd(q, k, v):
+            return fn(q, k, v), (q, k, v)
+
+        def bwd(res, g):
+            q, k, v = res
+            _, vjp = jax.vjp(
+                lambda a, b, c: blockwise_attention(a, b, c, causal=causal),
+                q, k, v)
+            return vjp(g)
+
+        fn.defvjp(fwd, bwd)
+        _FLASH_VJP_CACHE[key] = fn
+    return fn(q, k, v)
+
+
+def full_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """Route the full-sequence attention contraction.
+
+    Honours `models.attention_config`: flash handles the causal,
+    non-windowed case (what LM training/replay forwards use); anything
+    else falls back to the blockwise reference.  Flash lowers natively on
+    TPU and runs the same kernel under the Pallas interpreter elsewhere,
+    so CPU CI exercises the kernel program itself.
+    """
+    from repro.models.attention_config import attention_impl
+    impl = attention_impl()
+    if impl != "blockwise" and causal and window == 0:
+        interpret = (impl == "flash_interpret"
+                     or jax.default_backend() != "tpu")
+        return _flash_attention_ref_grad(q, k, v, causal=causal,
+                                         interpret=interpret)
+    return blockwise_attention(q, k, v, causal=causal, window=window)
+
+
 def decode_attention(
     q: jax.Array,
     k_cache: jax.Array,
@@ -239,7 +297,7 @@ def gqa_apply(
         positions = jnp.arange(S)
     q = apply_rope(q, positions, rope_theta)
     k = apply_rope(k, positions, rope_theta)
-    o = blockwise_attention(q, k, v, causal=causal, window=window)
+    o = full_attention(q, k, v, causal=causal, window=window)
     return o.reshape(B, S, n_heads * d_head) @ params["wo"]
 
 

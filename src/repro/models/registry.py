@@ -48,6 +48,18 @@ class Model:
             }
         return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
 
+    def objective(self, *, remat: bool = False, loss_chunk: Optional[int] = None,
+                  l2: float = 0.0, attn_impl: Optional[str] = None):
+        """An engine `core.deltagrad.Objective` over this model's loss.
+
+        Delegates to `Objective.from_model` (lazy import — models stay
+        importable without the engine).  This is the model→engine bridge:
+        ``build(cfg).objective()`` is everything unlearning needs.
+        """
+        from repro.core.deltagrad import Objective
+        return Objective.from_model(self, remat=remat, loss_chunk=loss_chunk,
+                                    l2=l2, attn_impl=attn_impl)
+
     def sample_batch(self, shape: ShapeConfig, seed: int = 0):
         """Concrete random inputs matching input_specs (smoke tests)."""
         rng = np.random.default_rng(seed)

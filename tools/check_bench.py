@@ -172,6 +172,55 @@ SUITES = {
         ("delta_int8.sharded_vs_streamed", "parity", None,
          "composed store vs single-device delta stream"),
     ],
+    # LM-scale end-to-end (bench_lm): the flagship acceptance booleans are
+    # exact, the storage parities are the engine invariants at transformer
+    # pytree shape, the absolute walls get the usual cross-runner slack
+    "lm": [
+        ("model.multi_million", "exact", None,
+         "the model is actually multi-million-parameter"),
+        ("model.params", "exact", None, "analytic parameter count"),
+        ("derived.replay_beats_retrain", "exact", None,
+         "deltagrad replay wall < baseline_retrain wall"),
+        ("derived.hbm_delta_lt_resident", "exact", None,
+         "streamed delta_int8 HBM high-water < resident f32"),
+        ("derived.hbm_reduction_delta", "ratio_min", 0.7,
+         "per-device HBM cut by the encoded streamed store"),
+        ("derived.history_bytes_reduction", "ratio_min", 0.8,
+         "history bytes resident f32 vs delta_int8-encoded"),
+        ("variants.streamed.parity_vs_resident", "parity", None,
+         "host-streamed vs resident LM replay (exactly 0.0)"),
+        ("variants.resident.parity_vs_python", "parity", None,
+         "scan replay vs per-step python oracle"),
+        ("variants.delta_streamed.parity_vs_python", "parity", None,
+         "delta_int8 quantization envelope vs the python oracle"),
+        ("variants.delta_streamed.compression_ratio", "ratio_min", 0.8,
+         "encoded vs decoded history bytes"),
+        ("variants.sharded_delta.sharded_vs_streamed", "parity", None,
+         "composed sharded store vs single-device delta stream"),
+        ("variants.resident.approx_steps", "exact", None,
+         "replay step plan"),
+        ("variants.resident.explicit_steps", "exact", None,
+         "replay step plan"),
+        ("session.distance_ratio", "ratio_min", 0.5,
+         "guard-ON deltagrad lands closer to exact retrain than no-op"),
+        ("session.restore_parity", "parity", None,
+         "restored session serves the same coalesced plan (exactly 0.0)"),
+        ("session.coalesced_group_size", "exact", None,
+         "two delete handles coalesce into one group replay"),
+        ("session.add_served", "exact", None,
+         "add request serves finite params on the LM"),
+        ("roofline.replay_scan_spans", "exact", None,
+         "deterministic replay.scan span count from the delete burst"),
+        ("roofline.annotated", "exact", None,
+         "every replay.scan span carries pred_s/measured_s/roofline_ratio"),
+        ("flash.parity_ok", "exact", None,
+         "flash kernel routed on the LM objective matches blockwise"),
+        # absolute walls: loose, they catch fell-off-the-compiled-path
+        ("session.fit_wall_s", "ratio_max", 25.0,
+         "train-with-cache wall"),
+        ("variants.resident.replay_wall_s", "ratio_max", 25.0,
+         "resident replay wall"),
+    ],
     # observability layer (repro.obs): the overhead ratios are measured
     # same-process against a span-stubbed arm (bench_obs interleaves the
     # repeats), so the 1% tracer-off gate is runner-independent — the
